@@ -1,0 +1,181 @@
+"""Shared benchmark utilities: timing, FTP-faithful baseline, CSV emit."""
+
+from __future__ import annotations
+
+import os
+import socket
+import threading
+import time
+
+__all__ = ["timer", "emit", "FtpSim", "mbps"]
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0
+
+
+def mbps(nbytes: int, seconds: float) -> float:
+    return nbytes / max(seconds, 1e-9) / 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+class FtpSim:
+    """FTP-faithful baseline over loopback TCP.
+
+    Models RFC-959 behaviour that matters for the comparison (paper §II-B):
+      * a control connection with a round-trip per command (USER/PASS once,
+        then TYPE/PASV/RETR|STOR per file),
+      * a fresh data connection per file (PASV accept),
+      * whole-file transfer — no sub-file access, schema opaque.
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._srv.bind(("127.0.0.1", 0))
+        self._srv.listen(8)
+        self.port = self._srv.getsockname()[1]
+        self._alive = True
+        threading.Thread(target=self._serve, daemon=True).start()
+
+    # ---------------------------------------------------------------- server
+    def _serve(self):
+        while self._alive:
+            try:
+                conn, _ = self._srv.accept()
+            except OSError:
+                return
+            threading.Thread(target=self._session, args=(conn,), daemon=True).start()
+
+    def _session(self, conn: socket.socket):
+        f = conn.makefile("rwb")
+        try:
+            f.write(b"220 ftpsim ready\r\n")
+            f.flush()
+            data_srv = None
+            while True:
+                line = f.readline()
+                if not line:
+                    return
+                cmd, _, arg = line.strip().decode().partition(" ")
+                cmd = cmd.upper()
+                if cmd in ("USER", "PASS", "TYPE"):
+                    f.write(b"230 ok\r\n")
+                elif cmd == "PASV":
+                    data_srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+                    data_srv.bind(("127.0.0.1", 0))
+                    data_srv.listen(1)
+                    p = data_srv.getsockname()[1]
+                    f.write(f"227 passive ({p})\r\n".encode())
+                elif cmd == "RETR":
+                    f.write(b"150 opening\r\n")
+                    f.flush()
+                    d, _ = data_srv.accept()
+                    with open(os.path.join(self.root, arg), "rb") as src:
+                        while True:
+                            chunk = src.read(1 << 20)
+                            if not chunk:
+                                break
+                            d.sendall(chunk)
+                    d.close()
+                    data_srv.close()
+                    f.write(b"226 done\r\n")
+                elif cmd == "STOR":
+                    f.write(b"150 opening\r\n")
+                    f.flush()
+                    d, _ = data_srv.accept()
+                    path = os.path.join(self.root, arg)
+                    os.makedirs(os.path.dirname(path) or self.root, exist_ok=True)
+                    with open(path, "wb") as dst:
+                        while True:
+                            chunk = d.recv(1 << 20)
+                            if not chunk:
+                                break
+                            dst.write(chunk)
+                    d.close()
+                    data_srv.close()
+                    f.write(b"226 done\r\n")
+                elif cmd == "QUIT":
+                    f.write(b"221 bye\r\n")
+                    f.flush()
+                    return
+                else:
+                    f.write(b"502 nope\r\n")
+                f.flush()
+        except (OSError, ValueError):
+            pass
+        finally:
+            try:
+                f.close()
+                conn.close()
+            except OSError:
+                pass
+
+    # ---------------------------------------------------------------- client
+    class Client:
+        def __init__(self, port: int):
+            self.sock = socket.create_connection(("127.0.0.1", port))
+            self.f = self.sock.makefile("rwb")
+            self._expect()
+            self._cmd("USER bench")
+            self._cmd("PASS bench")
+            self._cmd("TYPE I")
+
+        def _expect(self) -> str:
+            return self.f.readline().decode()
+
+        def _cmd(self, c: str) -> str:
+            self.f.write((c + "\r\n").encode())
+            self.f.flush()
+            return self._expect()
+
+        def _pasv(self) -> socket.socket:
+            resp = self._cmd("PASV")
+            port = int(resp.split("(")[1].split(")")[0])
+            return socket.create_connection(("127.0.0.1", port))
+
+        def retr(self, name: str) -> bytes:
+            d = self._pasv()
+            self._cmd(f"RETR {name}")
+            chunks = []
+            while True:
+                c = d.recv(1 << 20)
+                if not c:
+                    break
+                chunks.append(c)
+            d.close()
+            self._expect()  # 226
+            return b"".join(chunks)
+
+        def stor(self, name: str, payload: bytes) -> None:
+            d = self._pasv()
+            self._cmd(f"STOR {name}")
+            d.sendall(payload)
+            d.close()
+            self._expect()  # 226
+
+        def quit(self):
+            try:
+                self._cmd("QUIT")
+            except OSError:
+                pass
+            self.sock.close()
+
+    def client(self) -> "FtpSim.Client":
+        return FtpSim.Client(self.port)
+
+    def close(self):
+        self._alive = False
+        try:
+            self._srv.close()
+        except OSError:
+            pass

@@ -1,0 +1,69 @@
+"""Kernel micro-benchmarks (interpret mode on CPU — timings indicative
+only; the authoritative perf story for TPU is the §Roofline analysis).
+Reports kernel vs pure-jnp oracle on identical shapes."""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=3) -> float:
+    out = fn(*args)
+    jnp.stack([x.ravel()[0] for x in (out if isinstance(out, tuple) else (out,))]).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jnp.stack([x.ravel()[0] for x in (out if isinstance(out, tuple) else (out,))]).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(verbose: bool = True) -> dict:
+    r = np.random.default_rng(0)
+    results = {}
+
+    b, kv, g, s, hd = 1, 2, 2, 512, 64
+    q = jnp.asarray(r.normal(size=(b, kv, g, s, hd)).astype(np.float32))
+    k = jnp.asarray(r.normal(size=(b, kv, s, hd)).astype(np.float32))
+    v = jnp.asarray(r.normal(size=(b, kv, s, hd)).astype(np.float32))
+    results["flash_attention_us"] = _time(lambda: ops.flash_attention(q, k, v, block_q=128, block_k=128))
+    results["flash_attention_ref_us"] = _time(lambda: ref.flash_attention_ref(q, k, v))
+
+    qd = jnp.asarray(r.normal(size=(b, kv, g, hd)).astype(np.float32))
+    kd = jnp.asarray(r.normal(size=(b, kv, 4096, hd)).astype(np.float32))
+    vd = jnp.asarray(r.normal(size=(b, kv, 4096, hd)).astype(np.float32))
+    results["decode_attention_us"] = _time(lambda: ops.decode_attention(qd, kd, vd, 4000))
+    results["decode_attention_ref_us"] = _time(lambda: ref.decode_attention_ref(qd, kd, vd, 4000))
+
+    x = jnp.asarray(r.normal(size=(1, 512, 4, 64)).astype(np.float32))
+    dt = jnp.asarray(np.abs(r.normal(size=(1, 512, 4))).astype(np.float32) * 0.1)
+    A = jnp.asarray(-np.abs(r.normal(size=(4,))).astype(np.float32))
+    B = jnp.asarray(r.normal(size=(1, 512, 32)).astype(np.float32))
+    C = jnp.asarray(r.normal(size=(1, 512, 32)).astype(np.float32))
+    results["ssd_scan_us"] = _time(lambda: ops.ssd_scan(x, dt, A, B, C, chunk=128))
+    results["ssd_scan_ref_us"] = _time(lambda: ref.ssd_scan_ref(x, dt, A, B, C)[0])
+
+    qm = jnp.asarray(r.normal(size=(1, 512, 2, 64)).astype(np.float32))
+    li = jnp.asarray(r.normal(size=(1, 512, 2)).astype(np.float32))
+    lf = jnp.asarray(r.normal(size=(1, 512, 2)).astype(np.float32) - 1)
+    results["mlstm_chunk_us"] = _time(lambda: ops.mlstm_chunk(qm, qm, qm, li, lf, chunk=128))
+    results["mlstm_chunk_ref_us"] = _time(lambda: ref.mlstm_chunk_ref(qm, qm, qm, li, lf))
+
+    table = jnp.asarray(r.normal(size=(4096, 8)).astype(np.float32))
+    results["filter_select_us"] = _time(lambda: ops.filter_select_tiles(table, 1, 0.0, (0, 2), tile=256))
+    results["filter_select_ref_us"] = _time(lambda: ref.filter_select_ref(table, 1, 0.0, (0, 2), 256))
+
+    if verbose:
+        for name in ("flash_attention", "decode_attention", "ssd_scan", "mlstm_chunk", "filter_select"):
+            emit(f"kernels.{name}", results[f"{name}_us"], f"ref={results[f'{name}_ref_us']:.0f}us,interp")
+    return results
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

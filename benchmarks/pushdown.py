@@ -1,0 +1,100 @@
+"""Read-amplification: predicate + projection pushdown vs full transfer
+(paper §I-A, §III-B) — measured in BYTES ON THE WIRE, plus the fused
+filter_select Pallas kernel vs its jnp oracle.
+
+    full scan      — GET everything, filter client-side
+    pushdown       — GET with (columns, predicate); server filters in-situ
+    COOK pushdown  — same, expressed as a DAG (optimizer sinks the filter)
+
+Derived metric: amplification = bytes_full / bytes_pushdown — how many
+bytes the legacy path moves per useful byte.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, timer
+from repro.client import TcpNetwork
+from repro.core import col
+from repro.data import write_reviews_jsonl
+from repro.server import FairdServer, scan_path, write_sdf_dataset
+
+
+def run(rows: int = 100_000, selectivity: float = 0.02, verbose: bool = True) -> dict:
+    root = tempfile.mkdtemp(prefix="dacp_pushdown_")
+    jsonl = os.path.join(root, "reviews.jsonl")
+    write_reviews_jsonl(jsonl, rows)
+    write_sdf_dataset(os.path.join(root, "columnar"), scan_path(jsonl))
+
+    srv = FairdServer("bench:0")
+    srv.catalog.register_path("ds", root)
+    port = srv.serve_tcp()
+    net = TcpNetwork()
+    uri = f"dacp://127.0.0.1:{port}/ds/columnar"
+    cutoff = int(50 * selectivity)
+    pred = col("useful") < cutoff  # ~selectivity of rows
+
+    results = {"rows": rows}
+
+    c1 = net.client_for(f"127.0.0.1:{port}")
+    with timer() as t:
+        full = c1.get(uri).collect()
+        kept_client = full.filter(np.asarray(pred.evaluate(full), bool)).select(["review_id"])
+    results["full_bytes"] = c1.bytes_received
+    results["full_s"] = t.s
+
+    c2 = TcpNetwork().client_for(f"127.0.0.1:{port}")
+    with timer() as t:
+        kept_server = c2.get(uri, columns=["review_id"], predicate=pred).collect()
+    results["pushdown_bytes"] = c2.bytes_received
+    results["pushdown_s"] = t.s
+    assert kept_server.num_rows == kept_client.num_rows
+
+    c3 = TcpNetwork().client_for(f"127.0.0.1:{port}")
+    with timer() as t:
+        via_cook = c3.open(uri).filter(pred).select("review_id").collect()
+    results["cook_bytes"] = c3.bytes_received
+    results["cook_s"] = t.s
+    assert via_cook.num_rows == kept_server.num_rows
+
+    srv.shutdown()
+    results["selected_rows"] = int(kept_server.num_rows)
+    results["amplification"] = results["full_bytes"] / max(results["pushdown_bytes"], 1)
+    results["speedup"] = results["full_s"] / results["pushdown_s"]
+
+    # ---- fused filter_select kernel vs oracle (host-side, interpret mode) ----
+    from repro.kernels import ops, ref
+
+    table = np.random.default_rng(0).normal(size=(8192, 8)).astype(np.float32)
+    import jax.numpy as jnp
+
+    jt = jnp.asarray(table)
+    ops.filter_select_tiles(jt, 1, 0.0, (0, 2), tile=256)  # warm
+    t0 = time.perf_counter()
+    for _ in range(5):
+        ops.filter_select_tiles(jt, 1, 0.0, (0, 2), tile=256)[0].block_until_ready()
+    k_us = (time.perf_counter() - t0) / 5 * 1e6
+    t0 = time.perf_counter()
+    for _ in range(5):
+        ref.filter_select_ref(jt, 1, 0.0, (0, 2), 256)[0].block_until_ready()
+    r_us = (time.perf_counter() - t0) / 5 * 1e6
+    results["filter_select_kernel_us"] = k_us
+    results["filter_select_ref_us"] = r_us
+
+    if verbose:
+        emit("pushdown.full_scan", results["full_s"] * 1e6, f"{results['full_bytes']}B")
+        emit("pushdown.pushdown", results["pushdown_s"] * 1e6, f"{results['pushdown_bytes']}B")
+        emit("pushdown.cook", results["cook_s"] * 1e6, f"{results['cook_bytes']}B")
+        emit("pushdown.amplification", 0.0, f"{results['amplification']:.1f}x")
+        emit("pushdown.filter_select_kernel", k_us, f"ref={r_us:.0f}us")
+    return results
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,130 @@
+"""Paper Fig. 4 — structured data: DACP vs FTP, download + upload.
+
+Workload: Yelp-like uniform-schema rows (five key/value pairs).  The data
+center holds the dataset in its serving form (columnar parts for DACP —
+the faird multimodal source; the raw jsonl file for FTP).  Metrics per
+path: wall seconds, MB/s (payload), rows/s, plus the upload/download
+symmetry ratio the paper calls out.
+
+    FTP download  = RETR whole jsonl + client-side json parse to rows
+    FTP upload    = client-side json serialize + STOR whole file
+    DACP download = GET → columnar frames → zero-copy numpy columns
+    DACP upload   = PUT an SDF stream (columnar frames server-persisted)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import FtpSim, emit, mbps, timer
+from repro.client import TcpNetwork
+from repro.core import StreamingDataFrame
+from repro.data import write_reviews_jsonl
+from repro.server import FairdServer, scan_path, write_sdf_dataset
+
+
+def run(rows: int = 200_000, verbose: bool = True) -> dict:
+    root = tempfile.mkdtemp(prefix="dacp_structured_")
+    jsonl = os.path.join(root, "reviews.jsonl")
+    write_reviews_jsonl(jsonl, rows)
+    raw_bytes = os.path.getsize(jsonl)
+
+    # faird serves the columnar form (ingested once, like a real data center)
+    columnar_dir = os.path.join(root, "reviews_columnar")
+    write_sdf_dataset(columnar_dir, scan_path(jsonl))
+
+    srv = FairdServer("bench:0")
+    srv.catalog.register_path("ds", root)
+    port = srv.serve_tcp()
+    net = TcpNetwork()
+    client = net.client_for(f"127.0.0.1:{port}")
+
+    ftp = FtpSim(root)
+    results = {}
+
+    # ---------------- download ------------------------------------------------
+    fc = ftp.client()
+    with timer() as t:
+        payload = fc.retr("reviews.jsonl")
+        parsed = [json.loads(line) for line in payload.splitlines() if line]
+        _ = sum(r["stars"] for r in parsed)
+    fc.quit()
+    assert len(parsed) == rows
+    results["ftp_download_s"] = t.s
+    results["ftp_download_mbps"] = mbps(raw_bytes, t.s)
+
+    with timer() as t:
+        sdf = client.get(f"dacp://127.0.0.1:{port}/ds/reviews_columnar")
+        total = 0
+        acc = 0
+        for b in sdf.iter_batches():
+            stars = b.column("stars").values  # zero-copy numpy view
+            acc += int(stars.sum())
+            total += b.num_rows
+    assert total == rows
+    results["dacp_download_s"] = t.s
+    results["dacp_download_mbps"] = mbps(client.bytes_received, t.s)
+
+    # ---------------- upload --------------------------------------------------
+    cols = _columns(rows)
+    with timer() as t:
+        lines = "\n".join(
+            json.dumps(
+                {
+                    "review_id": cols["review_id"][i],
+                    "stars": int(cols["stars"][i]),
+                    "useful": int(cols["useful"][i]),
+                    "text": cols["text"][i],
+                    "date": cols["date"][i],
+                }
+            )
+            for i in range(rows)
+        ).encode()
+        fc = ftp.client()
+        fc.stor("up_ftp.jsonl", lines)
+        fc.quit()
+    results["ftp_upload_s"] = t.s
+    results["ftp_upload_mbps"] = mbps(len(lines), t.s)
+
+    with timer() as t:
+        sdf = StreamingDataFrame.from_pydict(cols, batch_rows=65536)
+        client.put(f"dacp://127.0.0.1:{port}/ds/up_dacp", sdf)
+    results["dacp_upload_s"] = t.s
+    results["dacp_upload_mbps"] = mbps(client.bytes_sent, t.s)
+
+    ftp.close()
+    srv.shutdown()
+
+    results["rows"] = rows
+    results["speedup_download"] = results["ftp_download_s"] / results["dacp_download_s"]
+    results["speedup_upload"] = results["ftp_upload_s"] / results["dacp_upload_s"]
+    results["ftp_updown_sym"] = results["ftp_upload_mbps"] / results["ftp_download_mbps"]
+    results["dacp_updown_sym"] = results["dacp_upload_mbps"] / results["dacp_download_mbps"]
+    if verbose:
+        for k in ("ftp_download_s", "dacp_download_s", "ftp_upload_s", "dacp_upload_s"):
+            emit(f"structured.{k}", results[k] * 1e6, f"{results[k.replace('_s','_mbps')]:.1f}MB/s")
+        emit("structured.speedup_download", 0.0, f"{results['speedup_download']:.2f}x")
+        emit("structured.speedup_upload", 0.0, f"{results['speedup_upload']:.2f}x")
+    return results
+
+
+def _columns(rows: int) -> dict:
+    r = np.random.default_rng(1)
+    return {
+        "review_id": [f"r{i:09d}" for i in range(rows)],
+        "stars": r.integers(1, 6, rows).astype(np.int64),
+        "useful": r.integers(0, 50, rows).astype(np.int64),
+        "text": ["some review text for upload benchmarking purposes"] * rows,
+        "date": ["2025-06-01"] * rows,
+    }
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows = int(sys.argv[1]) if len(sys.argv) > 1 else 200_000
+    print(json.dumps(run(rows), indent=1))

@@ -1,0 +1,62 @@
+"""Quickstart: the DACP protocol in 60 seconds (in-process cluster).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.client import LocalNetwork
+from repro.core import StreamingDataFrame, col
+from repro.data import write_reviews_jsonl
+from repro.server import FairdServer
+
+
+def main():
+    # --- a "data center": one faird server over a directory ------------------
+    root = tempfile.mkdtemp(prefix="dacp_qs_")
+    write_reviews_jsonl(os.path.join(root, "reviews.jsonl"), rows=10_000)
+
+    net = LocalNetwork()
+    server = FairdServer("dc1:3101")
+    server.catalog.register_path("reviews", root, metadata={"license": "CC-BY", "domain": "nlp"})
+    net.register(server)
+
+    client = net.client_for("dc1:3101")
+
+    # --- discovery: GET the server root --------------------------------------
+    print("datasets:", client.get("dacp://dc1:3101/").collect().to_pydict()["dataset"])
+
+    # --- GET with predicate pushdown (server-side filtering) -----------------
+    five_star = client.get(
+        "dacp://dc1:3101/reviews/reviews.jsonl",
+        columns=["review_id", "useful"],
+        predicate=col("stars") == 5,
+    )
+    head = five_star.head(3)
+    print("pushdown GET:", head.to_pydict())
+
+    # --- COOK: a lazy chainable DAG, executed in-situ -------------------------
+    top = (
+        client.open("dacp://dc1:3101/reviews/reviews.jsonl")
+        .filter((col("stars") >= 4) & (col("useful") > 30))
+        .project(engagement=col("useful") * col("stars"))
+        .select("review_id", "engagement")
+        .limit(5)
+        .collect()
+    )
+    print("COOK result:", top.to_pydict())
+
+    # --- PUT: stream a derived table back ---------------------------------------
+    up = StreamingDataFrame.from_pydict({"id": np.arange(5), "score": np.linspace(0, 1, 5).astype(np.float32)})
+    print("PUT:", client.put("dacp://dc1:3101/reviews/derived/scores", up))
+    print("read-back rows:", client.get("dacp://dc1:3101/reviews/derived/scores").count_rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end training driver: an LM trained from a DACP data plane.
+
+The corpus lives at a faird "data center"; tokenization+packing run
+in-situ as COOK map operators; fixed-size token blobs stream to the
+training host; JaxFeed double-buffers device batches; the Trainer
+checkpoints and auto-resumes.
+
+    PYTHONPATH=src python examples/train_lm.py                # reduced, fast
+    PYTHONPATH=src python examples/train_lm.py --full --steps 300   # ~100M params
+
+(The --full run is the deliverable configuration; on this CPU-only
+container it is slow — the reduced default exercises the identical path.)
+"""
+
+import argparse
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.client import LocalNetwork
+from repro.client.jax_adapter import JaxFeed
+from repro.configs import get_config
+from repro.data import training_dag, write_token_corpus
+from repro.optim import AdamWConfig
+from repro.server import FairdServer
+from repro.train import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--full", action="store_true", help="paper-lm-100m (~100M params)")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    corpus = os.path.join(tempfile.mkdtemp(prefix="dacp_corpus_"), "docs.jsonl")
+    write_token_corpus(corpus, docs=512)
+
+    net = LocalNetwork()
+    server = FairdServer("data:3101")
+    server.catalog.register_path("corpus", os.path.dirname(corpus))
+    net.register(server)
+    client = net.client_for("data:3101")
+
+    cfg = get_config("paper-lm-100m")
+    if not args.full:
+        cfg = cfg.reduced()
+    print(f"model: {cfg.name} ({cfg.n_params()/1e6:.1f}M params, full={args.full})")
+
+    dag = training_dag("dacp://data:3101/corpus/docs.jsonl", seq_len=args.seq, batch_rows=args.batch)
+
+    def feed():
+        return iter(
+            JaxFeed(lambda: client.cook(dag), token_column="tokens", seq_len=args.seq + 1, global_batch=args.batch)
+        )
+
+    trainer = Trainer(
+        cfg,
+        feed,
+        AdamWConfig(lr=3e-3),
+        ckpt_dir=args.ckpt or os.path.join(tempfile.mkdtemp(prefix="dacp_ckpt_")),
+        ckpt_every=max(args.steps // 2, 10),
+        compress_grads=args.compress_grads,
+        log_every=5,
+    )
+    print(f"starting at step {trainer.step}")
+    trainer.run(args.steps)
+    for m in trainer.metrics_log:
+        print(f"  step {m['step']:5d} loss={m['loss']:.4f} gnorm={m['grad_norm']:.3f} {m['wall_s']:.1f}s")
+    print("done; checkpoints in", trainer.ckpt.dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro — DACP (Scientific Data Access & Collaboration Protocol) as a
+multi-pod JAX training/inference framework.  See DESIGN.md."""

@@ -1,0 +1,5 @@
+"""Checkpoint substrate (atomic, async, validated restore)."""
+
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

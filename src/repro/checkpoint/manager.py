@@ -1,0 +1,205 @@
+"""Checkpoint manager: sharded npz + manifest, atomic, async, self-healing.
+
+Fault-tolerance contract (DESIGN.md §6):
+  * a checkpoint is VALID iff its manifest exists AND every shard file's
+    crc32 matches — torn/partial writes can never be restored from;
+  * writes go to ``step_XXXX.tmp/`` then a single atomic ``os.replace`` of
+    the directory publishes the checkpoint;
+  * ``save_async`` runs serialization off the training thread (double-
+    buffered: at most one outstanding save, back-pressure beyond that);
+  * ``restore_latest`` walks checkpoints newest-first and silently skips
+    invalid ones (a crashed writer costs one checkpoint, not the run);
+  * retention keeps the newest ``keep`` checkpoints.
+
+On a multi-host deployment each host saves its addressable shards under
+``host_<k>/`` with the same manifest semantics; this container is
+single-host, so there is one shard dir.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+import zlib
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: dict):
+    root: dict = {}
+    for key, v in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node)
+        if keys and all(k.isdigit() for k in keys):
+            return [fix(node[str(i)]) for i in range(len(keys))]
+        return {k: fix(v) for k, v in node.items()}
+
+    return fix(root)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pending: threading.Thread | None = None
+        self._lock = threading.Lock()
+        self._write_lock = threading.Lock()
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree, extra: dict | None = None) -> str:
+        host = jax.tree.map(lambda x: np.asarray(x), tree)
+        return self._write(step, host, extra or {})
+
+    def save_async(self, step: int, tree, extra: dict | None = None) -> None:
+        host = jax.tree.map(lambda x: np.asarray(x), tree)  # device→host now
+        with self._lock:
+            if self._pending is not None:
+                self._pending.join()  # back-pressure: one outstanding save
+            t = threading.Thread(target=self._write, args=(step, host, extra or {}), daemon=True)
+            t.start()
+            self._pending = t
+
+    def wait(self) -> None:
+        with self._lock:
+            if self._pending is not None:
+                self._pending.join()
+                self._pending = None
+
+    def _write(self, step: int, host_tree, extra: dict) -> str:
+        with self._write_lock:
+            return self._write_locked(step, host_tree, extra)
+
+    def _write_locked(self, step: int, host_tree, extra: dict) -> str:
+        flat = _flatten(host_tree)
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        if self._validate(final) is not None:
+            return final  # idempotent: this step is already durably saved
+        tmp = f"{final}.tmp{threading.get_ident()}"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        shards = {}
+        # group arrays into shard files of ~256MB
+        group: dict = {}
+        gbytes = 0
+        gi = 0
+
+        def flush():
+            nonlocal group, gbytes, gi
+            if not group:
+                return
+            name = f"shard_{gi:05d}.npz"
+            path = os.path.join(tmp, name)
+            with open(path, "wb") as f:
+                np.savez(f, **{k.replace("/", "¦"): v for k, v in group.items()})
+            with open(path, "rb") as f:
+                crc = zlib.crc32(f.read())
+            shards[name] = {"keys": list(group), "crc32": crc}
+            group = {}
+            gbytes = 0
+            gi += 1
+
+        for k, v in flat.items():
+            group[k] = v
+            gbytes += v.nbytes
+            if gbytes >= (256 << 20):
+                flush()
+        flush()
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "shards": shards,
+            "extra": extra,
+            "n_arrays": len(flat),
+        }
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._retain()
+        return final
+
+    def _retain(self) -> None:
+        cps = self.list_steps()
+        for step in cps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{step:010d}"), ignore_errors=True)
+
+    # ------------------------------------------------------------------ restore
+    def list_steps(self) -> list:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and ".tmp" not in d:
+                try:
+                    out.append(int(d[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def _validate(self, path: str) -> dict | None:
+        mf = os.path.join(path, _MANIFEST)
+        if not os.path.exists(mf):
+            return None
+        try:
+            with open(mf) as f:
+                manifest = json.load(f)
+            for name, info in manifest["shards"].items():
+                p = os.path.join(path, name)
+                with open(p, "rb") as f:
+                    if zlib.crc32(f.read()) != info["crc32"]:
+                        return None
+            return manifest
+        except Exception:
+            return None
+
+    def restore(self, step: int):
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        manifest = self._validate(path)
+        if manifest is None:
+            raise FileNotFoundError(f"checkpoint step {step} missing or corrupt")
+        flat = {}
+        for name in manifest["shards"]:
+            with np.load(os.path.join(path, name), allow_pickle=False) as z:
+                for k in z.files:
+                    flat[k.replace("¦", "/")] = z[k]
+        return _unflatten(flat), manifest
+
+    def restore_latest(self):
+        """Newest *valid* checkpoint, or (None, None)."""
+        for step in reversed(self.list_steps()):
+            path = os.path.join(self.dir, f"step_{step:010d}")
+            manifest = self._validate(path)
+            if manifest is not None:
+                tree, _ = self.restore(step)
+                return tree, manifest
+        return None, None

@@ -1,0 +1,6 @@
+"""DACP client SDK: chainable lazy API + network fabric + JAX adapter."""
+
+from repro.client.client import DacpClient, RemoteFrame, open_blob
+from repro.client.network import LocalNetwork, Network, TcpNetwork
+
+__all__ = ["DacpClient", "RemoteFrame", "open_blob", "LocalNetwork", "Network", "TcpNetwork"]

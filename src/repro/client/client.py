@@ -1,0 +1,232 @@
+"""faird client SDK (paper §IV-D).
+
+A lightweight client that masks channel management and the phased interaction
+(HELLO → token → requests).  It does not execute computations: the chainable
+``RemoteFrame`` API builds a logical DAG client-side; triggering consumption
+serializes the DAG and submits it as COOK.  Structured results arrive as
+zero-copy columnar batches; Binary blob columns can be re-opened ("expanded")
+as new SDFs via ``open_blob``.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.dag import Dag, DagBuilder
+from repro.core.errors import DacpError, TransportError
+from repro.core.expr import Expr
+from repro.core.sdf import StreamingDataFrame
+from repro.transport import framing
+from repro.transport.flight import recv_sdf, send_sdf
+
+__all__ = ["DacpClient", "RemoteFrame", "open_blob"]
+
+
+class DacpClient:
+    """One logical connection to a faird server (channel-per-request)."""
+
+    def __init__(self, channel_factory, authority: str, subject: str = "anonymous", credential: str | None = None):
+        self._factory = channel_factory
+        self.authority = authority
+        self.subject = subject
+        self.credential = credential
+        self._token: str | None = None
+        self._token_exp: float = 0.0
+        self.bytes_received = 0
+        self.bytes_sent = 0
+
+    # -- session -----------------------------------------------------------------
+    def _session_token(self) -> str:
+        if self._token is None or time.time() > self._token_exp - 5.0:
+            ch = self._factory()
+            try:
+                hdr = {"verb": "HELLO", "subject": self.subject}
+                if self.credential is not None:
+                    hdr["credential"] = self.credential
+                ch.send(framing.REQUEST, hdr)
+                ftype, resp, _ = ch.recv()
+                if ftype == framing.ERROR:
+                    raise DacpError.from_wire(resp)
+                self._token = resp["token"]
+                self._token_exp = float(resp.get("expires", time.time() + 240))
+            finally:
+                ch.close()
+        return self._token
+
+    # -- verbs --------------------------------------------------------------------
+    def get(
+        self,
+        uri: str,
+        token: str | None = None,
+        columns=None,
+        predicate: Expr | None = None,
+        batch_rows: int | None = None,
+    ) -> StreamingDataFrame:
+        ch = self._factory()
+        hdr = {"verb": "GET", "uri": str(uri), "token": token or self._session_token()}
+        if columns is not None:
+            hdr["columns"] = list(columns)
+        if predicate is not None:
+            hdr["predicate"] = predicate.to_json()
+        if batch_rows:
+            hdr["batch_rows"] = int(batch_rows)
+        ch.send(framing.REQUEST, hdr)
+        sdf = recv_sdf(ch)
+        return _close_after(sdf, ch, self)
+
+    def put(self, uri: str, sdf: StreamingDataFrame) -> dict:
+        ch = self._factory()
+        try:
+            ch.send(framing.REQUEST, {"verb": "PUT", "uri": str(uri), "token": self._session_token()})
+            ftype, resp, _ = ch.recv()
+            if ftype == framing.ERROR:
+                raise DacpError.from_wire(resp)
+            send_sdf(ch, sdf)
+            ftype, resp, _ = ch.recv()
+            if ftype == framing.ERROR:
+                raise DacpError.from_wire(resp)
+            self.bytes_sent += ch.bytes_sent
+            return resp
+        finally:
+            ch.close()
+
+    def cook(self, dag: Dag) -> StreamingDataFrame:
+        ch = self._factory()
+        ch.send(framing.REQUEST, {"verb": "COOK", "token": self._session_token()}, dag.to_bytes())
+        sdf = recv_sdf(ch)
+        return _close_after(sdf, ch, self)
+
+    def submit(self, fragment: Dag, flow_id: str, exchange_tokens: dict) -> str:
+        """Internal (scheduler): register a plan fragment; returns pull token."""
+        ch = self._factory()
+        try:
+            ch.send(
+                framing.REQUEST,
+                {
+                    "verb": "SUBMIT",
+                    "token": self._session_token(),
+                    "flow_id": flow_id,
+                    "exchange_tokens": exchange_tokens,
+                },
+                fragment.to_bytes(),
+            )
+            ftype, resp, _ = ch.recv()
+            if ftype == framing.ERROR:
+                raise DacpError.from_wire(resp)
+            return resp["token"]
+        finally:
+            ch.close()
+
+    def ping(self, timeout: float = 5.0) -> dict:
+        ch = self._factory()
+        try:
+            ch.send(framing.REQUEST, {"verb": "PING"})
+            ftype, resp, _ = ch.recv(timeout=timeout)
+            if ftype == framing.ERROR:
+                raise DacpError.from_wire(resp)
+            return resp
+        finally:
+            ch.close()
+
+    # -- chainable API ---------------------------------------------------------------
+    def open(self, uri: str) -> "RemoteFrame":
+        b = DagBuilder()
+        nid = b.source(uri)
+        return RemoteFrame(self, b, nid)
+
+    def dataframe(self, uri: str) -> "RemoteFrame":
+        return self.open(uri)
+
+
+def _close_after(sdf: StreamingDataFrame, ch, client: DacpClient) -> StreamingDataFrame:
+    """Wrap a one-shot stream so the channel closes (and bytes are counted)
+    when the stream ends."""
+
+    def gen():
+        try:
+            yield from sdf.iter_batches()
+        finally:
+            client.bytes_received += ch.bytes_received
+            ch.close()
+
+    return StreamingDataFrame.one_shot(sdf.schema, gen())
+
+
+class RemoteFrame:
+    """Chainable, lazy, serializable — the user-facing DAG builder."""
+
+    def __init__(self, client: DacpClient, builder: DagBuilder, head: str):
+        self._client = client
+        self._b = builder
+        self._head = head
+
+    def _chain(self, op: str, params: dict, extra_inputs=()) -> "RemoteFrame":
+        nid = self._b.add(op, params, [self._head, *extra_inputs])
+        return RemoteFrame(self._client, self._b, nid)
+
+    def filter(self, predicate: Expr) -> "RemoteFrame":
+        return self._chain("filter", {"predicate": predicate})
+
+    def select(self, *columns) -> "RemoteFrame":
+        cols = list(columns[0]) if len(columns) == 1 and isinstance(columns[0], (list, tuple)) else list(columns)
+        return self._chain("select", {"columns": cols})
+
+    def project(self, keep: bool = True, **exprs: Expr) -> "RemoteFrame":
+        return self._chain("project", {"exprs": exprs, "keep": keep})
+
+    def map(self, fn: str, **fn_params) -> "RemoteFrame":
+        return self._chain("map", {"fn": fn, "fn_params": fn_params})
+
+    def rebatch(self, rows: int) -> "RemoteFrame":
+        return self._chain("rebatch", {"rows": int(rows)})
+
+    def limit(self, n: int) -> "RemoteFrame":
+        return self._chain("limit", {"n": int(n)})
+
+    def union(self, other: "RemoteFrame") -> "RemoteFrame":
+        # merge the other builder's nodes into ours (ids are globally unique)
+        self._b.nodes.update(other._b.nodes)
+        nid = self._b.add("union", {}, [self._head, other._head])
+        return RemoteFrame(self._client, self._b, nid)
+
+    # -- terminal ops -------------------------------------------------------------
+    def dag(self) -> Dag:
+        return self._b.finish(self._head).copy()
+
+    def stream(self) -> StreamingDataFrame:
+        return self._client.cook(self.dag())
+
+    def iter_batches(self):
+        return self.stream().iter_batches()
+
+    def iter_rows(self):
+        return self.stream().iter_rows()
+
+    def collect(self):
+        return self.stream().collect()
+
+    def head(self, n: int = 10):
+        return self.limit(n).stream().collect()
+
+    def count_rows(self) -> int:
+        return self.stream().count_rows()
+
+
+def open_blob(value: bytes, fmt: str = ""):
+    """Expandable blob column (paper §III-A): re-open binary content as a new
+    SDF.  Structured formats parse; anything else becomes a chunk stream."""
+    import io
+    import os
+    import tempfile
+
+    from repro.server import datasource
+
+    # datasource is file-oriented; spool the blob (kept small by pushdown)
+    suffix = f".{fmt.lstrip('.')}" if fmt else ".bin"
+    with tempfile.NamedTemporaryFile(suffix=suffix, delete=False) as f:
+        f.write(value)
+        tmp = f.name
+    sdf = datasource.scan_path(tmp)
+    collected = sdf.collect()  # materialize before unlink
+    os.unlink(tmp)
+    return StreamingDataFrame.from_batches([collected])

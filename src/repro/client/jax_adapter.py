@@ -1,0 +1,159 @@
+"""JAX ecosystem adapter (paper §IV-C — the PyTorch/HF analogue).
+
+Feeds DACP SDF streams directly into JAX training/serving loops:
+
+  * columnar batches → host numpy arrays with **zero copies** (fixed-width
+    columns are already contiguous buffers; token sequences travel as Binary
+    blobs and are reinterpreted with ``np.frombuffer``);
+  * **pull-based but prefetched**: the DACP stream stays lazy, yet a depth-N
+    double buffer keeps the next device batch in flight while the current
+    step runs — a TPU pod must never stall on input (DESIGN.md §3);
+  * `device_put` with a `NamedSharding` places the global batch across the
+    ("pod","data") axes, which is the host→HBM boundary of the paper's
+    "move only high-value bytes" principle.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+
+import numpy as np
+
+from repro.core.errors import DacpError
+from repro.core.sdf import StreamingDataFrame
+
+__all__ = ["batch_to_arrays", "tokens_from_blob_column", "PrefetchIterator", "JaxFeed"]
+
+
+def batch_to_arrays(batch, columns=None) -> dict:
+    """RecordBatch -> {name: np.ndarray} for fixed-width columns (zero-copy)."""
+    out = {}
+    names = columns if columns is not None else batch.schema.names
+    for name in names:
+        c = batch.column(name)
+        if c.dtype.is_varwidth:
+            continue  # blobs handled by tokens_from_blob_column
+        out[name] = c.values
+    return out
+
+
+def tokens_from_blob_column(batch, column: str, seq_len: int, dtype=np.int32) -> np.ndarray:
+    """Binary column of fixed-size token blobs -> (rows, seq_len) array.
+
+    Each blob is ``seq_len * dtype.itemsize`` bytes (the pipeline's
+    ``tokenize_and_pack`` map guarantees this); reinterpretation is zero-copy
+    when the blob column data is contiguous and aligned.
+    """
+    c = batch.column(column)
+    itemsize = np.dtype(dtype).itemsize
+    want = seq_len * itemsize
+    lens = c.offsets[1:] - c.offsets[:-1]
+    if not (lens == want).all():
+        raise DacpError(f"blob column {column!r} has ragged token rows (want {want} bytes)")
+    if int(c.offsets[0]) % itemsize == 0 and c.data.flags["C_CONTIGUOUS"]:
+        flat = c.data[int(c.offsets[0]) : int(c.offsets[-1])]
+        try:
+            return np.frombuffer(flat, dtype=dtype).reshape(len(lens), seq_len)
+        except ValueError:
+            pass  # unaligned view; fall through to copy
+    rows = [np.frombuffer(bytes(c.data[c.offsets[i] : c.offsets[i + 1]]), dtype=dtype) for i in range(len(lens))]
+    return np.stack(rows)
+
+
+class PrefetchIterator:
+    """Depth-``depth`` background prefetch over any iterator."""
+
+    _END = object()
+
+    def __init__(self, it, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._err: list = []
+
+        def worker():
+            try:
+                for item in it:
+                    self._q.put(item)
+            except BaseException as e:  # propagate into consumer thread
+                self._err.append(e)
+            finally:
+                self._q.put(self._END)
+
+        self._t = threading.Thread(target=worker, daemon=True)
+        self._t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._END:
+            if self._err:
+                raise self._err[0]
+            raise StopIteration
+        return item
+
+
+class JaxFeed:
+    """SDF stream -> sharded jax.Array training batches.
+
+    feed = JaxFeed(stream_factory, token_column="tokens", seq_len=4096,
+                   global_batch=256, mesh=mesh, batch_axes=("pod","data"))
+    for step, batch in enumerate(feed):   # batch: dict of jax.Array
+        ...
+    """
+
+    def __init__(
+        self,
+        stream_factory,
+        token_column: str,
+        seq_len: int,
+        global_batch: int,
+        mesh=None,
+        batch_axes=("data",),
+        dtype=np.int32,
+        prefetch: int = 2,
+        drop_remainder: bool = True,
+    ):
+        self.stream_factory = stream_factory
+        self.token_column = token_column
+        self.seq_len = int(seq_len)
+        self.global_batch = int(global_batch)
+        self.mesh = mesh
+        self.batch_axes = tuple(batch_axes)
+        self.dtype = dtype
+        self.prefetch = prefetch
+        self.drop_remainder = drop_remainder
+
+    def _host_batches(self):
+        pending: list = []
+        have = 0
+        sdf: StreamingDataFrame = self.stream_factory()
+        for rb in sdf.iter_batches():
+            toks = tokens_from_blob_column(rb, self.token_column, self.seq_len, self.dtype)
+            pending.append(toks)
+            have += toks.shape[0]
+            while have >= self.global_batch:
+                buf = np.concatenate(pending, axis=0) if len(pending) > 1 else pending[0]
+                yield buf[: self.global_batch]
+                rest = buf[self.global_batch :]
+                pending = [rest] if len(rest) else []
+                have = len(rest)
+        if have and not self.drop_remainder:
+            yield np.concatenate(pending, axis=0)
+
+    def _to_device(self, host: np.ndarray):
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        tokens = host.astype(self.dtype, copy=False)
+        batch = {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+        if self.mesh is None:
+            return {k: jax.numpy.asarray(v) for k, v in batch.items()}
+        sharding = NamedSharding(self.mesh, P(self.batch_axes, None))
+        return {k: jax.device_put(v, sharding) for k, v in batch.items()}
+
+    def __iter__(self):
+        host_it = PrefetchIterator(self._host_batches(), depth=self.prefetch)
+        for host in host_it:
+            yield self._to_device(host)

@@ -1,0 +1,111 @@
+"""Network fabric: authority -> client factory, with replica registry.
+
+The scheduler and servers resolve peers through a ``Network`` so the same
+code runs over in-process channel pairs (tests, co-hosted data plane,
+benchmarks without kernel TCP noise) and real TCP sockets.
+
+Replicas: scientific data centers mirror datasets; ``add_replica`` records
+that an authority's data is also served elsewhere.  The scheduler uses this
+for fail-over and straggler re-issue.
+"""
+
+from __future__ import annotations
+
+import threading
+
+from repro.core.errors import ResourceNotFound
+from repro.client.client import DacpClient
+from repro.transport.channel import channel_pair, connect_tcp
+
+__all__ = ["Network", "LocalNetwork", "TcpNetwork"]
+
+
+class Network:
+    def __init__(self):
+        self._replicas: dict = {}
+
+    def client_for(self, authority: str) -> DacpClient:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def add_replica(self, authority: str, replica_authority: str) -> None:
+        self._replicas.setdefault(authority, []).append(replica_authority)
+
+    def replicas_of(self, authority: str) -> list:
+        return list(self._replicas.get(authority, []))
+
+    def ping(self, authority: str, timeout: float = 5.0) -> dict:
+        return self.client_for(authority).ping(timeout=timeout)
+
+
+class LocalNetwork(Network):
+    """In-process cluster: every server is an object; channels are queue pairs."""
+
+    def __init__(self):
+        super().__init__()
+        self._servers: dict = {}
+        self._down: set = set()
+        self._clients: dict = {}
+        self._lock = threading.Lock()
+
+    def register(self, server) -> None:
+        with self._lock:
+            self._servers[server.authority] = server
+            server.network = self
+
+    def set_down(self, authority: str, down: bool = True) -> None:
+        """Fault injection for tests/benchmarks."""
+        with self._lock:
+            (self._down.add if down else self._down.discard)(authority)
+
+    def server(self, authority: str):
+        return self._servers[authority]
+
+    def authorities(self) -> list:
+        return sorted(self._servers)
+
+    def client_for(self, authority: str) -> DacpClient:
+        with self._lock:
+            if authority in self._clients and authority not in self._down:
+                return self._clients[authority]
+        try:
+            srv = self._servers[authority]
+        except KeyError:
+            raise ResourceNotFound(f"no server registered at {authority!r}") from None
+
+        def factory():
+            if authority in self._down:
+                raise ResourceNotFound(f"server {authority} is down")
+            client_end, server_end = channel_pair()
+            t = threading.Thread(target=srv.handle_channel, args=(server_end,), daemon=True)
+            t.start()
+            return client_end
+
+        client = DacpClient(factory, authority=authority)
+        with self._lock:
+            self._clients[authority] = client
+        return client
+
+
+class TcpNetwork(Network):
+    """authority strings are real host:port endpoints."""
+
+    def __init__(self, subject: str = "anonymous", credential: str | None = None):
+        super().__init__()
+        self.subject = subject
+        self.credential = credential
+        self._clients: dict = {}
+        self._lock = threading.Lock()
+
+    def client_for(self, authority: str) -> DacpClient:
+        with self._lock:
+            if authority in self._clients:
+                return self._clients[authority]
+        host, _, port = authority.partition(":")
+
+        def factory():
+            return connect_tcp(host, int(port))
+
+        client = DacpClient(factory, authority=authority, subject=self.subject, credential=self.credential)
+        with self._lock:
+            self._clients[authority] = client
+        return client

@@ -1,0 +1,289 @@
+"""Operator library + pull-based streaming executor (paper §III-B, §IV-B).
+
+Every operator consumes and produces SDF batch streams.  Execution is
+**lazy / pull-based (reverse supply)**: building an executor does no work;
+iterating the *output* recursively pulls from inputs, activating upstream
+operators one batch at a time — the paper's §III-D execution model.
+
+``map`` operators reference functions from a **named registry** — the DAG
+itself never carries code.  Each registered fn declares the columns it reads
+and writes so the pushdown optimizer can reorder filters around it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Iterator
+
+import numpy as np
+
+from repro.core.batch import Column, RecordBatch, concat_batches
+from repro.core.dag import Dag, Node
+from repro.core.dtypes import resolve as resolve_dtype
+from repro.core.errors import PlanError, SchemaError
+from repro.core.expr import Expr
+from repro.core.schema import Field, Schema
+from repro.core.sdf import StreamingDataFrame
+
+__all__ = ["MapFn", "register_map", "get_map", "MAP_REGISTRY", "execute", "execute_node"]
+
+
+# ---------------------------------------------------------------------------
+# map-fn registry
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class MapFn:
+    name: str
+    fn: Callable  # (RecordBatch, **params) -> RecordBatch
+    schema_fn: Callable  # (Schema, **params) -> Schema
+    reads: tuple  # column names read ("*" = all)
+    writes: tuple  # column names written/created
+
+
+MAP_REGISTRY: dict = {}
+
+
+def register_map(name: str, reads=("*",), writes=()):
+    def deco(fn):
+        def default_schema(schema: Schema, **params) -> Schema:
+            return schema
+
+        schema_fn = getattr(fn, "schema_fn", default_schema)
+        MAP_REGISTRY[name] = MapFn(name, fn, schema_fn, tuple(reads), tuple(writes))
+        return fn
+
+    return deco
+
+
+def get_map(name: str) -> MapFn:
+    try:
+        return MAP_REGISTRY[name]
+    except KeyError:
+        raise PlanError(f"map fn {name!r} is not registered on this server") from None
+
+
+# a few built-in maps used by the data pipeline and tests -------------------------
+def _schema_add(name: str, dtype: str):
+    def sf(schema: Schema, **params) -> Schema:
+        out = name if "out" not in params else params["out"]
+        f = Field(out, resolve_dtype(dtype))
+        if out in schema:
+            return schema  # replaced in-place by with_column
+        return schema.append(f)
+
+    return sf
+
+
+def _blob_lengths(batch: RecordBatch, column: str, out: str = "nbytes") -> RecordBatch:
+    c = batch.column(column)
+    if c.dtype.is_varwidth:
+        lens = (c.offsets[1:] - c.offsets[:-1]).astype(np.int64)
+    else:
+        lens = np.full(batch.num_rows, c.dtype.width, dtype=np.int64)
+    return batch.with_column(Field(out, resolve_dtype("int64")), Column.from_values(resolve_dtype("int64"), lens))
+
+
+_blob_lengths.schema_fn = _schema_add("nbytes", "int64")
+register_map("blob_lengths", reads=("*",), writes=("nbytes",))(_blob_lengths)
+
+
+def _lowercase(batch: RecordBatch, column: str) -> RecordBatch:
+    c = batch.column(column)
+    vals = [v.lower() if isinstance(v, str) else v for v in c.to_pylist()]
+    return batch.with_column(batch.schema.field(column), Column.from_values(c.dtype, vals))
+
+
+register_map("lowercase", reads=("*",), writes=())(_lowercase)
+
+
+# ---------------------------------------------------------------------------
+# per-node streaming evaluators
+# ---------------------------------------------------------------------------
+def _eval_filter(node: Node, ins: list) -> StreamingDataFrame:
+    (src,) = ins
+    pred: Expr = node.params["predicate"]
+
+    def gen() -> Iterator[RecordBatch]:
+        for b in src.iter_batches():
+            mask = np.asarray(pred.evaluate(b), dtype=bool)
+            if mask.all():
+                yield b
+            elif mask.any():
+                yield b.filter(mask)
+            # fully-masked batches are dropped (no empty frames on the wire)
+
+    return StreamingDataFrame(src.schema, gen)
+
+
+def _eval_select(node: Node, ins: list) -> StreamingDataFrame:
+    (src,) = ins
+    cols = list(node.params["columns"])
+    schema = src.schema.select(cols)
+
+    def gen():
+        for b in src.iter_batches():
+            yield b.select(cols)
+
+    return StreamingDataFrame(schema, gen)
+
+
+def _infer_project_schema(src_schema: Schema, exprs: dict, keep: bool) -> Schema:
+    """Infer projection dtypes by evaluating on an empty batch (cheap, exact)."""
+    from repro.core import dtypes as _dt
+
+    empty = RecordBatch.empty(src_schema)
+    fields = list(src_schema.fields) if keep else []
+    names = {f.name for f in fields}
+    for name, e in exprs.items():
+        vals = np.asarray(e.evaluate(empty))
+        if vals.ndim == 0:  # literal broadcast: dtype of the scalar
+            vals = np.asarray([vals[()]])
+        try:
+            dt = _dt.from_numpy(vals.dtype)
+        except KeyError:
+            dt = _dt.STRING
+        f = Field(name, dt)
+        if name in names:
+            fields[[x.name for x in fields].index(name)] = f
+        else:
+            fields.append(f)
+            names.add(name)
+    return Schema(fields)
+
+
+def _eval_project(node: Node, ins: list) -> StreamingDataFrame:
+    (src,) = ins
+    exprs: dict = node.params["exprs"]
+    keep: bool = bool(node.params.get("keep", True))
+
+    schema_holder = {"schema": _infer_project_schema(src.schema, exprs, keep)}
+
+    def _projected(b: RecordBatch):
+        from repro.core import dtypes as _dt
+
+        cols = []
+        for name, e in exprs.items():
+            vals = np.asarray(e.evaluate(b))
+            if vals.ndim == 0:
+                vals = np.full(b.num_rows, vals[()])
+            dt = _dt.from_numpy(vals.dtype)
+            cols.append((Field(name, dt), Column.from_values(dt, vals)))
+        return cols
+
+    def gen():
+        for b in src.iter_batches():
+            new_cols = _projected(b)
+            if keep:
+                out = b
+                for f, c in new_cols:
+                    out = out.with_column(f, c)
+            else:
+                out = RecordBatch(Schema([f for f, _ in new_cols]), [c for _, c in new_cols])
+            schema_holder["schema"] = out.schema
+            yield out
+
+    return StreamingDataFrame(schema_holder["schema"], gen)
+
+
+def _eval_map(node: Node, ins: list) -> StreamingDataFrame:
+    (src,) = ins
+    mf = get_map(node.params["fn"])
+    fn_params = dict(node.params.get("fn_params", {}))
+    schema = mf.schema_fn(src.schema, **fn_params)
+
+    def gen():
+        for b in src.iter_batches():
+            yield mf.fn(b, **fn_params)
+
+    return StreamingDataFrame(schema, gen)
+
+
+def _eval_rebatch(node: Node, ins: list) -> StreamingDataFrame:
+    (src,) = ins
+    rows = int(node.params["rows"])
+    if rows <= 0:
+        raise PlanError("rebatch rows must be positive")
+
+    def gen():
+        pend: list = []
+        pend_rows = 0
+        for b in src.iter_batches():
+            pend.append(b)
+            pend_rows += b.num_rows
+            while pend_rows >= rows:
+                merged = concat_batches(pend)
+                yield merged.slice(0, rows)
+                rest = merged.slice(rows, merged.num_rows)
+                pend = [rest] if rest.num_rows else []
+                pend_rows = rest.num_rows
+        if pend_rows:
+            yield concat_batches(pend)
+
+    return StreamingDataFrame(src.schema, gen)
+
+
+def _eval_limit(node: Node, ins: list) -> StreamingDataFrame:
+    (src,) = ins
+    n = int(node.params["n"])
+
+    def gen():
+        seen = 0
+        if n <= 0:
+            return
+        for b in src.iter_batches():
+            if seen + b.num_rows >= n:
+                yield b.slice(0, n - seen)  # no further upstream pulls
+                return
+            seen += b.num_rows
+            yield b
+
+    return StreamingDataFrame(src.schema, gen)
+
+
+def _eval_union(node: Node, ins: list) -> StreamingDataFrame:
+    schema = ins[0].schema
+    for s in ins[1:]:
+        if not s.schema.equals(schema):
+            raise SchemaError("union over mismatched schemas")
+
+    def gen():
+        for s in ins:
+            yield from s.iter_batches()
+
+    return StreamingDataFrame(schema, gen)
+
+
+_EVAL = {
+    "filter": _eval_filter,
+    "select": _eval_select,
+    "project": _eval_project,
+    "map": _eval_map,
+    "rebatch": _eval_rebatch,
+    "limit": _eval_limit,
+    "union": _eval_union,
+}
+
+
+def execute_node(node: Node, inputs: list) -> StreamingDataFrame:
+    try:
+        fn = _EVAL[node.op]
+    except KeyError:
+        raise PlanError(f"operator {node.op!r} has no local evaluator") from None
+    return fn(node, inputs)
+
+
+def execute(dag: Dag, source_resolver: Callable[[Node], StreamingDataFrame]) -> StreamingDataFrame:
+    """Wire the DAG into a lazy pull pipeline and return the output SDF.
+
+    ``source_resolver`` materializes ``source`` / ``exchange`` leaves — the
+    server resolves URIs against its catalog; the scheduler resolves exchanges
+    against remote pulls.
+    """
+    materialized: dict = {}
+    for nid in dag.topological_order():
+        node = dag.nodes[nid]
+        if node.op in ("source", "exchange"):
+            materialized[nid] = source_resolver(node)
+        else:
+            materialized[nid] = execute_node(node, [materialized[i] for i in node.inputs])
+    return materialized[dag.output]

@@ -1,0 +1,144 @@
+"""Cross-domain task planning (paper §III-D).
+
+A logical COOK DAG references sources in several data centers ("domains" =
+``host:port`` authorities).  The planner decomposes it into **physical
+sub-tasks** such that every operator executes *in-situ* in the domain that
+owns its upstream data ("move operators, not data").  Edges that cross a
+domain boundary become **exchange** leaves: the downstream fragment pulls the
+upstream fragment's result stream with a scheduler-minted flow token.
+
+Assignment rule (greedy in-situ): a node inherits its inputs' domain while
+they agree; the first node whose inputs span domains (e.g. a cross-center
+``union``) — and anything above it — runs at the *consumer* domain.  This is
+exactly the paper's Fig. 3 decomposition.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+from repro.core import uri as urimod
+from repro.core.dag import Dag, Node
+from repro.core.errors import PlanError
+
+__all__ = ["SubTask", "Plan", "plan", "assign_domains", "CLIENT_DOMAIN"]
+
+CLIENT_DOMAIN = "client"
+
+
+@dataclass
+class SubTask:
+    id: str
+    domain: str  # "host:port" authority, or CLIENT_DOMAIN
+    dag: Dag
+    depends_on: list = field(default_factory=list)  # upstream subtask ids
+
+    @property
+    def result_resource(self) -> str:
+        """Catalog path under which this sub-task's stream is published."""
+        return f"/.flow/{self.id}"
+
+    def result_uri(self) -> str:
+        host, _, port = self.domain.partition(":")
+        return f"dacp://{host}:{port or urimod.DEFAULT_PORT}{self.result_resource}"
+
+    def to_json(self) -> dict:
+        return {
+            "id": self.id,
+            "domain": self.domain,
+            "dag": self.dag.to_json(),
+            "depends_on": list(self.depends_on),
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "SubTask":
+        return SubTask(d["id"], d["domain"], Dag.from_json(d["dag"]), list(d.get("depends_on", [])))
+
+
+@dataclass
+class Plan:
+    subtasks: list  # dependency order (upstream first); last one is the root
+    root_id: str
+
+    @property
+    def root(self) -> SubTask:
+        return next(s for s in self.subtasks if s.id == self.root_id)
+
+    def by_id(self, sid: str) -> SubTask:
+        return next(s for s in self.subtasks if s.id == sid)
+
+    def to_json(self) -> dict:
+        return {"root": self.root_id, "subtasks": [s.to_json() for s in self.subtasks]}
+
+    def to_bytes(self) -> bytes:
+        return json.dumps(self.to_json(), separators=(",", ":")).encode()
+
+    @staticmethod
+    def from_json(d: dict) -> "Plan":
+        return Plan([SubTask.from_json(s) for s in d["subtasks"]], d["root"])
+
+
+def assign_domains(dag: Dag, client_domain: str = CLIENT_DOMAIN) -> dict:
+    domains: dict = {}
+    for nid in dag.topological_order():
+        n = dag.nodes[nid]
+        if n.op in ("source", "exchange"):
+            domains[nid] = urimod.parse(n.params["uri"]).authority
+        else:
+            ins = {domains[i] for i in n.inputs}
+            domains[nid] = ins.pop() if len(ins) == 1 else client_domain
+    return domains
+
+
+def plan(dag: Dag, client_domain: str = CLIENT_DOMAIN) -> Plan:
+    dag.validate()
+    domains = assign_domains(dag, client_domain)
+    subtasks: dict = {}
+    order: list = []
+
+    def ensure_subtask(producer_id: str) -> SubTask:
+        sid = f"st_{producer_id}"
+        if sid in subtasks:
+            return subtasks[sid]
+        frag_nodes, deps = _fragment(producer_id)
+        st = SubTask(id=sid, domain=domains[producer_id], dag=Dag(frag_nodes, producer_id), depends_on=deps)
+        subtasks[sid] = st
+        order.append(st)
+        return st
+
+    def _fragment(root_id: str):
+        dom = domains[root_id]
+        nodes: dict = {}
+        deps: list = []
+
+        def walk(nid: str) -> None:
+            if nid in nodes:
+                return
+            node = dag.nodes[nid]
+            new_inputs = []
+            for i in node.inputs:
+                if domains[i] == dom:
+                    walk(i)
+                    new_inputs.append(i)
+                else:
+                    up = ensure_subtask(i)  # recurses; upstream registered first
+                    if up.id not in deps:
+                        deps.append(up.id)
+                    ex_id = f"ex__{up.id}__{nid}"
+                    nodes[ex_id] = Node(
+                        ex_id,
+                        "exchange",
+                        {"uri": up.result_uri(), "producer": up.id, "token": None},
+                        [],
+                    )
+                    new_inputs.append(ex_id)
+            nodes[nid] = Node(node.id, node.op, dict(node.params), new_inputs)
+
+        walk(root_id)
+        return nodes, deps
+
+    root = ensure_subtask(dag.output)
+    if not order or order[-1].id != root.id:
+        raise PlanError("planner produced inconsistent subtask order")
+    return Plan(subtasks=order, root_id=root.id)

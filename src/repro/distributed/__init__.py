@@ -1,0 +1,25 @@
+"""Distribution substrate: logical sharding rules, collectives, elasticity."""
+
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    Rules,
+    constrain,
+    current_mesh,
+    pspec_for,
+    sharding_for,
+    tree_pspecs,
+    tree_shardings,
+    use_mesh,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "Rules",
+    "constrain",
+    "current_mesh",
+    "pspec_for",
+    "sharding_for",
+    "tree_pspecs",
+    "tree_shardings",
+    "use_mesh",
+]

@@ -1,0 +1,94 @@
+"""Explicit collective patterns (shard_map) used beyond GSPMD's defaults.
+
+  * ``seq_sharded_decode_attention`` — flash-decoding across devices: each
+    shard of the "data" axis holds a slice of a long KV cache, computes
+    partial (m, l, acc) with the decode kernel/XLA path, and the partials
+    combine with one tiny psum — O(B·H·hd) bytes instead of re-gathering a
+    multi-GB cache (the long_500k optimization, EXPERIMENTS.md §Perf).
+  * ``compressed_psum`` — int8 wire-format gradient reduction for the slow
+    ``pod`` axis (error feedback handled by the caller).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["partial_decode_attention", "seq_sharded_decode_attention", "compressed_psum"]
+
+NEG_INF = -1e30
+
+
+def partial_decode_attention(q, k, v, valid_len):
+    """Partial softmax stats over a LOCAL kv shard.
+
+    q: (B, KV, G, hd); k/v: (B, KV, Tlocal, hd).  Returns (m, l, acc) with
+    shapes ((B,KV,G,1), (B,KV,G,1), (B,KV,G,hd)) — combinable across shards.
+    """
+    hd = q.shape[-1]
+    t = k.shape[2]
+    s = jnp.einsum("bngh,bnth->bngt", q, k).astype(jnp.float32) * hd**-0.5
+    mask = (jnp.arange(t) < valid_len)[None, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    acc = jnp.einsum("bngt,bnth->bngh", p.astype(v.dtype), v).astype(jnp.float32)
+    return m, l, acc
+
+
+def seq_sharded_decode_attention(mesh, q, k, v, index, seq_axis: str = "data"):
+    """Decode attention with the KV cache sharded over ``seq_axis``.
+
+    k/v: (B, KV, T, hd) global with T sharded; q replicated over seq_axis.
+    Combines shard partials with psum of (m-shifted l, acc) — the classic
+    flash-decoding merge.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    t_global = k.shape[2]
+    n_shards = mesh.shape[seq_axis]
+    t_local = t_global // n_shards
+
+    def local(q_l, k_l, v_l, index_l):
+        shard = jax.lax.axis_index(seq_axis)
+        start = shard * t_local
+        # positions valid within this shard: global position < index+1
+        valid = jnp.clip(index_l + 1 - start, 0, t_local)
+        m, l, acc = partial_decode_attention(q_l, k_l, v_l, valid)
+        m_glob = jax.lax.pmax(m, axis_name=seq_axis)
+        corr = jnp.exp(m - m_glob)
+        l_corr = l * corr
+        acc_corr = acc * corr
+        l_sum = jax.lax.psum(l_corr, axis_name=seq_axis)
+        acc_sum = jax.lax.psum(acc_corr, axis_name=seq_axis)
+        out = acc_sum / jnp.maximum(l_sum, 1e-30)
+        return out.astype(q_l.dtype)
+
+    other = tuple(a for a in mesh.axis_names if a != seq_axis)
+    qspec = P()
+    kvspec = P(None, None, seq_axis, None)
+    _ = other
+    return shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(qspec, kvspec, kvspec, P()),
+        out_specs=P(),
+        check_rep=False,
+    )(q, k, v, index)
+
+
+def compressed_psum(mesh, x, axis: str = "pod"):
+    """int8-wire psum across ``axis`` (per-tensor scale travels alongside)."""
+    from jax.experimental.shard_map import shard_map
+
+    def local(x_l):
+        scale = jnp.maximum(jnp.max(jnp.abs(x_l)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(x_l / scale), -127, 127).astype(jnp.int8)
+        # int8 payload crosses the axis; accumulate in int32 to avoid overflow
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name=axis)
+        scale_max = jax.lax.pmax(scale, axis_name=axis)
+        return total.astype(jnp.float32) * scale_max
+
+    return shard_map(local, mesh=mesh, in_specs=P(), out_specs=P(), check_rep=False)(x)

@@ -1,0 +1,152 @@
+"""Logical-axis sharding rules with divisibility-aware fallback.
+
+Models annotate every param/activation dim with a *logical* axis name
+(see ``repro.models.layers``).  This module maps logical names to mesh axes
+and builds ``NamedSharding``s / ``with_sharding_constraint``s.  An axis that
+does not evenly divide a dim is dropped (replicated) for that tensor — the
+property that lets ten heterogeneous architectures (MQA kv=1, odd vocabs,
+38-layer hybrids) all lower on one production mesh.
+
+The active (mesh, rules) pair is installed with ``use_mesh`` — model code
+calls ``constrain`` unconditionally; outside a mesh context it is a no-op,
+so the same model functions run on a laptop and on a 512-chip mesh.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["DEFAULT_RULES", "Rules", "use_mesh", "current_mesh", "constrain", "pspec_for", "sharding_for", "tree_shardings", "tree_pspecs"]
+
+# logical axis -> tuple of mesh axes (tried in order, first that divides wins)
+DEFAULT_RULES = {
+    # params
+    "embed": ("data",),          # FSDP / ZeRO-3
+    "heads": ("model",),         # TP
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "ffn": ("model",),
+    "experts": ("model",),       # EP
+    "vocab": ("model",),
+    "ssm_in": ("model",),
+    "ssm_heads": ("model",),
+    "state": (),
+    "layers": (),
+    "conv_k": (),
+    # activations
+    "act_batch": ("pod", "data"),
+    "act_seq": (),
+    "act_seq_sharded": ("data",),  # sequence parallelism (opt-in)
+    "act_embed": (),
+    "act_heads": ("model",),
+    "act_ffn": ("model",),
+    "act_experts": ("model",),
+    "act_vocab": ("model",),
+    # kv cache
+    "cache_batch": ("pod", "data"),
+    "cache_seq_long": ("data",),  # long-context: shard the cache over seq
+}
+
+
+class Rules(dict):
+    def merged(self, overrides: dict | None) -> "Rules":
+        r = Rules(self)
+        if overrides:
+            r.update(overrides)
+        return r
+
+
+_ctx = threading.local()
+
+
+@contextmanager
+def use_mesh(mesh: Mesh, rules: dict | None = None):
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, Rules(DEFAULT_RULES).merged(rules))
+    try:
+        with mesh:
+            yield
+    finally:
+        _ctx.state = prev
+
+
+def current_mesh():
+    st = getattr(_ctx, "state", None)
+    return st[0] if st else None
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def pspec_for(logical_axes, shape, mesh: Mesh, rules: dict) -> P:
+    """Build a PartitionSpec, dropping mesh axes that don't divide dims."""
+    sizes = _mesh_axis_sizes(mesh)
+    used: set = set()
+    parts = []
+    for dim, name in zip(shape, logical_axes):
+        if name is None:
+            parts.append(None)
+            continue
+        cand = rules.get(name, ())
+        if isinstance(cand, str):
+            cand = (cand,)
+        picked = []
+        prod = 1
+        for ax in cand:
+            if ax in used or ax not in sizes:
+                continue
+            if dim % (prod * sizes[ax]) == 0:
+                picked.append(ax)
+                prod *= sizes[ax]
+        for ax in picked:
+            used.add(ax)
+        if not picked:
+            parts.append(None)
+        elif len(picked) == 1:
+            parts.append(picked[0])
+        else:
+            parts.append(tuple(picked))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def sharding_for(logical_axes, shape, mesh: Mesh | None = None, rules: dict | None = None) -> NamedSharding:
+    st = getattr(_ctx, "state", None)
+    if mesh is None:
+        mesh, rules = st
+    elif rules is None:
+        rules = st[1] if st else Rules(DEFAULT_RULES)
+    return NamedSharding(mesh, pspec_for(logical_axes, shape, mesh, rules))
+
+
+def constrain(x, logical_axes):
+    """with_sharding_constraint by logical axes; no-op without a mesh ctx."""
+    st = getattr(_ctx, "state", None)
+    if st is None:
+        return x
+    mesh, rules = st
+    spec = pspec_for(logical_axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_pspecs(axes_tree, params_tree, mesh: Mesh, rules: dict | None = None):
+    rules = Rules(DEFAULT_RULES).merged(rules)
+
+    def one(axes, p):
+        if axes is None:
+            return P()
+        return pspec_for(axes, np.shape(p), mesh, rules)
+
+    return jax.tree.map(one, axes_tree, params_tree, is_leaf=lambda a: isinstance(a, tuple) or a is None)
+
+
+def tree_shardings(axes_tree, params_tree, mesh: Mesh, rules: dict | None = None):
+    specs = tree_pspecs(axes_tree, params_tree, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda s: isinstance(s, P))

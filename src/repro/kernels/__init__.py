@@ -1,0 +1,29 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU; Mosaic on TPU).
+
+    filter_select     — the paper's fused columnar Filter+Select (§IV-B)
+    flash_attention   — causal GQA prefill attention
+    decode_attention  — split-K single-token decode (seq-shardable)
+    ssd_scan          — Mamba2 SSD chunk scan
+    mlstm_chunk       — xLSTM chunkwise-parallel mLSTM
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.ops import (
+    decode_attention,
+    filter_select,
+    filter_select_tiles,
+    flash_attention,
+    mlstm_chunk,
+    ssd_scan,
+)
+
+__all__ = [
+    "ops",
+    "ref",
+    "decode_attention",
+    "filter_select",
+    "filter_select_tiles",
+    "flash_attention",
+    "mlstm_chunk",
+    "ssd_scan",
+]

@@ -1,0 +1,94 @@
+"""Decode attention (flash-decoding / split-K) — Pallas TPU kernel.
+
+One new query token attends to a long KV cache.  Grid = (B*KV, num_kv
+blocks); the kv axis is innermost and sequential, carrying fp32 partial
+(m, l, acc) in VMEM scratch — the single-token analogue of flash attention.
+The ``length`` operand masks positions ≥ the current cache fill (cache
+buffers are allocated at max_seq).
+
+This kernel is the sequence-sharded ``long_500k`` building block: under
+shard_map each device runs it over its KV shard and the partial (m, l, acc)
+triples combine with one tiny all-reduce (repro/distributed/collectives.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, tk):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    k_start = ki * tk
+
+    @pl.when(k_start < length)
+    def _step():
+        q = q_ref[0]  # (G, hd)
+        k = k_ref[0]  # (tk, hd)
+        v = v_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, length, block_k: int = 1024, interpret: bool = False):
+    """q: (B, KV, G, hd); k/v: (B, KV, T, hd); length: () int32."""
+    b, kv, g, hd = q.shape
+    t = k.shape[2]
+    tk = min(block_k, t)
+    assert t % tk == 0
+    grid = (b * kv, t // tk)
+    kernel = functools.partial(_kernel, scale=hd**-0.5, tk=tk)
+    qr = q.reshape(b * kv, g, hd)
+    kr = k.reshape(b * kv, t, hd)
+    vr = v.reshape(b * kv, t, hd)
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, g, hd), lambda bh, ki: (bh, 0, 0)),
+            pl.BlockSpec((1, tk, hd), lambda bh, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, tk, hd), lambda bh, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda bh, ki: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, qr, kr, vr)
+    return out.reshape(b, kv, g, hd)

@@ -1,0 +1,105 @@
+"""Flash attention (causal, GQA) — Pallas TPU kernel.
+
+Blocking: grid = (B*KV, G, num_q_blocks, num_kv_blocks), kv innermost (TPU
+grids iterate sequentially; the kv axis is the online-softmax accumulation
+axis).  Per step the kernel holds one (TQ, hd) q block, one (TK, hd) k/v
+block and fp32 scratch (m, l, acc) in VMEM:
+
+    VMEM ≈ TQ*hd*2 + 2*TK*hd*2 + TQ*TK*4 + TQ*(hd+2)*4  bytes
+    TQ=TK=512, hd=128:  ~1.6 MB  — well inside 16 MB/core, and all matmul
+    dims are multiples of 128 (MXU-aligned).
+
+Causality is handled two ways: blocks entirely above the diagonal are
+skipped with ``pl.when`` (no FLOPs, no DMA-use), the diagonal block applies
+an element mask.  HBM traffic is exactly q + k + v + out — the kernel never
+materializes (S, T) scores, which is what moves prefill attention from
+memory-bound to compute-bound on TPU (DESIGN.md §3.2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, tq, tk, causal):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * tq
+    k_start = ki * tk
+    run = (not causal) or (k_start <= q_start + tq - 1)  # any kv ≤ last q pos
+
+    @pl.when(jnp.asarray(run))
+    def _step():
+        q = q_ref[0, 0]  # (tq, hd)
+        k = k_ref[0]  # (tk, hd)
+        v = v_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+        s = s * scale
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 512, block_k: int = 512, interpret: bool = False):
+    """q: (B, KV, G, S, hd); k/v: (B, KV, T, hd) -> (B, KV, G, S, hd)."""
+    b, kv, g, s, hd = q.shape
+    t = k.shape[2]
+    tq = min(block_q, s)
+    tk = min(block_k, t)
+    assert s % tq == 0 and t % tk == 0, (s, tq, t, tk)
+    grid = (b * kv, g, s // tq, t // tk)
+    scale = hd**-0.5
+
+    kernel = functools.partial(_kernel, scale=scale, tq=tq, tk=tk, causal=causal)
+    qr = q.reshape(b * kv, g, s, hd)
+    kr = k.reshape(b * kv, t, hd)
+    vr = v.reshape(b * kv, t, hd)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, tq, hd), lambda bh, gi, qi, ki: (bh, gi, qi, 0)),
+            pl.BlockSpec((1, tk, hd), lambda bh, gi, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, tk, hd), lambda bh, gi, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tq, hd), lambda bh, gi, qi, ki: (bh, gi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv, g, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, kv, g, s, hd)

@@ -1,0 +1,114 @@
+"""Chunkwise-parallel mLSTM — Pallas TPU kernel (arXiv:2405.04517 App. A).
+
+Grid = (B*H, num_chunks), chunk axis sequential; scratch carries the
+stabilized matrix memory C (dk, dv), normalizer n (dk,) and max-state m ()
+across chunks.  Within a chunk of length L the recurrence becomes
+D-masked attention (two (L,L)/(L,d) matmuls) — exactly how the xLSTM paper
+parallelizes training — and the kernel's output matches the sequential
+recurrence oracle (``ref.mlstm_chunk_ref``) to fp32 tolerance.
+
+    w[i,j]   = Σ_{k≤i} logf_k − Σ_{k≤j} logf_k + logi_j   (j ≤ i)
+    b[i]     = Σ_{k≤i} logf_k + m_prev
+    m_i      = max(max_j w[i,j], b[i])
+    y_i      = [Σ_j e^{w_ij−m_i} (q_i·k_j) v_j + e^{b_i−m_i} q_i·C_prev]
+               / max(|q_i·n_i|·s, e^{−m_i})
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+import functools
+
+__all__ = ["mlstm_chunk"]
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, y_ref, c_scr, n_scr, m_scr, *, l, scale):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+
+    q = q_ref[0].astype(jnp.float32)  # (l, d)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    li = li_ref[0].astype(jnp.float32)  # (l,)
+    lf = lf_ref[0].astype(jnp.float32)
+    m_prev = m_scr[0, 0]
+    c_prev = c_scr[...]  # (d, d)
+    n_prev = n_scr[...]  # (d, 1)
+
+    cf = jnp.cumsum(lf)  # (l,)
+    w = cf[:, None] - cf[None, :] + li[None, :]  # (l, l)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    w = jnp.where(ii >= jj, w, NEG)
+    b = cf + m_prev  # (l,)
+    m_new = jnp.maximum(w.max(axis=1), b)  # (l,)
+    D = jnp.exp(w - m_new[:, None])
+    inter = jnp.exp(b - m_new)  # (l,)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32) * scale
+    sd = s * D
+    num = jax.lax.dot_general(sd, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    num = num + inter[:, None] * jax.lax.dot_general(q, c_prev, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32) * scale
+    nvec = jax.lax.dot_general(D, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    nvec = nvec + inter[:, None] * n_prev[None, :, 0]
+    den = jnp.abs(jnp.sum(q * nvec, axis=1)) * scale
+    den = jnp.maximum(den, jnp.exp(-m_new))
+    y_ref[0] = (num / den[:, None]).astype(y_ref.dtype)
+
+    # carry update (end of chunk)
+    m_carry = jnp.maximum(m_prev + cf[-1], jnp.max(cf[-1] - cf + li))
+    wk = jnp.exp(cf[-1] - cf + li - m_carry)  # (l,)
+    c_new = jnp.exp(m_prev + cf[-1] - m_carry) * c_prev + jax.lax.dot_general(
+        k * wk[:, None], v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    n_new = jnp.exp(m_prev + cf[-1] - m_carry) * n_prev[:, 0] + jnp.sum(k * wk[:, None], axis=0)
+    c_scr[...] = c_new
+    n_scr[...] = n_new[:, None]
+    m_scr[0, 0] = m_carry
+
+
+def mlstm_chunk(q, k, v, log_i, log_f, chunk: int = 256, interpret: bool = False):
+    """q/k/v: (b, s, h, d); log_i/log_f: (b, s, h) fp32 -> y (b, s, h, d) f32."""
+    b, s, h, d = q.shape
+    l = min(chunk, s)
+    assert s % l == 0
+    c = s // l
+    grid = (b * h, c)
+
+    def rsh(a):
+        return a.transpose(0, 2, 1, 3).reshape(b * h, c * l, d)
+
+    def rsh_g(a):
+        return a.transpose(0, 2, 1).reshape(b * h, c * l)
+
+    kernel = functools.partial(_kernel, l=l, scale=d**-0.5)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, l, d), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, l, d), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, l, d), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, l), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, l), lambda bh, ci: (bh, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, l, d), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, c * l, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((d, d), jnp.float32),
+            pltpu.VMEM((d, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rsh(q), rsh(k), rsh(v), rsh_g(log_i), rsh_g(log_f))
+    return y.reshape(b, h, s, d).transpose(0, 2, 1, 3)

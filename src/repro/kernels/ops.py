@@ -1,0 +1,71 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to auto: True off-TPU (the kernels execute via the
+Pallas interpreter for correctness tests on CPU), False on TPU (Mosaic
+compilation).  Wrappers also own the thin jnp epilogues (e.g. global
+compaction after per-tile filter_select).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_mod
+from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.filter_select import filter_select_tiles as _filter_select_tiles
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.mlstm_chunk import mlstm_chunk as _mlstm_chunk
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+
+__all__ = ["auto_interpret", "flash_attention", "decode_attention", "ssd_scan", "mlstm_chunk", "filter_select", "filter_select_tiles"]
+
+
+def auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 512, block_k: int = 512):
+    return _flash_attention(q, k, v, causal=causal, block_q=block_q, block_k=block_k, interpret=auto_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k, v, length, block_k: int = 1024):
+    return _decode_attention(q, k, v, length, block_k=block_k, interpret=auto_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, B, C, chunk: int = 256):
+    return _ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=auto_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def mlstm_chunk(q, k, v, log_i, log_f, chunk: int = 256):
+    return _mlstm_chunk(q, k, v, log_i, log_f, chunk=chunk, interpret=auto_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("pred_col", "threshold", "sel_cols", "tile"))
+def filter_select_tiles(table, pred_col: int, threshold: float, sel_cols: tuple, tile: int = 256):
+    return _filter_select_tiles(table, pred_col, threshold, list(sel_cols), tile=tile, interpret=auto_interpret())
+
+
+def filter_select(table, pred_col: int, threshold: float, sel_cols: tuple, tile: int = 256):
+    """Kernel + epilogue: returns (compacted (n_sel, D_sel) np-backed array,
+    n_sel).  The epilogue gathers each tile's front rows — O(n_sel) work."""
+    out, counts = filter_select_tiles(table, pred_col, threshold, tuple(sel_cols), tile)
+    out = jax.device_get(out)
+    counts = jax.device_get(counts)
+    parts = [out[i * tile : i * tile + int(c)] for i, c in enumerate(counts)]
+    import numpy as np
+
+    if not parts:
+        return np.zeros((0, len(sel_cols)), out.dtype), 0
+    cat = np.concatenate(parts, axis=0)
+    return cat, int(counts.sum())
+
+
+# re-export oracles next to the wrappers for test ergonomics
+ref = ref_mod

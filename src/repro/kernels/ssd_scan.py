@@ -1,0 +1,94 @@
+"""Mamba2 SSD chunk scan — Pallas TPU kernel (arXiv:2405.21060, §6).
+
+Grid = (B, H, num_chunks); the chunk axis is innermost/sequential and the
+running SSM state S (head_dim, d_state) fp32 lives in VMEM scratch across
+chunk steps.  Per chunk (length L):
+
+    dA   = dt ⊙ A[h]                       (VPU)
+    M    = tril(exp(segsum(dA))) ⊙ (C Bᵀ)  — one (L,L) matmul (MXU)
+    y    = (M ⊙ dt) x  +  exp(cumsum dA) · (C S_prevᵀ)   (two matmuls)
+    S    = exp(ΣdA) S_prev + (x·w)ᵀ B      (one matmul)
+
+Everything is (L×L)/(L×P)/(L×N) matmuls with L=chunk (256 default) — the
+SSD insight (scan → matmuls) mapped straight onto the MXU; only the O(P·N)
+state crosses chunk steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan"]
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_scr, *, l):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)  # (l, p)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)  # (l,)
+    A = a_ref[0]  # ()
+    Bc = b_ref[0, 0].astype(jnp.float32)  # (l, n)
+    Cc = c_ref[0, 0].astype(jnp.float32)  # (l, n)
+
+    dA = dt * A  # (l,) negative
+    cs = jnp.cumsum(dA)  # (l,)
+    # intra-chunk: M[i,j] = exp(cs_i - cs_j) for i>=j, times scores
+    diff = cs[:, None] - cs[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    decay = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+    scores = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    M = scores * decay * dt[None, :]
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    # inter-chunk: y += exp(cs_i) * C_i · S_prev^T
+    s_prev = s_scr[...]  # (p, n)
+    y_off = jax.lax.dot_general(Cc, s_prev, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    y = y + y_off * jnp.exp(cs)[:, None]
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+    # state update: S = exp(cs[-1]) S_prev + sum_j exp(cs[-1]-cs_j) dt_j x_j B_j^T
+    w = jnp.exp(cs[-1] - cs) * dt  # (l,)
+    s_new = s_prev * jnp.exp(cs[-1]) + jax.lax.dot_general(
+        x * w[:, None], Bc, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s_scr[...] = s_new
+
+
+def ssd_scan(x, dt, A, B, C, chunk: int = 256, interpret: bool = False):
+    """x: (b, s, h, p); dt: (b, s, h) fp32; A: (h,) fp32; B/C: (b, s, n).
+
+    Returns y: (b, s, h, p) fp32 (same contract as ``ref.ssd_scan_ref``'s y)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    l = min(chunk, s)
+    assert s % l == 0
+    c = s // l
+    xr = x.transpose(0, 2, 1, 3).reshape(b, h, c, l, p)
+    dtr = dt.transpose(0, 2, 1).reshape(b, h, c, l)
+    Br = B.reshape(b, c, l, n)
+    Cr = C.reshape(b, c, l, n)
+    kernel = functools.partial(_kernel, l=l)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b, h, c),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, l, p), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, l), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, 1, l, n), lambda bi, hi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, l, n), lambda bi, hi, ci: (bi, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, l, p), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, c, l, p), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xr, dtr, A.astype(jnp.float32), Br, Cr)
+    return y.reshape(b, h, s, p).transpose(0, 2, 1, 3)

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before any jax
+device query, and tests import this module under a 1-device runtime.
+
+Axes:
+    pod    — DCN/WAN boundary (slow links; only DP gradient traffic, which
+             the int8 compressed psum can ride — DESIGN.md §5/§6)
+    data   — DP/FSDP within a pod (batch + ZeRO param sharding)
+    model  — TP/EP within a pod (heads, ffn, experts, vocab)
+
+Scaling beyond the dry-run shape is a config change: (8, 32, 16) is 4096
+chips with the same rules.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_smoke_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,82 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch paper-lm-100m \
+        --steps 100 --corpus /data/docs.jsonl --ckpt /ckpts/run1
+
+On a real TPU deployment this binary runs once per host (jax.distributed
+initializes from the TPU environment); the mesh axes and shardings come
+from the same `repro.distributed.sharding` rules the dry-run verified.
+On this CPU container it runs the same code single-host.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-lm-100m")
+    ap.add_argument("--reduced", action="store_true", help="smoke-scale config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--micro", type=int, default=1, help="gradient accumulation microbatches")
+    ap.add_argument("--corpus", default=None, help="jsonl with a 'text' column; synthetic if absent")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.client import LocalNetwork
+    from repro.client.jax_adapter import JaxFeed
+    from repro.configs import get_config
+    from repro.data import training_dag, write_token_corpus
+    from repro.optim import AdamWConfig, warmup_cosine
+    from repro.server import FairdServer
+    from repro.train import Trainer
+
+    corpus = args.corpus
+    if corpus is None:
+        corpus = os.path.join(tempfile.mkdtemp(prefix="dacp_train_"), "docs.jsonl")
+        write_token_corpus(corpus, docs=1024)
+
+    net = LocalNetwork()
+    server = FairdServer("data:3101")
+    server.catalog.register_path("corpus", os.path.dirname(os.path.abspath(corpus)))
+    net.register(server)
+    client = net.client_for("data:3101")
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    dag = training_dag(
+        f"dacp://data:3101/corpus/{os.path.basename(corpus)}", seq_len=args.seq, batch_rows=args.batch
+    )
+
+    def feed():
+        return iter(
+            JaxFeed(lambda: client.cook(dag), token_column="tokens", seq_len=args.seq + 1, global_batch=args.batch)
+        )
+
+    trainer = Trainer(
+        cfg,
+        feed,
+        AdamWConfig(lr=warmup_cosine(args.lr, max(args.steps // 20, 1), args.steps)),
+        ckpt_dir=args.ckpt,
+        ckpt_every=args.ckpt_every,
+        n_micro=args.micro,
+        compress_grads=args.compress_grads,
+        log_every=5,
+    )
+    print(f"arch={cfg.name} params={cfg.n_params()/1e6:.1f}M resume_step={trainer.step}")
+    trainer.run(args.steps)
+    for m in trainer.metrics_log[-5:]:
+        print(f"step {m['step']:6d} loss={m['loss']:.4f} lr={m['lr']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: composable LM / MoE / SSM / xLSTM / enc-dec architectures."""
+
+from repro.models.model_zoo import ModelApi, build, input_axes, input_specs
+
+__all__ = ["ModelApi", "build", "input_axes", "input_specs"]

@@ -1,0 +1,193 @@
+"""GQA/MQA attention: training (full-seq), prefill (cache build), decode.
+
+Three execution paths:
+  * ``naive``    — materializes (S,T) scores; used for short seq / smoke.
+  * ``chunked``  — flash-style online-softmax over query×kv blocks in pure
+    jnp + lax.scan (the XLA path used in the dry-run; the Pallas kernel in
+    ``repro.kernels.flash_attention`` is the TPU-target twin).
+  * decode       — single-token attention against a (possibly seq-sharded)
+    KV cache; partial-softmax combines are GSPMD-handled reductions.
+
+Shapes: x (B,S,D); q (B,S,KV,G,hd); k/v (B,T,KV,hd).  G = q heads per kv
+head (grouped); KV axis carries the "kv_heads" logical axis so TP shards it
+when divisible (gemma MQA falls back to replicated KV, DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, norm_apply, rope_freqs
+
+__all__ = ["attn_init", "attn_apply", "attn_decode", "make_cache", "cache_axes"]
+
+NEG_INF = -1e9
+
+
+def attn_init(rng, cfg, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(rng, 6)
+    params, axes = {}, {}
+    bias_ax = ("heads", "head_dim") if cfg.qkv_bias else None
+    p, a = dense_init(ks[0], (d, h, hd), ("embed", "heads", "head_dim"), dtype, bias_axis=bias_ax)
+    params["wq"], axes["wq"] = p, a
+    bias_ax_kv = ("kv_heads", "head_dim") if cfg.qkv_bias else None
+    p, a = dense_init(ks[1], (d, kv, hd), ("embed", "kv_heads", "head_dim"), dtype, bias_axis=bias_ax_kv)
+    params["wk"], axes["wk"] = p, a
+    p, a = dense_init(ks[2], (d, kv, hd), ("embed", "kv_heads", "head_dim"), dtype, bias_axis=bias_ax_kv)
+    params["wv"], axes["wv"] = p, a
+    p, a = dense_init(ks[3], (h, hd, d), ("heads", "head_dim", "embed"), dtype, scale=(h * hd) ** -0.5)
+    params["wo"], axes["wo"] = p, a
+    if cfg.qk_norm:
+        params["q_norm"] = {"scale": jnp.ones((hd,), dtype=dtype)}
+        params["k_norm"] = {"scale": jnp.ones((hd,), dtype=dtype)}
+        axes["q_norm"] = {"scale": ("head_dim",)}
+        axes["k_norm"] = {"scale": ("head_dim",)}
+    return params, axes
+
+
+def _project_qkv(params, x, cfg, positions):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    g = h // kv
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"]["w"].astype(x.dtype))
+    k = jnp.einsum("bsd,dnk->bsnk", x, params["wk"]["w"].astype(x.dtype))
+    v = jnp.einsum("bsd,dnk->bsnk", x, params["wv"]["w"].astype(x.dtype))
+    if "b" in params["wq"]:
+        q = q + params["wq"]["b"].astype(x.dtype)
+        k = k + params["wk"]["b"].astype(x.dtype)
+        v = v + params["wv"]["b"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = norm_apply(params["q_norm"], q, "rmsnorm")
+        k = norm_apply(params["k_norm"], k, "rmsnorm")
+    if cfg.pos_emb == "rope":
+        inv, rot = rope_freqs(hd, cfg.partial_rotary, cfg.rope_theta)
+        q = apply_rope(q, positions, inv, rot)
+        k = apply_rope(k, positions, inv, rot)
+    q = q.reshape(b, s, kv, g, hd)
+    return q, k, v
+
+
+def _naive_attn(q, k, v, causal: bool, q_offset=0):
+    b, s, kv, g, hd = q.shape
+    t = k.shape[1]
+    scale = hd**-0.5
+    scores = jnp.einsum("bsngh,btnh->bngst", q, k).astype(jnp.float32) * scale
+    if causal:
+        qpos = jnp.arange(s) + q_offset
+        mask = qpos[:, None] >= jnp.arange(t)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bngst,btnh->bsngh", p, v)
+    return out.reshape(b, s, kv * g, hd)
+
+
+def _chunked_attn(q, k, v, causal: bool, chunk_q: int, chunk_kv: int):
+    """Online-softmax blocked attention (pure jnp; scan over kv blocks)."""
+    b, s, kvh, g, hd = q.shape
+    t = k.shape[1]
+    scale = hd**-0.5
+    nq = -(-s // chunk_q)
+    nk = -(-t // chunk_kv)
+    q = q.reshape(b, nq, chunk_q, kvh, g, hd)
+    k = k.reshape(b, nk, chunk_kv, kvh, hd)
+    v = v.reshape(b, nk, chunk_kv, kvh, hd)
+
+    def q_block(qi_and_block):
+        qi, qblk = qi_and_block  # (), (b, cq, kv, g, hd)
+
+        def kv_step(carry, kb):
+            m, l, acc = carry
+            ki, kblk, vblk = kb
+            sc = jnp.einsum("bsngh,btnh->bngst", qblk, kblk).astype(jnp.float32) * scale
+            if causal:
+                qpos = qi * chunk_q + jnp.arange(chunk_q)
+                kpos = ki * chunk_kv + jnp.arange(chunk_kv)
+                sc = jnp.where((qpos[:, None] >= kpos[None, :])[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum("bngst,btnh->bngsh", p.astype(qblk.dtype), vblk).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, chunk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, chunk_q), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, chunk_q, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step,
+            (m0, l0, a0),
+            (jnp.arange(nk), k.transpose(1, 0, 2, 3, 4), v.transpose(1, 0, 2, 3, 4)),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4)  # (b, cq, kv, g, hd)
+
+    outs = jax.lax.map(q_block, (jnp.arange(nq), q.transpose(1, 0, 2, 3, 4, 5)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, kvh * g, hd)
+    return out.astype(q.dtype)
+
+
+def attn_apply(params, x, cfg, positions=None, causal=True, impl="auto", chunk_q=1024, chunk_kv=2048, return_kv=False):
+    """Full-sequence attention (train / prefill)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if impl == "auto":
+        impl = "chunked" if s > 8192 else "naive"
+    if impl == "chunked":
+        cq = min(chunk_q, s)
+        ck = min(chunk_kv, k.shape[1])
+        if s % cq or k.shape[1] % ck:
+            out = _naive_attn(q, k, v, causal)  # ragged tails: smoke scale only
+        else:
+            out = _chunked_attn(q, k, v, causal, cq, ck)
+    else:
+        out = _naive_attn(q, k, v, causal)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"]["w"].astype(x.dtype))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+def make_cache(cfg, batch: int, max_seq: int, n_layers: int, dtype):
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    shape = (n_layers, batch, max_seq, kv, hd)
+    return {
+        "k": jnp.zeros(shape, dtype=dtype),
+        "v": jnp.zeros(shape, dtype=dtype),
+        "index": jnp.zeros((), dtype=jnp.int32),
+    }
+
+
+def cache_axes(long_context: bool = False):
+    seq_ax = "cache_seq_long" if long_context else None
+    return {
+        "k": ("layers", "cache_batch", seq_ax, "kv_heads", "head_dim"),
+        "v": ("layers", "cache_batch", seq_ax, "kv_heads", "head_dim"),
+        "index": (),
+    }
+
+
+def attn_decode(params, x, cfg, layer_k, layer_v, index):
+    """One-token decode: x (B,1,D), layer_k/v (B,T,KV,hd) already updated
+    elsewhere OR updated here.  Returns (y, new_k, new_v)."""
+    b = x.shape[0]
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    positions = jnp.full((b, 1), index, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions)
+    layer_k = jax.lax.dynamic_update_slice(layer_k, k_new.astype(layer_k.dtype), (0, index, 0, 0))
+    layer_v = jax.lax.dynamic_update_slice(layer_v, v_new.astype(layer_v.dtype), (0, index, 0, 0))
+    t = layer_k.shape[1]
+    scale = hd**-0.5
+    scores = jnp.einsum("bsngh,btnh->bngst", q, layer_k.astype(q.dtype)).astype(jnp.float32) * scale
+    mask = (jnp.arange(t) <= index)[None, None, None, None, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bngst,btnh->bsngh", p, layer_v.astype(q.dtype)).reshape(b, 1, cfg.n_heads, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"]["w"].astype(x.dtype))
+    return y, layer_k, layer_v

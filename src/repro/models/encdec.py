@@ -1,0 +1,230 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356).
+
+Conv audio frontend is a STUB per the assignment: the model consumes
+precomputed frame embeddings (B, enc_seq, d) — ``input_specs`` supplies
+them.  Encoder: bidirectional attention, learned positions, LayerNorm,
+GELU.  Decoder: causal self-attention + cross-attention over the encoder
+memory, learned positions (parameterized so the assigned 32k decode shapes
+lower — DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models.layers import (
+    Dtypes,
+    embed_tokens,
+    embedding_init,
+    logits_apply,
+    mlp_apply,
+    mlp_init,
+    norm_apply,
+    norm_init,
+)
+
+__all__ = ["init", "forward", "loss_fn", "prefill", "decode_step", "make_decode_cache", "decode_cache_axes", "DEC_POSITIONS"]
+
+ACT_AXES = ("act_batch", None, None)
+DEC_POSITIONS = 33024  # covers decode_32k (32768) + train_4k
+
+
+def _xattn_init(rng, cfg, dtype):
+    return attn.attn_init(rng, cfg, dtype)
+
+
+def _xattn_apply(params, x, memory_k, memory_v, cfg):
+    """Cross-attention: q from x (B,S,D); k/v precomputed (B,T,KV,hd)."""
+    b, s, _ = x.shape
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    g = cfg.n_heads // kv
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"]["w"].astype(x.dtype))
+    if "b" in params["wq"]:
+        q = q + params["wq"]["b"].astype(x.dtype)
+    q = q.reshape(b, s, kv, g, hd)
+    scale = hd**-0.5
+    scores = jnp.einsum("bsngh,btnh->bngst", q, memory_k.astype(q.dtype)).astype(jnp.float32) * scale
+    p = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bngst,btnh->bsngh", p, memory_v.astype(q.dtype)).reshape(b, s, cfg.n_heads, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]["w"].astype(x.dtype))
+
+
+def _memory_kv(params, memory, cfg):
+    k = jnp.einsum("bsd,dnk->bsnk", memory, params["wk"]["w"].astype(memory.dtype))
+    v = jnp.einsum("bsd,dnk->bsnk", memory, params["wv"]["w"].astype(memory.dtype))
+    if "b" in params["wk"]:
+        k = k + params["wk"]["b"].astype(memory.dtype)
+        v = v + params["wv"]["b"].astype(memory.dtype)
+    return k, v
+
+
+def init(rng, cfg):
+    dt = Dtypes.from_cfg(cfg)
+    n_enc, n_dec = cfg.encoder_layers, cfg.n_layers
+    keys = jax.random.split(rng, n_enc + n_dec + 6)
+    params: dict = {}
+    axes: dict = {}
+    params["embed"], axes["embed"] = embedding_init(keys[0], cfg.padded_vocab, cfg.d_model, dt.param)
+    params["enc_pos"] = (jax.random.normal(keys[1], (cfg.enc_seq, cfg.d_model)) * 0.01).astype(dt.param)
+    axes["enc_pos"] = (None, "embed")
+    params["dec_pos"] = (jax.random.normal(keys[2], (DEC_POSITIONS, cfg.d_model)) * 0.01).astype(dt.param)
+    axes["dec_pos"] = (None, "embed")
+    params["enc_final_norm"], axes["enc_final_norm"] = norm_init(cfg.d_model, cfg.norm, dt.param)
+    params["final_norm"], axes["final_norm"] = norm_init(cfg.d_model, cfg.norm, dt.param)
+
+    enc_p, enc_a = [], []
+    for li in range(n_enc):
+        k1, k2 = jax.random.split(keys[3 + li], 2)
+        lp, la = {}, {}
+        lp["ln1"], la["ln1"] = norm_init(cfg.d_model, cfg.norm, dt.param)
+        lp["attn"], la["attn"] = attn.attn_init(k1, cfg, dt.param)
+        lp["ln2"], la["ln2"] = norm_init(cfg.d_model, cfg.norm, dt.param)
+        lp["mlp"], la["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.glu, dt.param, bias=cfg.mlp_bias)
+        enc_p.append(lp)
+        enc_a.append(la)
+    params["encoder"], axes["encoder"] = enc_p, enc_a
+
+    dec_p, dec_a = [], []
+    for li in range(n_dec):
+        k1, k2, k3 = jax.random.split(keys[3 + n_enc + li], 3)
+        lp, la = {}, {}
+        lp["ln1"], la["ln1"] = norm_init(cfg.d_model, cfg.norm, dt.param)
+        lp["self_attn"], la["self_attn"] = attn.attn_init(k1, cfg, dt.param)
+        lp["ln_x"], la["ln_x"] = norm_init(cfg.d_model, cfg.norm, dt.param)
+        lp["cross_attn"], la["cross_attn"] = _xattn_init(k2, cfg, dt.param)
+        lp["ln2"], la["ln2"] = norm_init(cfg.d_model, cfg.norm, dt.param)
+        lp["mlp"], la["mlp"] = mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.glu, dt.param, bias=cfg.mlp_bias)
+        dec_p.append(lp)
+        dec_a.append(la)
+    params["decoder"], axes["decoder"] = dec_p, dec_a
+    return params, axes
+
+
+def encode(params, frames, cfg):
+    """frames: (B, enc_seq, d) stub embeddings -> encoder memory."""
+    x = frames + params["enc_pos"][None, : frames.shape[1], :].astype(frames.dtype)
+    x = constrain(x, ACT_AXES)
+    for lp in params["encoder"]:
+        h = attn.attn_apply(lp["attn"], norm_apply(lp["ln1"], x, cfg.norm), cfg, causal=False, impl="naive")
+        x = constrain(x + h, ACT_AXES)
+        x = x + mlp_apply(lp["mlp"], norm_apply(lp["ln2"], x, cfg.norm), cfg.act, cfg.glu)
+        x = constrain(x, ACT_AXES)
+    return norm_apply(params["enc_final_norm"], x, cfg.norm)
+
+
+def _decoder_stack(params, x, memory, cfg, collect_kv=None, mem_kv=None):
+    for li, lp in enumerate(params["decoder"]):
+        h = attn.attn_apply(lp["self_attn"], norm_apply(lp["ln1"], x, cfg.norm), cfg, impl=cfg.attn_impl, return_kv=collect_kv is not None)
+        if collect_kv is not None:
+            h, kv = h
+            collect_kv.append(kv)
+        x = constrain(x + h, ACT_AXES)
+        if mem_kv is not None:
+            mk, mv = mem_kv[li]
+        else:
+            mk, mv = _memory_kv(lp["cross_attn"], memory, cfg)
+        x = x + _xattn_apply(lp["cross_attn"], norm_apply(lp["ln_x"], x, cfg.norm), mk, mv, cfg)
+        x = constrain(x, ACT_AXES)
+        x = x + mlp_apply(lp["mlp"], norm_apply(lp["ln2"], x, cfg.norm), cfg.act, cfg.glu)
+        x = constrain(x, ACT_AXES)
+    return x
+
+
+def forward(params, batch, cfg):
+    """batch: {frames (B,T,d), tokens (B,S)} -> logits (B,S,V)."""
+    dt = Dtypes.from_cfg(cfg)
+    memory = encode(params, batch["frames"].astype(dt.act), cfg)
+    s = batch["tokens"].shape[1]
+    x = embed_tokens(params["embed"], batch["tokens"], dt.act)
+    x = x + params["dec_pos"][None, :s, :].astype(dt.act)
+    x = _decoder_stack(params, x, memory, cfg)
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = logits_apply(params["embed"], x, cfg.vocab_size)
+    return constrain(logits, ("act_batch", None, "act_vocab")), 0.0
+
+
+def loss_fn(params, batch, cfg):
+    from repro.models.lm import cross_entropy
+
+    logits, _ = forward(params, batch, cfg)
+    loss = cross_entropy(logits, batch["labels"], cfg.loss_impl)
+    return loss, {"ce": loss}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def make_decode_cache(cfg, batch: int, max_seq: int, dtype):
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    L = cfg.n_layers
+    return {
+        "k": jnp.zeros((L, batch, max_seq, kv, hd), dtype),
+        "v": jnp.zeros((L, batch, max_seq, kv, hd), dtype),
+        "cross_k": jnp.zeros((L, batch, cfg.enc_seq, kv, hd), dtype),
+        "cross_v": jnp.zeros((L, batch, cfg.enc_seq, kv, hd), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_cache_axes(cfg, long_context: bool = False):
+    seq_ax = "cache_seq_long" if long_context else None
+    return {
+        "k": ("layers", "cache_batch", seq_ax, "kv_heads", "head_dim"),
+        "v": ("layers", "cache_batch", seq_ax, "kv_heads", "head_dim"),
+        "cross_k": ("layers", "cache_batch", None, "kv_heads", "head_dim"),
+        "cross_v": ("layers", "cache_batch", None, "kv_heads", "head_dim"),
+        "index": (),
+    }
+
+
+def prefill(params, batch, cfg, max_seq: int):
+    dt = Dtypes.from_cfg(cfg)
+    memory = encode(params, batch["frames"].astype(dt.act), cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_tokens(params["embed"], tokens, dt.act)
+    x = x + params["dec_pos"][None, :s, :].astype(dt.act)
+    collect: list = []
+    mem_kv = [_memory_kv(lp["cross_attn"], memory, cfg) for lp in params["decoder"]]
+    x = _decoder_stack(params, x, memory, cfg, collect_kv=collect, mem_kv=mem_kv)
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = logits_apply(params["embed"], x[:, -1:, :], cfg.vocab_size)
+    pad = max_seq - s
+    ks = jnp.pad(jnp.stack([k for (k, v) in collect]), ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vs = jnp.pad(jnp.stack([v for (k, v) in collect]), ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {
+        "k": ks.astype(dt.act),
+        "v": vs.astype(dt.act),
+        "cross_k": jnp.stack([k for (k, v) in mem_kv]).astype(dt.act),
+        "cross_v": jnp.stack([v for (k, v) in mem_kv]).astype(dt.act),
+        "index": jnp.asarray(s, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params, token, cache, cfg):
+    dt = Dtypes.from_cfg(cfg)
+    x = embed_tokens(params["embed"], token, dt.act)
+    idx = cache["index"]
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], idx, 1, axis=0)[None, :, :].astype(dt.act)
+    new_k, new_v = [], []
+    for li, lp in enumerate(params["decoder"]):
+        h, k_l, v_l = attn.attn_decode(lp["self_attn"], norm_apply(lp["ln1"], x, cfg.norm), cfg, cache["k"][li], cache["v"][li], idx)
+        new_k.append(k_l)
+        new_v.append(v_l)
+        x = x + h
+        x = x + _xattn_apply(lp["cross_attn"], norm_apply(lp["ln_x"], x, cfg.norm), cache["cross_k"][li], cache["cross_v"][li], cfg)
+        x = x + mlp_apply(lp["mlp"], norm_apply(lp["ln2"], x, cfg.norm), cfg.act, cfg.glu)
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = logits_apply(params["embed"], x, cfg.vocab_size)
+    cache = {
+        "k": jnp.stack(new_k),
+        "v": jnp.stack(new_v),
+        "cross_k": cache["cross_k"],
+        "cross_v": cache["cross_v"],
+        "index": idx + 1,
+    }
+    return logits, cache

@@ -1,0 +1,186 @@
+"""Model substrate: parameterized layers with logical sharding axes.
+
+Convention: every ``*_init`` returns ``(params, axes)`` — two pytrees with
+identical structure.  ``axes`` leaves are tuples of *logical* axis names
+(or None) per tensor dim; ``repro.distributed.sharding`` maps logical names
+to mesh axes with divisibility-aware fallback, which is what lets ten
+heterogeneous architectures lower on the same production mesh.
+
+Logical axis vocabulary:
+    "embed"    — d_model dims of weights            → FSDP ("data")
+    "heads"    — q-head dim                         → TP ("model")
+    "kv_heads" — kv-head dim                        → TP ("model")
+    "head_dim" — per-head feature dim               → replicated
+    "ffn"      — hidden dim of MLP / experts        → TP ("model")
+    "experts"  — MoE expert dim                     → EP ("model")
+    "vocab"    — vocabulary dim                     → TP ("model")
+    "ssm_in"   — mamba/xlstm inner dim              → TP ("model")
+    "state"    — SSM state dim                      → replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Dtypes",
+    "dense_init",
+    "dense_apply",
+    "norm_init",
+    "norm_apply",
+    "embedding_init",
+    "embed_tokens",
+    "logits_apply",
+    "mlp_init",
+    "mlp_apply",
+    "rope_freqs",
+    "apply_rope",
+    "ACT",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Dtypes:
+    param: jnp.dtype
+    act: jnp.dtype
+
+    @staticmethod
+    def from_cfg(cfg) -> "Dtypes":
+        return Dtypes(param=jnp.dtype(cfg.param_dtype), act=jnp.dtype(cfg.dtype))
+
+
+ACT = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+def dense_init(rng, shape, axes, dtype, bias_axis=None, scale=None):
+    """General dense weight: ``shape``/``axes`` are aligned tuples."""
+    fan_in = int(np.prod([s for s, a in zip(shape, axes) if a == "embed"])) or shape[0]
+    std = scale if scale is not None else fan_in**-0.5
+    w = (jax.random.normal(rng, shape, dtype=jnp.float32) * std).astype(dtype)
+    params = {"w": w}
+    ax = {"w": tuple(axes)}
+    if bias_axis is not None:
+        out_dims = tuple(s for s, a in zip(shape, axes) if a in bias_axis)
+        params["b"] = jnp.zeros(out_dims, dtype=dtype)
+        ax["b"] = tuple(a for a in axes if a in bias_axis)
+    return params, ax
+
+
+def dense_apply(params, x, contract: str):
+    """einsum-style apply.  ``contract`` like 'bsd,dh->bsh'."""
+    y = jnp.einsum(contract, x, params["w"].astype(x.dtype))
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def norm_init(d: int, kind: str, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype=dtype)}, {"scale": ("embed",)}
+    return (
+        {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)},
+        {"scale": ("embed",), "bias": ("embed",)},
+    )
+
+
+def norm_apply(params, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+def embedding_init(rng, vocab: int, d: int, dtype):
+    w = (jax.random.normal(rng, (vocab, d), dtype=jnp.float32) * d**-0.5).astype(dtype)
+    return {"table": w}, {"table": ("vocab", "embed")}
+
+
+def embed_tokens(params, tokens, act_dtype):
+    return params["table"].astype(act_dtype)[tokens]
+
+
+def logits_apply(emb_params, x, real_vocab: int):
+    """Tied (or untied) output head with padded-vocab masking."""
+    table = emb_params["table"].astype(x.dtype)
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    pv = table.shape[0]
+    if pv != real_vocab:
+        neg = jnp.asarray(-1e9, dtype=logits.dtype)
+        mask = (jnp.arange(pv) >= real_vocab)[None, None, :]
+        logits = jnp.where(mask, neg, logits)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# MLP (plain or gated)
+# ---------------------------------------------------------------------------
+def mlp_init(rng, d: int, d_ff: int, glu: bool, dtype, bias: bool = False):
+    ks = jax.random.split(rng, 3)
+    params, axes = {}, {}
+    p, a = dense_init(ks[0], (d, d_ff), ("embed", "ffn"), dtype, bias_axis=("ffn",) if bias else None)
+    params["up"], axes["up"] = p, a
+    if glu:
+        p, a = dense_init(ks[1], (d, d_ff), ("embed", "ffn"), dtype)
+        params["gate"], axes["gate"] = p, a
+    p, a = dense_init(ks[2], (d_ff, d), ("ffn", "embed"), dtype, bias_axis=("embed",) if bias else None, scale=d_ff**-0.5)
+    params["down"], axes["down"] = p, a
+    return params, axes
+
+
+def mlp_apply(params, x, act: str, glu: bool):
+    h = dense_apply(params["up"], x, "bsd,df->bsf")
+    if glu:
+        g = dense_apply(params["gate"], x, "bsd,df->bsf")
+        h = ACT[act](g) * h
+    else:
+        h = ACT[act](h)
+    return dense_apply(params["down"], h, "bsf,fd->bsd")
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding (partial-rotary supported)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, rotary_frac: float, theta: float):
+    rot = int(head_dim * rotary_frac) // 2 * 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float64) / rot))
+    return jnp.asarray(inv, dtype=jnp.float32), rot
+
+
+def apply_rope(x, positions, inv_freq, rot: int):
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    if rot == 0:
+        return x
+    pos = positions.astype(jnp.float32)
+    ang = pos[..., None] * inv_freq  # (B,S,rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    while cos.ndim < x.ndim:  # broadcast over head dim
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2 :]
+    cos = cos.astype(x.dtype)
+    sin = sin.astype(x.dtype)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rotated, xp], axis=-1) if rot < x.shape[-1] else rotated

@@ -1,0 +1,400 @@
+"""Decoder-only LM assembly for all block patterns (attn / zamba2 / xlstm).
+
+Pure-function API:
+    init(rng, cfg)                          -> (params, axes)
+    forward(params, tokens, cfg)            -> (logits, aux)
+    loss_fn(params, batch, cfg)             -> (loss, metrics)
+    prefill(params, tokens, cfg, max_seq)   -> (last_logits, cache)
+    decode_step(params, token, cache, cfg)  -> (logits, cache)
+
+Layers are python-unrolled (per-layer param list): HLO carries every layer
+explicitly, which keeps compiled.cost_analysis() faithful for the roofline
+(lax.scan bodies are costed once by XLA — DESIGN.md §Roofline methodology).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xl
+from repro.models.layers import (
+    Dtypes,
+    embed_tokens,
+    embedding_init,
+    logits_apply,
+    mlp_apply,
+    mlp_init,
+    norm_apply,
+    norm_init,
+)
+from repro.models.moe import moe_apply, moe_init
+
+__all__ = ["init", "forward", "loss_fn", "prefill", "decode_step", "make_decode_cache", "decode_cache_axes"]
+
+ACT_AXES = ("act_batch", None, None)
+
+
+def _is_moe_layer(cfg, li: int) -> bool:
+    return cfg.moe is not None and (li + 1) % cfg.moe.moe_every == 0
+
+
+def _is_slstm(cfg, li: int) -> bool:
+    return (li + 1) % cfg.slstm_every == 0
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init(rng, cfg):
+    dt = Dtypes.from_cfg(cfg)
+    keys = jax.random.split(rng, cfg.n_layers + 8)
+    params: dict = {}
+    axes: dict = {}
+    params["embed"], axes["embed"] = embedding_init(keys[0], cfg.padded_vocab, cfg.d_model, dt.param)
+    if not cfg.tie_embeddings:
+        params["embed_out"], axes["embed_out"] = embedding_init(keys[1], cfg.padded_vocab, cfg.d_model, dt.param)
+    params["final_norm"], axes["final_norm"] = norm_init(cfg.d_model, cfg.norm, dt.param)
+
+    layers_p, layers_a = [], []
+    if cfg.block_pattern == "attn":
+        for li in range(cfg.n_layers):
+            k1, k2, k3 = jax.random.split(keys[2 + li], 3)
+            lp, la = {}, {}
+            lp["ln1"], la["ln1"] = norm_init(cfg.d_model, cfg.norm, dt.param)
+            lp["attn"], la["attn"] = attn.attn_init(k1, cfg, dt.param)
+            lp["ln2"], la["ln2"] = norm_init(cfg.d_model, cfg.norm, dt.param)
+            if _is_moe_layer(cfg, li):
+                lp["moe"], la["moe"] = moe_init(k2, cfg, dt.param)
+            else:
+                lp["mlp"], la["mlp"] = mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.glu, dt.param, bias=cfg.mlp_bias)
+            layers_p.append(lp)
+            layers_a.append(la)
+    elif cfg.block_pattern == "zamba2":
+        for li in range(cfg.n_layers):
+            k1 = keys[2 + li]
+            lp, la = {}, {}
+            lp["ln"], la["ln"] = norm_init(cfg.d_model, cfg.norm, dt.param)
+            lp["mamba"], la["mamba"] = ssm_mod.mamba_init(k1, cfg, dt.param)
+            layers_p.append(lp)
+            layers_a.append(la)
+        ka, kb = jax.random.split(keys[-1], 2)
+        sp, sa = {}, {}
+        sp["ln_a"], sa["ln_a"] = norm_init(cfg.d_model, cfg.norm, dt.param)
+        sp["attn"], sa["attn"] = attn.attn_init(ka, cfg, dt.param)
+        sp["ln_m"], sa["ln_m"] = norm_init(cfg.d_model, cfg.norm, dt.param)
+        sp["mlp"], sa["mlp"] = mlp_init(kb, cfg.d_model, cfg.d_ff, cfg.glu, dt.param)
+        params["shared_attn"], axes["shared_attn"] = sp, sa
+    elif cfg.block_pattern == "xlstm":
+        for li in range(cfg.n_layers):
+            k1 = keys[2 + li]
+            lp, la = {}, {}
+            lp["ln"], la["ln"] = norm_init(cfg.d_model, cfg.norm, dt.param)
+            if _is_slstm(cfg, li):
+                lp["slstm"], la["slstm"] = xl.slstm_init(k1, cfg, dt.param)
+            else:
+                lp["mlstm"], la["mlstm"] = xl.mlstm_init(k1, cfg, dt.param)
+            layers_p.append(lp)
+            layers_a.append(la)
+    else:
+        raise ValueError(f"unknown block pattern {cfg.block_pattern}")
+    params["layers"], axes["layers"] = layers_p, layers_a
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill body)
+# ---------------------------------------------------------------------------
+_AXES_CACHE: dict = {}
+
+
+def _param_axes(cfg):
+    """The logical-axes tree for cfg's params (cheap: eval_shape, cached)."""
+    if cfg not in _AXES_CACHE:
+        cap = {}
+
+        def f(k):
+            p, a = init(k, cfg)
+            cap["a"] = a
+            return p
+
+        jax.eval_shape(f, jax.ShapeDtypeStruct((2,), jnp.uint32))
+        _AXES_CACHE[cfg] = cap["a"]
+    return _AXES_CACHE[cfg]
+
+
+def _is_axes_leaf(a):
+    return a is None or (isinstance(a, tuple) and all(x is None or isinstance(x, str) for x in a))
+
+
+def _gather_weights(tree, axes_tree):
+    """Explicit ZeRO-3 unshard-at-use: re-constrain every weight to its
+    TP-only layout ('model' axes kept, 'data'/'pod' dropped).  GSPMD then
+    emits one small weight all-gather per use instead of all-reducing
+    activation-sized partial sums over the FSDP axis (§Perf)."""
+    from jax.sharding import NamedSharding
+
+    from repro.distributed.sharding import current_mesh, pspec_for
+
+    mesh = current_mesh()
+    if mesh is None:
+        return tree
+    from repro.distributed.sharding import DEFAULT_RULES
+
+    tp_rules = {}
+    for k, v in DEFAULT_RULES.items():
+        axes = (v,) if isinstance(v, str) else tuple(v)
+        tp_rules[k] = tuple(a for a in axes if a == "model")
+
+    leaves, treedef = jax.tree.flatten(tree)
+    axes_leaves = jax.tree.flatten(axes_tree, is_leaf=_is_axes_leaf)[0]
+    out = []
+    for p, ax in zip(leaves, axes_leaves):
+        if ax is None or not hasattr(p, "ndim"):
+            out.append(p)
+            continue
+        spec = pspec_for(ax, p.shape, mesh, tp_rules)
+        out.append(jax.lax.with_sharding_constraint(p, NamedSharding(mesh, spec)))
+    return jax.tree.unflatten(treedef, out)
+
+
+def _maybe_gather(cfg, subtree, axes_subtree):
+    if not cfg.zero3_gather:
+        return subtree
+    return _gather_weights(subtree, axes_subtree)
+
+
+def _remat_wrap(cfg, fn):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        # save matmul outputs; recompute only cheap elementwise chains in bwd
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def _attn_block(lp, x, cfg, li, remat: bool, collect_kv=None, lp_axes=None):
+    def body(x):
+        lp_ = _maybe_gather(cfg, lp, lp_axes) if lp_axes is not None else lp
+        h = attn.attn_apply(
+            lp_["attn"], norm_apply(lp_["ln1"], x, cfg.norm), cfg, impl=cfg.attn_impl, return_kv=collect_kv is not None
+        )
+        if collect_kv is not None:
+            h, kv = h
+            collect_kv.append(kv)
+        x = x + h
+        x = constrain(x, ACT_AXES)
+        hin = norm_apply(lp_["ln2"], x, cfg.norm)
+        if "moe" in lp_:
+            y, aux = moe_apply(lp_["moe"], hin, cfg, cfg.act)
+        else:
+            y, aux = mlp_apply(lp_["mlp"], hin, cfg.act, cfg.glu), 0.0
+        x = x + y
+        return constrain(x, ACT_AXES), aux
+
+    if remat and collect_kv is None:
+        return _remat_wrap(cfg, body)(x)
+    return body(x)
+
+
+def forward(params, tokens, cfg, collect_cache=None):
+    """tokens: (B, S) -> (logits (B,S,V), aux_losses)."""
+    dt = Dtypes.from_cfg(cfg)
+    x = embed_tokens(params["embed"], tokens, dt.act)
+    x = constrain(x, ACT_AXES)
+    if cfg.pos_emb == "learned":
+        # whisper-style learned positions handled in encdec; decoder-only
+        # learned-pos archs would add a table here (none assigned).
+        pass
+    aux_total = 0.0
+    gather_axes = _param_axes(cfg) if cfg.zero3_gather else None
+    if cfg.block_pattern == "attn":
+        for li, lp in enumerate(params["layers"]):
+            kvs = collect_cache["kv"] if collect_cache is not None else None
+            lp_axes = gather_axes["layers"][li] if gather_axes is not None else None
+            x, aux = _attn_block(lp, x, cfg, li, cfg.remat, collect_kv=kvs, lp_axes=lp_axes)
+            aux_total = aux_total + aux
+    elif cfg.block_pattern == "zamba2":
+        sp = params["shared_attn"]
+        for li, lp in enumerate(params["layers"]):
+            if collect_cache is not None:
+                y, st = ssm_mod.mamba_apply(lp["mamba"], norm_apply(lp["ln"], x, cfg.norm), cfg, return_state=True)
+                collect_cache["ssm"].append(st)
+            else:
+                fn = lambda x, lp=lp: ssm_mod.mamba_apply(lp["mamba"], norm_apply(lp["ln"], x, cfg.norm), cfg)
+                if cfg.remat:
+                    fn = _remat_wrap(cfg, fn)
+                y = fn(x)
+            x = constrain(x + y, ACT_AXES)
+            if (li + 1) % cfg.attn_every == 0:
+                kvs = collect_cache["kv"] if collect_cache is not None else None
+                h = attn.attn_apply(sp["attn"], norm_apply(sp["ln_a"], x, cfg.norm), cfg, impl=cfg.attn_impl, return_kv=kvs is not None)
+                if kvs is not None:
+                    h, kv = h
+                    kvs.append(kv)
+                x = constrain(x + h, ACT_AXES)
+                x = x + mlp_apply(sp["mlp"], norm_apply(sp["ln_m"], x, cfg.norm), cfg.act, cfg.glu)
+                x = constrain(x, ACT_AXES)
+    elif cfg.block_pattern == "xlstm":
+        for li, lp in enumerate(params["layers"]):
+            xin = norm_apply(lp["ln"], x, cfg.norm)
+            if _is_slstm(cfg, li):
+                if collect_cache is not None:
+                    y, st = xl.slstm_apply(lp["slstm"], xin, cfg, return_state=True)
+                    collect_cache["xlstm"].append(st)
+                else:
+                    y = xl.slstm_apply(lp["slstm"], xin, cfg)
+            else:
+                if collect_cache is not None:
+                    y, st = xl.mlstm_apply(lp["mlstm"], xin, cfg, return_state=True)
+                    collect_cache["xlstm"].append(st)
+                else:
+                    y = xl.mlstm_apply(lp["mlstm"], xin, cfg)
+            x = constrain(x + y, ACT_AXES)
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    emb = params["embed_out"] if not cfg.tie_embeddings else params["embed"]
+    logits = logits_apply(emb, x, cfg.vocab_size)
+    logits = constrain(logits, ("act_batch", None, "act_vocab"))
+    return logits, aux_total
+
+
+def cross_entropy(logits, labels, impl: str = "logp"):
+    """Mean token cross-entropy.  ``lse`` avoids materializing the full fp32
+    log-softmax tensor (B,S,V): loss = logsumexp(z) − z[label], so the only
+    fp32 (B,S,V)-sized op is the logsumexp reduction input — the gather runs
+    on the original logits."""
+    labels = labels[..., None].astype(jnp.int32)
+    if impl == "lse":
+        z32 = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(z32, axis=-1)
+        picked = jnp.take_along_axis(z32, labels, axis=-1)[..., 0]
+        return jnp.mean(lse - picked)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels, axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def loss_fn(params, batch, cfg):
+    logits, aux = forward(params, batch["tokens"], cfg)
+    ce = cross_entropy(logits, batch["labels"], cfg.loss_impl)
+    loss = ce
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+def make_decode_cache(cfg, batch: int, max_seq: int, dtype):
+    if cfg.block_pattern == "attn":
+        c = attn.make_cache(cfg, batch, max_seq, cfg.n_layers, dtype)
+        return c
+    if cfg.block_pattern == "zamba2":
+        n_attn = cfg.n_layers // cfg.attn_every
+        return {
+            "ssm": ssm_mod.make_ssm_cache(cfg, batch, cfg.n_layers, dtype),
+            "kv": attn.make_cache(cfg, batch, max_seq, n_attn, dtype),
+        }
+    if cfg.block_pattern == "xlstm":
+        return {"xlstm": xl.make_xlstm_cache(cfg, batch, dtype), "index": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.block_pattern)
+
+
+def decode_cache_axes(cfg, long_context: bool = False):
+    if cfg.block_pattern == "attn":
+        return attn.cache_axes(long_context)
+    if cfg.block_pattern == "zamba2":
+        return {"ssm": ssm_mod.ssm_cache_axes(), "kv": attn.cache_axes(long_context)}
+    if cfg.block_pattern == "xlstm":
+        return {"xlstm": xl.xlstm_cache_axes(cfg), "index": ()}
+    raise ValueError(cfg.block_pattern)
+
+
+def decode_step(params, token, cache, cfg):
+    """token: (B,1) int32.  Returns (logits (B,1,V), new cache)."""
+    dt = Dtypes.from_cfg(cfg)
+    x = embed_tokens(params["embed"], token, dt.act)
+    if cfg.block_pattern == "attn":
+        idx = cache["index"]
+        new_k, new_v = [], []
+        for li, lp in enumerate(params["layers"]):
+            h, k_l, v_l = attn.attn_decode(lp["attn"], norm_apply(lp["ln1"], x, cfg.norm), cfg, cache["k"][li], cache["v"][li], idx)
+            new_k.append(k_l)
+            new_v.append(v_l)
+            x = x + h
+            hin = norm_apply(lp["ln2"], x, cfg.norm)
+            if "moe" in lp:
+                y, _ = moe_apply(lp["moe"], hin, cfg, cfg.act)
+            else:
+                y = mlp_apply(lp["mlp"], hin, cfg.act, cfg.glu)
+            x = x + y
+        cache = {"k": jnp.stack(new_k), "v": jnp.stack(new_v), "index": idx + 1}
+    elif cfg.block_pattern == "zamba2":
+        sp = params["shared_attn"]
+        idx = cache["kv"]["index"]
+        new_ssm = {k: [] for k in ("ssm", "conv_x", "conv_B", "conv_C")}
+        new_k, new_v = [], []
+        ai = 0
+        for li, lp in enumerate(params["layers"]):
+            layer_cache = {k: cache["ssm"][k][li] for k in new_ssm}
+            y, st = ssm_mod.mamba_decode(lp["mamba"], norm_apply(lp["ln"], x, cfg.norm), cfg, layer_cache)
+            for k in new_ssm:
+                new_ssm[k].append(st[k])
+            x = x + y
+            if (li + 1) % cfg.attn_every == 0:
+                h, k_l, v_l = attn.attn_decode(sp["attn"], norm_apply(sp["ln_a"], x, cfg.norm), cfg, cache["kv"]["k"][ai], cache["kv"]["v"][ai], idx)
+                new_k.append(k_l)
+                new_v.append(v_l)
+                x = x + h
+                x = x + mlp_apply(sp["mlp"], norm_apply(sp["ln_m"], x, cfg.norm), cfg.act, cfg.glu)
+                ai += 1
+        cache = {
+            "ssm": {k: jnp.stack(v) for k, v in new_ssm.items()},
+            "kv": {"k": jnp.stack(new_k), "v": jnp.stack(new_v), "index": idx + 1},
+        }
+    elif cfg.block_pattern == "xlstm":
+        new_states = []
+        for li, lp in enumerate(params["layers"]):
+            xin = norm_apply(lp["ln"], x, cfg.norm)
+            if _is_slstm(cfg, li):
+                y, st = xl.slstm_decode(lp["slstm"], xin, cfg, cache["xlstm"][li])
+            else:
+                y, st = xl.mlstm_decode(lp["mlstm"], xin, cfg, cache["xlstm"][li])
+            new_states.append(st)
+            x = x + y
+        cache = {"xlstm": new_states, "index": cache["index"] + 1}
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    emb = params["embed_out"] if not cfg.tie_embeddings else params["embed"]
+    logits = logits_apply(emb, x, cfg.vocab_size)
+    return logits, cache
+
+
+def prefill(params, tokens, cfg, max_seq: int):
+    """Run the full prompt, build the decode cache, return last logits."""
+    dt = Dtypes.from_cfg(cfg)
+    b, s = tokens.shape
+    collect: dict = {"kv": [], "ssm": [], "xlstm": []}
+    logits, _ = forward(params, tokens, cfg, collect_cache=collect)
+    last = logits[:, -1:, :]
+    if cfg.block_pattern == "attn":
+        ks = jnp.stack([k for (k, v) in collect["kv"]])  # (L,B,S,KV,hd)
+        vs = jnp.stack([v for (k, v) in collect["kv"]])
+        pad = max_seq - s
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = {"k": ks.astype(dt.act), "v": vs.astype(dt.act), "index": jnp.asarray(s, jnp.int32)}
+    elif cfg.block_pattern == "zamba2":
+        ssm_stack = {k: jnp.stack([st[k] for st in collect["ssm"]]) for k in collect["ssm"][0]}
+        ks = jnp.stack([k for (k, v) in collect["kv"]])
+        vs = jnp.stack([v for (k, v) in collect["kv"]])
+        pad = max_seq - s
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = {"ssm": ssm_stack, "kv": {"k": ks.astype(dt.act), "v": vs.astype(dt.act), "index": jnp.asarray(s, jnp.int32)}}
+    else:  # xlstm
+        cache = {"xlstm": collect["xlstm"], "index": jnp.asarray(s, jnp.int32)}
+    return last, cache

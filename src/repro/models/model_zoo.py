@@ -1,0 +1,101 @@
+"""Unified model API over all assigned architectures.
+
+    api = build(cfg)
+    params, axes = api.init(rng)
+    loss, metrics = api.loss_fn(params, batch)
+    last, cache   = api.prefill(params, batch, max_seq)
+    logits, cache = api.decode_step(params, token, cache)
+
+``input_specs(cfg, shape)`` produces ShapeDtypeStruct stand-ins (plus logical
+axes) for every input of the step being lowered — the dry-run pattern: no
+allocation, weak-type-correct, shardable.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import encdec, lm
+
+__all__ = ["ModelApi", "build", "input_specs", "input_axes"]
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    cfg: ArchConfig
+    init: Callable
+    forward: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    make_decode_cache: Callable
+    decode_cache_axes: Callable
+
+
+def build(cfg: ArchConfig) -> ModelApi:
+    mod = encdec if cfg.is_encdec else lm
+    if cfg.is_encdec:
+        return ModelApi(
+            cfg=cfg,
+            init=lambda rng: mod.init(rng, cfg),
+            forward=lambda p, batch: mod.forward(p, batch, cfg),
+            loss_fn=lambda p, batch: mod.loss_fn(p, batch, cfg),
+            prefill=lambda p, batch, max_seq: mod.prefill(p, batch, cfg, max_seq),
+            decode_step=lambda p, tok, cache: mod.decode_step(p, tok, cache, cfg),
+            make_decode_cache=lambda b, m, dt: mod.make_decode_cache(cfg, b, m, dt),
+            decode_cache_axes=lambda long=False: mod.decode_cache_axes(cfg, long),
+        )
+    return ModelApi(
+        cfg=cfg,
+        init=lambda rng: mod.init(rng, cfg),
+        forward=lambda p, batch: mod.forward(p, batch["tokens"], cfg),
+        loss_fn=lambda p, batch: mod.loss_fn(p, batch, cfg),
+        prefill=lambda p, batch, max_seq: mod.prefill(p, batch["tokens"], cfg, max_seq),
+        decode_step=lambda p, tok, cache: mod.decode_step(p, tok, cache, cfg),
+        make_decode_cache=lambda b, m, dt: mod.make_decode_cache(cfg, b, m, dt),
+        decode_cache_axes=lambda long=False: mod.decode_cache_axes(cfg, long),
+    )
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, act_dtype=None) -> dict:
+    """ShapeDtypeStruct stand-ins for the step lowered at this shape."""
+    act = jnp.dtype(act_dtype or cfg.dtype)
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {"tokens": _sds((b, s), jnp.int32), "labels": _sds((b, s), jnp.int32)}
+        if cfg.is_encdec:
+            specs["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), act)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((b, s), jnp.int32)}
+        if cfg.is_encdec:
+            specs["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), act)
+        return specs
+    if shape.kind == "decode":
+        api = build(cfg)
+        cache = jax.eval_shape(lambda: api.make_decode_cache(b, s, act))
+        return {"token": _sds((b, 1), jnp.int32), "cache": cache}
+    raise ValueError(shape.kind)
+
+
+def input_axes(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Logical axes matching input_specs (for in_shardings)."""
+    if shape.kind in ("train", "prefill"):
+        ax = {"tokens": ("act_batch", None)}
+        if shape.kind == "train":
+            ax["labels"] = ("act_batch", None)
+        if cfg.is_encdec:
+            ax["frames"] = ("act_batch", None, None)
+        return ax
+    api = build(cfg)
+    long = shape.seq_len > 100_000
+    return {"token": ("act_batch", None), "cache": api.decode_cache_axes(long)}

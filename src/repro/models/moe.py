@@ -1,0 +1,168 @@
+"""Mixture-of-Experts FFN with static-capacity sort-free dispatch (EP-ready).
+
+Routing: softmax router → top-k → position-in-expert via masked cumsum →
+scatter into a (batch, experts, capacity, d) buffer → batched expert GEMMs →
+gather + weighted combine.  Experts carry the "experts" logical axis (EP over
+the "model" mesh axis); the dispatch scatter lowers to a GSPMD all-to-all-ish
+exchange.  Capacity overflow drops tokens (standard GShard semantics) and is
+countable for monitoring; the router aux loss (Switch-style load balancing)
+is returned to the caller.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import ACT, dense_init
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(rng, cfg, dtype):
+    d = cfg.d_model
+    m = cfg.moe
+    ks = jax.random.split(rng, 5)
+    params, axes = {}, {}
+    p, a = dense_init(ks[0], (d, m.n_experts), ("embed", "experts"), dtype)
+    params["router"], axes["router"] = p, a
+    e, f = m.n_experts, m.d_ff_expert
+
+    def expert_w(k, shape, ax, scale=None):
+        w = (jax.random.normal(k, shape, dtype=jnp.float32) * (scale or shape[1] ** -0.5)).astype(dtype)
+        return {"w": w}, {"w": ax}
+
+    p, a = expert_w(ks[1], (e, d, f), ("experts", "embed", "ffn"))
+    params["up"], axes["up"] = p, a
+    p, a = expert_w(ks[2], (e, d, f), ("experts", "embed", "ffn"))
+    params["gate"], axes["gate"] = p, a
+    p, a = expert_w(ks[3], (e, f, d), ("experts", "ffn", "embed"), scale=f**-0.5)
+    params["down"], axes["down"] = p, a
+    if m.n_shared_experts:
+        from repro.models.layers import mlp_init
+
+        p, a = mlp_init(ks[4], d, f * m.n_shared_experts, True, dtype)
+        params["shared"], axes["shared"] = p, a
+    return params, axes
+
+
+def moe_apply(params, x, cfg, act: str):
+    if getattr(cfg, "moe_dispatch", "scatter") == "einsum":
+        return moe_apply_einsum(params, x, cfg, act)
+    return moe_apply_scatter(params, x, cfg, act)
+
+
+def moe_apply_einsum(params, x, cfg, act: str):
+    """GShard-style one-hot matmul dispatch (arXiv:2006.16668).
+
+    Tokens regroup into (G, g) with g = moe.group_size so the dispatch
+    tensor (G, g, E, C) stays O(tokens·g·k·cf) — pure einsums end to end,
+    which GSPMD partitions into all-to-alls instead of the gathered scatter
+    of the baseline path (the hillclimb hypothesis; EXPERIMENTS.md §Perf).
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.n_experts, m.top_k
+    tokens = b * s
+    g = min(m.group_size, tokens)
+    assert tokens % g == 0, (tokens, g)
+    G = tokens // g
+    cap = max(1, int((g * k / e) * m.capacity_factor + 0.9999))
+
+    xg = x.reshape(G, g, d)
+    xg = constrain(xg, ("act_batch", None, None))
+    logits = jnp.einsum("Ggd,de->Gge", xg, params["router"]["w"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, k)  # (G,g,k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    onehot_top1 = jax.nn.one_hot(gate_i[..., 0], e, dtype=jnp.float32)
+    aux = e * jnp.mean(jnp.mean(onehot_top1, axis=(0, 1)) * jnp.mean(probs, axis=(0, 1)))
+
+    # position of each (token, slot) within its expert, per group
+    oh = jax.nn.one_hot(gate_i, e, dtype=jnp.int32)  # (G,g,k,e)
+    ohf = oh.reshape(G, g * k, e)
+    pos = jnp.cumsum(ohf, axis=1) * ohf  # 1-based
+    pos = (jnp.max(pos, axis=-1) - 1).reshape(G, g, k)  # (G,g,k)
+    keep = pos < cap
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap, dtype=jnp.float32)  # (G,g,k,cap)
+    # dispatch/combine tensors
+    disp = jnp.einsum("Ggke,Ggkc->Ggec", oh.astype(jnp.float32), pos_oh)  # 0/1
+    comb = jnp.einsum("Ggke,Ggkc,Ggk->Ggec", oh.astype(jnp.float32), pos_oh, gate_w.astype(jnp.float32))
+    disp = constrain(disp.astype(x.dtype), ("act_batch", None, "act_experts", None))
+    comb = constrain(comb.astype(x.dtype), ("act_batch", None, "act_experts", None))
+
+    buf = jnp.einsum("Ggec,Ggd->Gecd", disp, xg)
+    buf = constrain(buf, ("act_batch", "act_experts", None, None))
+    up = jnp.einsum("Gecd,edf->Gecf", buf, params["up"]["w"].astype(x.dtype))
+    gate = jnp.einsum("Gecd,edf->Gecf", buf, params["gate"]["w"].astype(x.dtype))
+    h = ACT[act](gate) * up
+    out = jnp.einsum("Gecf,efd->Gecd", h, params["down"]["w"].astype(x.dtype))
+    out = constrain(out, ("act_batch", "act_experts", None, None))
+    y = jnp.einsum("Ggec,Gecd->Ggd", comb, out).reshape(b, s, d)
+
+    if "shared" in params:
+        from repro.models.layers import mlp_apply
+
+        y = y + mlp_apply(params["shared"], x, act, True)
+    return y, aux
+
+
+def moe_apply_scatter(params, x, cfg, act: str):
+    """x: (B, S, D) -> (y, aux_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.n_experts, m.top_k
+    cap = max(1, int((s * k / e) * m.capacity_factor + 0.9999))
+    cap = min(cap, s * k)
+
+    logits = jnp.einsum("bsd,de->bse", x, params["router"]["w"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, k)  # (b,s,k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * mean_e(fraction_routed_e * mean_prob_e)
+    onehot_top1 = jax.nn.one_hot(gate_i[..., 0], e, dtype=jnp.float32)
+    aux = e * jnp.mean(jnp.mean(onehot_top1, axis=(0, 1)) * jnp.mean(probs, axis=(0, 1)))
+
+    # position of each (token, slot) within its expert, per batch row
+    flat_i = gate_i.reshape(b, s * k)  # (b, sk)
+    oh = jax.nn.one_hot(flat_i, e, dtype=jnp.int32)  # (b, sk, e)
+    pos = jnp.cumsum(oh, axis=1) * oh  # 1-based at assignment slots
+    pos_flat = jnp.max(pos, axis=-1) - 1  # (b, sk) 0-based
+    keep = pos_flat < cap
+
+    # scatter tokens into the dispatch buffer (b, e, cap, d)
+    xk = jnp.repeat(x, k, axis=1).reshape(b, s * k, d)  # token per (token,slot)
+    safe_pos = jnp.where(keep, pos_flat, cap - 1)
+    buf = jnp.zeros((b, e, cap, d), dtype=x.dtype)
+    scatter_idx = jnp.stack([flat_i, safe_pos], axis=-1)  # (b, sk, 2)
+    contrib = jnp.where(keep[..., None], xk, 0.0).astype(x.dtype)
+
+    def scatter_row(bufr, idxr, valr):
+        return bufr.at[idxr[:, 0], idxr[:, 1]].add(valr)
+
+    buf = jax.vmap(scatter_row)(buf, scatter_idx, contrib)
+    buf = constrain(buf, ("act_batch", "act_experts", None, None))
+
+    # expert GEMMs (batched over e)
+    up = jnp.einsum("becd,edf->becf", buf, params["up"]["w"].astype(x.dtype))
+    gate = jnp.einsum("becd,edf->becf", buf, params["gate"]["w"].astype(x.dtype))
+    h = ACT[act](gate) * up
+    out = jnp.einsum("becf,efd->becd", h, params["down"]["w"].astype(x.dtype))
+    out = constrain(out, ("act_batch", "act_experts", None, None))
+
+    # gather back + weighted combine over the k slots
+    def gather_row(outr, idxr):
+        return outr[idxr[:, 0], idxr[:, 1]]
+
+    back = jax.vmap(gather_row)(out, scatter_idx)  # (b, sk, d)
+    back = jnp.where(keep[..., None], back, 0.0)
+    y = (back.reshape(b, s, k, d) * gate_w[..., None].astype(x.dtype)).sum(axis=2)
+
+    if "shared" in params:
+        from repro.models.layers import mlp_apply
+
+        y = y + mlp_apply(params["shared"], x, act, True)
+    return y, aux

@@ -1,0 +1,226 @@
+"""Mamba2 block with the chunked SSD algorithm (arXiv:2405.21060).
+
+Train/prefill uses the quadratic-within-chunk + recurrent-across-chunk SSD
+form (matmul-dominated → MXU-friendly; the Pallas twin lives in
+``repro.kernels.ssd_scan``).  Decode is the O(1) state update.
+
+Layout: d_inner = expand*d_model, heads nh = d_inner/head_dim (logical axis
+"ssm_heads" → TP), single B/C group (replicated, like Mamba2's n_groups=1).
+Depthwise causal convs run separately on x / B / C so the TP-sharded d_inner
+never concatenates with replicated state dims.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import dense_init, norm_apply
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_decode", "make_ssm_cache", "ssm_cache_axes", "segsum"]
+
+
+def segsum(x):
+    """x: (..., L) -> (..., L, L) with out[i,j] = sum_{j<k<=i} x_k (i>=j)."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def mamba_init(rng, cfg, dtype):
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    n = s.d_state
+    ks = jax.random.split(rng, 9)
+    params, axes = {}, {}
+    for name, k, shape, ax in [
+        ("wz", ks[0], (d, d_in), ("embed", "ssm_in")),
+        ("wx", ks[1], (d, d_in), ("embed", "ssm_in")),
+        ("wB", ks[2], (d, n), ("embed", "state")),
+        ("wC", ks[3], (d, n), ("embed", "state")),
+        ("wdt", ks[4], (d, nh), ("embed", "ssm_heads")),
+    ]:
+        p, a = dense_init(k, shape, ax, dtype)
+        params[name], axes[name] = p, a
+    # depthwise causal convs
+    params["conv_x"] = (jax.random.normal(ks[5], (s.conv_kernel, d_in)) * 0.1).astype(dtype)
+    axes["conv_x"] = ("conv_k", "ssm_in")
+    params["conv_B"] = (jax.random.normal(ks[6], (s.conv_kernel, n)) * 0.1).astype(dtype)
+    axes["conv_B"] = ("conv_k", "state")
+    params["conv_C"] = (jax.random.normal(ks[7], (s.conv_kernel, n)) * 0.1).astype(dtype)
+    axes["conv_C"] = ("conv_k", "state")
+    params["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32)
+    axes["A_log"] = ("ssm_heads",)
+    params["D"] = jnp.ones((nh,), dtype=jnp.float32)
+    axes["D"] = ("ssm_heads",)
+    params["dt_bias"] = jnp.zeros((nh,), dtype=jnp.float32)
+    axes["dt_bias"] = ("ssm_heads",)
+    params["norm"] = {"scale": jnp.ones((d_in,), dtype=dtype)}
+    axes["norm"] = {"scale": ("ssm_in",)}
+    p, a = dense_init(ks[8], (d_in, d), ("ssm_in", "embed"), dtype, scale=d_in**-0.5)
+    params["out"], axes["out"] = p, a
+    return params, axes
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv.  x: (B,S,C), w: (K,C).  With ``state``
+    (B,K-1,C) does streaming (decode) and returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype) for i in range(k))
+    new_state = xp[:, -(k - 1) :, :] if k > 1 else None
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """SSD: xh (b,s,nh,p), dt (b,s,nh) fp32, A (nh,) fp32<0, Bm/Cm (b,s,n).
+
+    Returns y (b,s,nh,p)."""
+    b, s, nh, p = xh.shape
+    n = Bm.shape[-1]
+    l = min(chunk, s)
+    s_orig = s
+    if s % l:
+        # zero-pad the tail: dt=0 ⇒ decay=1, contribution=0 ⇒ state unchanged
+        pad = l - s % l
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    c = s // l
+    xc = xh.reshape(b, c, l, nh, p)
+    dtc = dt.reshape(b, c, l, nh)
+    Bc = Bm.reshape(b, c, l, n).astype(jnp.float32)
+    Cc = Cm.reshape(b, c, l, n).astype(jnp.float32)
+    dA = (dtc * A[None, None, None, :]).astype(jnp.float32)  # (b,c,l,h), negative
+    dA_h = dA.transpose(0, 1, 3, 2)  # (b,c,h,l)
+    dA_cs = jnp.cumsum(dA_h, axis=-1)  # (b,c,h,l)
+
+    # 1. intra-chunk (quadratic within the chunk)
+    L = jnp.exp(segsum(dA_h))  # (b,c,h,l,l)
+    scores = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)  # (b,c,l,l)
+    M = scores[:, :, None, :, :] * L  # (b,c,h,l,l)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]
+    y_diag = jnp.einsum("bchlm,bcmhp->bclhp", M, xdt.transpose(0, 1, 2, 3, 4))
+
+    # 2. per-chunk output states (decay to end of chunk)
+    r = jnp.exp(dA_cs[..., -1:] - dA_cs)  # (b,c,h,l)
+    states = jnp.einsum("bcln,bchl,bclhp->bchpn", Bc, r, xdt)
+
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[..., -1])  # (b,c,h)
+
+    def step(S, inp):
+        dec, st = inp
+        S_new = S * dec[..., None, None] + st
+        return S_new, S  # emit state BEFORE this chunk
+
+    S0 = jnp.zeros((b, nh, p, n), jnp.float32)
+    S_final, prev_states = jax.lax.scan(step, S0, (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,c,h,p,n)
+
+    # 4. inter-chunk contribution
+    q = jnp.exp(dA_cs).transpose(0, 1, 3, 2)  # decay from chunk start, (b,c,l,h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, prev_states, q)
+
+    y = (y_diag + y_off).reshape(b, s, nh, p)[:, :s_orig]
+    return y, S_final
+
+
+def mamba_apply(params, x, cfg, return_state: bool = False):
+    """Full-sequence Mamba2 block.  x: (B,S,D) -> (B,S,D)."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    d_in = s_cfg.expand * d
+    nh = d_in // s_cfg.head_dim
+    z = jnp.einsum("bsd,de->bse", x, params["wz"]["w"].astype(x.dtype))
+    xr = jnp.einsum("bsd,de->bse", x, params["wx"]["w"].astype(x.dtype))
+    Bm = jnp.einsum("bsd,dn->bsn", x, params["wB"]["w"].astype(x.dtype))
+    Cm = jnp.einsum("bsd,dn->bsn", x, params["wC"]["w"].astype(x.dtype))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["wdt"]["w"].astype(x.dtype))
+    xr, conv_x_state = _causal_conv(xr, params["conv_x"])
+    Bm, conv_B_state = _causal_conv(Bm, params["conv_B"])
+    Cm, conv_C_state = _causal_conv(Cm, params["conv_C"])
+    xr = constrain(xr, ("act_batch", None, "act_ffn"))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])
+    xh = xr.reshape(b, s, nh, s_cfg.head_dim)
+    y, S_final = _ssd_chunked(xh, dt, A, Bm, Cm, s_cfg.chunk)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = norm_apply(params["norm"], y, "rmsnorm")
+    out = jnp.einsum("bse,ed->bsd", y, params["out"]["w"].astype(x.dtype))
+    if return_state:
+        # streaming conv states reuse the decode layout (last K-1 raw inputs);
+        # _causal_conv returned post-pad windows of the *activated* stream, so
+        # recompute raw tails here for cache hand-off.
+        state = {"ssm": S_final, "conv_x": conv_x_state, "conv_B": conv_B_state, "conv_C": conv_C_state}
+        return out, state
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode (O(1) state update)
+# ---------------------------------------------------------------------------
+def make_ssm_cache(cfg, batch: int, n_layers: int, dtype):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    k = s.conv_kernel
+    return {
+        "ssm": jnp.zeros((n_layers, batch, nh, s.head_dim, s.d_state), jnp.float32),
+        "conv_x": jnp.zeros((n_layers, batch, k - 1, d_in), dtype),
+        "conv_B": jnp.zeros((n_layers, batch, k - 1, s.d_state), dtype),
+        "conv_C": jnp.zeros((n_layers, batch, k - 1, s.d_state), dtype),
+    }
+
+
+def ssm_cache_axes():
+    return {
+        "ssm": ("layers", "cache_batch", "ssm_heads", None, None),
+        "conv_x": ("layers", "cache_batch", None, "ssm_in"),
+        "conv_B": ("layers", "cache_batch", None, "state"),
+        "conv_C": ("layers", "cache_batch", None, "state"),
+    }
+
+
+def mamba_decode(params, x, cfg, cache_layer):
+    """x: (B,1,D); cache_layer: dict with ssm/conv_x/conv_B/conv_C states."""
+    s_cfg = cfg.ssm
+    b, _, d = x.shape
+    d_in = s_cfg.expand * d
+    nh = d_in // s_cfg.head_dim
+    z = jnp.einsum("bsd,de->bse", x, params["wz"]["w"].astype(x.dtype))
+    xr = jnp.einsum("bsd,de->bse", x, params["wx"]["w"].astype(x.dtype))
+    Bm = jnp.einsum("bsd,dn->bsn", x, params["wB"]["w"].astype(x.dtype))
+    Cm = jnp.einsum("bsd,dn->bsn", x, params["wC"]["w"].astype(x.dtype))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["wdt"]["w"].astype(x.dtype))
+    xr, cx = _causal_conv(xr, params["conv_x"], cache_layer["conv_x"])
+    Bm, cB = _causal_conv(Bm, params["conv_B"], cache_layer["conv_B"])
+    Cm, cC = _causal_conv(Cm, params["conv_C"], cache_layer["conv_C"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, None, :])[:, 0]  # (b,nh)
+    A = -jnp.exp(params["A_log"])
+    xh = xr.reshape(b, nh, s_cfg.head_dim).astype(jnp.float32)
+    Bv = Bm[:, 0].astype(jnp.float32)  # (b,n)
+    Cv = Cm[:, 0].astype(jnp.float32)
+    S = cache_layer["ssm"]
+    decay = jnp.exp(dt * A[None, :])  # (b,nh)
+    S_new = S * decay[..., None, None] + jnp.einsum("bhp,bn,bh->bhpn", xh, Bv, dt)
+    y = jnp.einsum("bhpn,bn->bhp", S_new, Cv) + params["D"][None, :, None] * xh
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = norm_apply(params["norm"], y, "rmsnorm")
+    out = jnp.einsum("bse,ed->bsd", y, params["out"]["w"].astype(x.dtype))
+    new_cache = {"ssm": S_new, "conv_x": cx, "conv_B": cB, "conv_C": cC}
+    return out, new_cache

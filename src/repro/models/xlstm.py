@@ -1,0 +1,287 @@
+"""xLSTM blocks: mLSTM (matrix memory) + sLSTM (scalar memory), arXiv:2405.04517.
+
+mLSTM: exponential input gate + forget gate over a matrix memory
+C ∈ R^{dk×dv} per head, stabilized by the running max m_t.  Full-sequence
+processing uses a time scan of the recurrent form (the chunkwise-parallel
+form is the Pallas kernel ``repro.kernels.mlstm_chunk``; both agree to the
+kernel test tolerance).  Decode is the O(1) recurrent step.
+
+sLSTM: scalar memory with exponential gating, normalizer and stabilizer
+states, block-diagonal recurrent weights per head.
+
+Block layout per the paper's 125M config: mLSTM block with projection
+factor 2 (up → cell → gated down), sLSTM block with conv4 front and a
+GLU FFN of factor 4/3.  ``d_ff=0`` in the arch config: there is no separate
+transformer FFN.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, norm_apply
+
+__all__ = [
+    "mlstm_init",
+    "mlstm_apply",
+    "mlstm_decode",
+    "slstm_init",
+    "slstm_apply",
+    "slstm_decode",
+    "make_xlstm_cache",
+    "xlstm_cache_axes",
+]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_init(rng, cfg, dtype):
+    d = cfg.d_model
+    d_in = 2 * d  # projection factor 2
+    nh = cfg.n_heads
+    ks = jax.random.split(rng, 8)
+    params, axes = {}, {}
+    for name, k, shape, ax in [
+        ("up", ks[0], (d, d_in), ("embed", "ssm_in")),
+        ("gate", ks[1], (d, d_in), ("embed", "ssm_in")),
+        ("wq", ks[2], (d_in, d_in), ("ssm_in", None)),
+        ("wk", ks[3], (d_in, d_in), ("ssm_in", None)),
+        ("wv", ks[4], (d_in, d_in), ("ssm_in", None)),
+        ("wif", ks[5], (d_in, 2 * nh), ("ssm_in", None)),
+        ("down", ks[6], (d_in, d), ("ssm_in", "embed")),
+    ]:
+        p, a = dense_init(k, shape, ax, dtype, scale=shape[0] ** -0.5)
+        params[name], axes[name] = p, a
+    params["conv"] = (jax.random.normal(ks[7], (4, d_in)) * 0.1).astype(dtype)
+    axes["conv"] = ("conv_k", "ssm_in")
+    params["norm"] = {"scale": jnp.ones((d_in,), dtype=dtype)}
+    axes["norm"] = {"scale": ("ssm_in",)}
+    return params, axes
+
+
+def _mlstm_cell_scan(q, k, v, log_i, log_f, C0=None, n0=None, m0=None):
+    """Recurrent stabilized mLSTM.  q,k,v: (b,s,nh,hd); log_i/f: (b,s,nh).
+
+    Returns (y, (C,n,m) final)."""
+    b, s, nh, hd = q.shape
+    scale = hd**-0.5
+    C0 = jnp.zeros((b, nh, hd, hd), jnp.float32) if C0 is None else C0
+    n0 = jnp.zeros((b, nh, hd), jnp.float32) if n0 is None else n0
+    m0 = jnp.full((b, nh), -jnp.inf, jnp.float32) if m0 is None else m0
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, li, lf = xs  # (b,nh,hd), ..., (b,nh)
+        m_new = jnp.maximum(lf + m, li)
+        i_p = jnp.exp(li - m_new)
+        f_p = jnp.exp(lf + m - m_new)
+        C = f_p[..., None, None] * C + i_p[..., None, None] * (kt[..., :, None] * vt[..., None, :])
+        n = f_p[..., None] * n + i_p[..., None] * kt
+        num = jnp.einsum("bhk,bhkv->bhv", qt, C) * scale
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n)) * scale, jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = (
+        q.transpose(1, 0, 2, 3).astype(jnp.float32),
+        k.transpose(1, 0, 2, 3).astype(jnp.float32),
+        v.transpose(1, 0, 2, 3).astype(jnp.float32),
+        log_i.transpose(1, 0, 2),
+        log_f.transpose(1, 0, 2),
+    )
+    (C, n, m), ys = jax.lax.scan(step, (C0, n0, m0), xs)
+    return ys.transpose(1, 0, 2, 3), (C, n, m)
+
+
+def _mlstm_qkv(params, x, nh):
+    d_in = params["up"]["w"].shape[1]
+    hd = d_in // nh
+    u = jnp.einsum("bsd,de->bse", x, params["up"]["w"].astype(x.dtype))
+    g = jnp.einsum("bsd,de->bse", x, params["gate"]["w"].astype(x.dtype))
+    return u, g, hd
+
+
+def _conv_silu(u, w, state=None):
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+        up = jnp.concatenate([pad, u], axis=1)
+    else:
+        up = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+    y = sum(up[:, i : i + u.shape[1], :] * w[i][None, None, :].astype(u.dtype) for i in range(k))
+    return jax.nn.silu(y), (up[:, -(k - 1) :, :] if k > 1 else None)
+
+
+def mlstm_apply(params, x, cfg, return_state=False, state=None):
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    u, g, hd = _mlstm_qkv(params, x, nh)
+    c, conv_state = _conv_silu(u, params["conv"], None if state is None else state["conv"])
+    q = jnp.einsum("bse,ef->bsf", c, params["wq"]["w"].astype(x.dtype)).reshape(b, s, nh, hd)
+    k = jnp.einsum("bse,ef->bsf", c, params["wk"]["w"].astype(x.dtype)).reshape(b, s, nh, hd)
+    v = jnp.einsum("bse,ef->bsf", u, params["wv"]["w"].astype(x.dtype)).reshape(b, s, nh, hd)
+    gates = jnp.einsum("bse,eh->bsh", c, params["wif"]["w"].astype(x.dtype)).astype(jnp.float32)
+    log_i = gates[..., :nh]
+    log_f = -jax.nn.softplus(-gates[..., nh:])  # log sigmoid
+    prev = (state["C"], state["n"], state["m"]) if state is not None else (None, None, None)
+    y, (C, n, m) = _mlstm_cell_scan(q, k, v, log_i, log_f, *prev)
+    y = y.reshape(b, s, nh * hd).astype(x.dtype)
+    y = norm_apply(params["norm"], y, "rmsnorm")
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("bse,ed->bsd", y, params["down"]["w"].astype(x.dtype))
+    if return_state:
+        return out, {"C": C, "n": n, "m": m, "conv": conv_state}
+    return out
+
+
+def mlstm_decode(params, x, cfg, state):
+    out, new_state = mlstm_apply(params, x, cfg, return_state=True, state=state)
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_init(rng, cfg, dtype):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    ks = jax.random.split(rng, 8)
+    params, axes = {}, {}
+    for name, k in [("wz", ks[0]), ("wi", ks[1]), ("wf", ks[2]), ("wo", ks[3])]:
+        p, a = dense_init(k, (d, d), ("embed", None), dtype)
+        params[name], axes[name] = p, a
+    for name, k in [("rz", ks[4]), ("ri", ks[5]), ("rf", ks[6])]:
+        w = (jax.random.normal(k, (nh, hd, hd)) * hd**-0.5).astype(dtype)
+        params[name] = {"w": w}
+        axes[name] = {"w": (None, "head_dim", "head_dim")}
+    params["conv"] = (jax.random.normal(ks[7], (4, d)) * 0.1).astype(dtype)
+    axes["conv"] = ("conv_k", "embed")
+    params["norm"] = {"scale": jnp.ones((d,), dtype=dtype)}
+    axes["norm"] = {"scale": ("embed",)}
+    # GLU ffn, projection factor 4/3
+    d_ff = int(d * 4 / 3)
+    kf = jax.random.split(ks[7], 3)
+    p, a = dense_init(kf[0], (d, d_ff), ("embed", "ffn"), dtype)
+    params["ffn_up"], axes["ffn_up"] = p, a
+    p, a = dense_init(kf[1], (d, d_ff), ("embed", "ffn"), dtype)
+    params["ffn_gate"], axes["ffn_gate"] = p, a
+    p, a = dense_init(kf[2], (d_ff, d), ("ffn", "embed"), dtype, scale=d_ff**-0.5)
+    params["ffn_down"], axes["ffn_down"] = p, a
+    return params, axes
+
+
+def _slstm_cell_scan(z_in, i_in, f_in, o_in, params, nh, hd, state=None):
+    """z/i/f/o inputs: (b,s,d) pre-activation (input part).  Recurrent parts
+    are added inside the scan.  Returns (h_seq, final_state)."""
+    b, s, d = z_in.shape
+    if state is None:
+        h0 = jnp.zeros((b, d), jnp.float32)
+        c0 = jnp.zeros((b, d), jnp.float32)
+        n0 = jnp.zeros((b, d), jnp.float32)
+        m0 = jnp.full((b, d), -jnp.inf, jnp.float32)
+    else:
+        h0, c0, n0, m0 = state["h"], state["c"], state["n"], state["m"]
+    rz = params["rz"]["w"].astype(jnp.float32)
+    ri = params["ri"]["w"].astype(jnp.float32)
+    rf = params["rf"]["w"].astype(jnp.float32)
+
+    def rec(h, r):  # h: (b,d) -> block-diagonal recurrent matmul
+        hh = h.reshape(b, nh, hd)
+        return jnp.einsum("bnk,nkl->bnl", hh, r).reshape(b, d)
+
+    def step(carry, xs):
+        h, c, n, m = carry
+        zt, it, ft, ot = xs
+        z = jnp.tanh(zt + rec(h, rz))
+        li = it + rec(h, ri)
+        lf = -jax.nn.softplus(-(ft + rec(h, rf)))  # log sigmoid forget
+        o = jax.nn.sigmoid(ot)
+        m_new = jnp.maximum(lf + m, li)
+        i_p = jnp.exp(li - m_new)
+        f_p = jnp.exp(lf + m - m_new)
+        c_new = f_p * c + i_p * z
+        n_new = f_p * n + i_p
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    xs = tuple(a.transpose(1, 0, 2).astype(jnp.float32) for a in (z_in, i_in, f_in, o_in))
+    (h, c, n, m), ys = jax.lax.scan(step, (h0, c0, n0, m0), xs)
+    return ys.transpose(1, 0, 2), {"h": h, "c": c, "n": n, "m": m}
+
+
+def slstm_apply(params, x, cfg, return_state=False, state=None):
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    cx, conv_state = _conv_silu(x, params["conv"], None if state is None else state["conv"])
+    z_in = jnp.einsum("bsd,de->bse", x, params["wz"]["w"].astype(x.dtype))
+    o_in = jnp.einsum("bsd,de->bse", x, params["wo"]["w"].astype(x.dtype))
+    i_in = jnp.einsum("bsd,de->bse", cx, params["wi"]["w"].astype(x.dtype))
+    f_in = jnp.einsum("bsd,de->bse", cx, params["wf"]["w"].astype(x.dtype))
+    inner = None if state is None else state["cell"]
+    h, cell = _slstm_cell_scan(z_in, i_in, f_in, o_in, params, nh, hd, inner)
+    h = norm_apply(params["norm"], h.astype(x.dtype), "rmsnorm")
+    up = jnp.einsum("bsd,df->bsf", h, params["ffn_up"]["w"].astype(x.dtype))
+    gate = jnp.einsum("bsd,df->bsf", h, params["ffn_gate"]["w"].astype(x.dtype))
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.silu(gate) * up, params["ffn_down"]["w"].astype(x.dtype))
+    if return_state:
+        return y, {"cell": cell, "conv": conv_state}
+    return y
+
+
+def slstm_decode(params, x, cfg, state):
+    return slstm_apply(params, x, cfg, return_state=True, state=state)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def make_xlstm_cache(cfg, batch: int, dtype):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    d_in = 2 * d
+    hd_m = d_in // nh
+    caches = []
+    for li in range(cfg.n_layers):
+        if (li + 1) % cfg.slstm_every == 0:
+            caches.append(
+                {
+                    "cell": {
+                        "h": jnp.zeros((batch, d), jnp.float32),
+                        "c": jnp.zeros((batch, d), jnp.float32),
+                        "n": jnp.zeros((batch, d), jnp.float32),
+                        "m": jnp.full((batch, d), -1e30, jnp.float32),
+                    },
+                    "conv": jnp.zeros((batch, 3, d), dtype),
+                }
+            )
+        else:
+            caches.append(
+                {
+                    "C": jnp.zeros((batch, nh, hd_m, hd_m), jnp.float32),
+                    "n": jnp.zeros((batch, nh, hd_m), jnp.float32),
+                    "m": jnp.full((batch, nh), -1e30, jnp.float32),
+                    "conv": jnp.zeros((batch, 3, d_in), dtype),
+                }
+            )
+    return caches
+
+
+def xlstm_cache_axes(cfg):
+    def ax(li: int):
+        if (li + 1) % cfg.slstm_every == 0:
+            return {
+                "cell": {k: ("cache_batch", None) for k in ("h", "c", "n", "m")},
+                "conv": ("cache_batch", None, None),
+            }
+        return {
+            "C": ("cache_batch", None, None, None),
+            "n": ("cache_batch", None, None),
+            "m": ("cache_batch", None),
+            "conv": ("cache_batch", None, "ssm_in"),
+        }
+
+    return [ax(li) for li in range(cfg.n_layers)]

@@ -1,0 +1,20 @@
+"""Optimizer substrate: AdamW, schedules, accumulation, grad compression."""
+
+from repro.optim.accumulate import accumulated_value_and_grad
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm, global_norm
+from repro.optim.grad_compress import compress_tensor, compress_tree, init_error_state
+from repro.optim.schedule import constant, warmup_cosine
+
+__all__ = [
+    "accumulated_value_and_grad",
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "global_norm",
+    "compress_tensor",
+    "compress_tree",
+    "init_error_state",
+    "constant",
+    "warmup_cosine",
+]

@@ -1,0 +1,54 @@
+"""Gradient accumulation over microbatches (lax.scan).
+
+Splits the global batch into ``n_micro`` microbatches and scans the value-
+and-grad computation, accumulating fp32 gradients.  The single psum at the
+end of the accumulation window (implicit under GSPMD) is the communication-
+reduction trick: cross-replica gradient traffic is 1/n_micro of the naive
+per-microbatch reduction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["accumulated_value_and_grad"]
+
+
+def accumulated_value_and_grad(loss_fn, n_micro: int):
+    """loss_fn(params, batch) -> (loss, metrics).  Returns a function
+    (params, batch) -> (loss, metrics, grads) averaging over microbatches."""
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+
+    if n_micro <= 1:
+        def single(params, batch):
+            (loss, metrics), grads = vg(params, batch)
+            return loss, metrics, grads
+
+        return single
+
+    def split(batch):
+        def r(x):
+            b = x.shape[0]
+            assert b % n_micro == 0, f"batch {b} not divisible by {n_micro} microbatches"
+            return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+        return jax.tree.map(r, batch)
+
+    def accum(params, batch):
+        micro = split(batch)
+
+        def step(carry, mb):
+            loss_acc, grads_acc = carry
+            (loss, metrics), grads = vg(params, mb)
+            grads_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), grads_acc, grads)
+            return (loss_acc + loss, grads_acc), metrics
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), metrics = jax.lax.scan(step, (jnp.zeros((), jnp.float32), g0), micro)
+        inv = 1.0 / n_micro
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum * inv, metrics, grads
+
+    return accum

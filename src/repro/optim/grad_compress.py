@@ -1,0 +1,46 @@
+"""int8 error-feedback gradient compression (the cross-pod/DCN hop).
+
+The paper's "only high-value bytes cross the WAN" applied to training
+state: gradients crossing the slow ``pod`` axis are quantized to int8 with
+a per-tensor scale; the quantization residual is carried in an error-
+feedback buffer and added back next step (Seide et al. 2014 / 1-bit SGD
+lineage), so compression is unbiased over time and convergence is
+preserved (validated in tests/test_optim.py).
+
+Usage inside a jit'd step:
+    g_q, new_err = compress_tree(grads, err)    # before cross-pod psum
+    ... psum happens in int8-scaled space ...
+    g = decompress happens implicitly (values are rescaled floats)
+
+In the GSPMD data path the reduction is implicit, so the training loop
+applies compress→decompress around the accumulated gradient as a faithful
+simulation of the wire format; on an explicit shard_map path the int8
+payload is what crosses the DCN (repro/distributed/collectives.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_error_state", "compress_tensor", "compress_tree"]
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_tensor(g, err):
+    """Returns (dequantized g after int8 round-trip, new error residual)."""
+    g = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, g - deq
+
+
+def compress_tree(grads, err_state):
+    out = jax.tree.map(compress_tensor, grads, err_state)
+    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return deq, new_err

@@ -1,0 +1,5 @@
+"""Roofline analysis utilities (HLO parsing + 3-term model)."""
+
+from repro.roofline.analysis import HW, dominant_term, model_flops, parse_collective_bytes, roofline_terms
+
+__all__ = ["HW", "dominant_term", "model_flops", "parse_collective_bytes", "roofline_terms"]

@@ -1,0 +1,158 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS          (197 TF/s bf16)
+    memory     = HLO_bytes_per_device / HBM_BW              (819 GB/s)
+    collective = collective_bytes_per_device / LINK_BW      (50 GB/s/link)
+
+``compiled.cost_analysis()`` runs on the post-SPMD per-device module, so
+its flops/bytes are already per-chip.  Collective bytes are NOT in
+cost_analysis: we parse ``compiled.as_text()`` and sum operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (``*-start`` counted once, ``*-done`` skipped).
+
+Methodology caveat recorded in EXPERIMENTS.md: XLA's HloCostAnalysis counts
+while-loop bodies ONCE.  The model stacks are python-unrolled (lm.py), so
+layer compute is exact; the remaining loops (kv-chunk scan inside 32k
+attention, recurrent scans in xlstm) are corrected analytically via
+``loop_flops_correction`` using known trip counts.
+"""
+
+from __future__ import annotations
+
+import re
+
+__all__ = ["HW", "parse_collective_bytes", "roofline_terms", "model_flops", "dominant_term"]
+
+
+class HW:
+    PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e class)
+    HBM_BW = 819e9  # bytes/s
+    LINK_BW = 50e9  # bytes/s/link ICI
+    CHIPS_PER_POD = 256
+    HBM_BYTES = 16 << 30
+
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1,
+    "u4": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "f16": 2,
+    "bf16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"\b(pred|bf16|f16|f32|f64|s4|s8|s16|s32|s64|u4|u8|u16|u32|u64|c64|c128)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*[^=]*?\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)(-start|-done)?\("
+)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # [n_groups, group_size]<=[...] iota format
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(len(ids), 1)
+    return 1
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """-> {op_kind: operand_bytes_per_device} summed over the module.
+
+    Scheduled HLO prints operands untyped, so operand bytes are derived from
+    the RESULT shape (printed on every line) and the replica group size:
+      all-reduce / all-to-all / collective-permute: operand == result
+      all-gather:      operand = result / group_size
+      reduce-scatter:  operand = result × group_size
+    Async pairs: ``*-start`` counted once (tuple results use the last shape,
+    the payload), ``*-done`` skipped.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind, suffix = m.group(1), m.group(2)
+        if suffix == "-done":
+            continue  # paired with -start; count once
+        result_part = line[: m.start(1)]
+        shapes = _SHAPE_RE.findall(result_part)
+        if not shapes:
+            continue
+        if suffix == "-start" and len(shapes) > 1:
+            shapes = shapes[-1:]  # (operand, result) tuple: payload = result
+        result_bytes = sum(_shape_bytes(d, s) for d, s in shapes)
+        g = _group_size(line)
+        if kind == "all-gather":
+            operand = result_bytes // g
+        elif kind == "reduce-scatter":
+            operand = result_bytes * g
+        else:
+            operand = result_bytes
+        out[kind] += operand
+        counts[kind] += 1
+    out["_counts"] = counts
+    out["_total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float, collective_bytes_per_device: float) -> dict:
+    compute = flops_per_device / HW.PEAK_FLOPS
+    memory = bytes_per_device / HW.HBM_BW
+    collective = collective_bytes_per_device / HW.LINK_BW
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    terms["bound"] = dominant_term(terms)
+    total = max(compute, memory, collective)
+    terms["roofline_frac_compute"] = compute / total if total > 0 else 0.0
+    return terms
+
+
+def dominant_term(terms: dict) -> str:
+    vals = {
+        "compute": terms["compute_s"],
+        "memory": terms["memory_s"],
+        "collective": terms["collective_s"],
+    }
+    return max(vals, key=vals.get)
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (train) / 2·N·D (prefill) / 2·N·B (decode); N = active params."""
+    n = cfg.active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def loop_flops_correction(hlo_flops: float, extra_loop_flops: float) -> float:
+    """Add analytically-known flops for while-loop bodies costed once."""
+    return hlo_flops + extra_loop_flops

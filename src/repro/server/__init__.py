@@ -1,0 +1,18 @@
+"""faird: the DACP reference server (paper §IV)."""
+
+from repro.server.catalog import Catalog, Dataset, Policy
+from repro.server.datasource import scan_path, write_sdf_dataset
+from repro.server.engine import SDFEngine
+from repro.server.faird import FairdServer
+from repro.server.scheduler import CrossDomainScheduler
+
+__all__ = [
+    "Catalog",
+    "Dataset",
+    "Policy",
+    "scan_path",
+    "write_sdf_dataset",
+    "SDFEngine",
+    "FairdServer",
+    "CrossDomainScheduler",
+]

@@ -1,0 +1,131 @@
+"""Dataset catalog: logical collections with inherited metadata + policy.
+
+Paper §III-C: a Dataset is "a logical collection unit for SDFs.  It supports
+the definition of shared metadata or permission policies at the collection
+level, enabling all enclosed SDFs to automatically inherit this contextual
+information."
+
+Resolution of ``dacp://host:port/<seg...>``:
+  * zero segments            → the discovery SDF (list of datasets)
+  * first segment = dataset  → remaining path resolved inside its root
+  * ``.flow/<id>``           → a published sub-task stream (scheduler use)
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import dtypes
+from repro.core.errors import PermissionDenied, ResourceNotFound
+from repro.core.schema import Field, Schema
+from repro.core.sdf import StreamingDataFrame
+from repro.core.uri import DacpUri
+
+__all__ = ["Policy", "Dataset", "Catalog"]
+
+
+@dataclass(frozen=True)
+class Policy:
+    public: bool = True
+    allowed_subjects: tuple = ()  # token subjects, when not public
+
+    def check(self, subject: str) -> None:
+        if self.public:
+            return
+        if subject in self.allowed_subjects or subject.startswith("flow:"):
+            return
+        raise PermissionDenied(f"subject {subject!r} not allowed by dataset policy")
+
+
+@dataclass
+class Dataset:
+    name: str
+    root: str  # filesystem root
+    metadata: dict = field(default_factory=dict)
+    policy: Policy = field(default_factory=Policy)
+
+    def resolve(self, subpath: str) -> str:
+        p = os.path.normpath(os.path.join(self.root, subpath)) if subpath else self.root
+        rootp = os.path.normpath(self.root)
+        if not (p == rootp or p.startswith(rootp + os.sep)):
+            raise PermissionDenied(f"path escape blocked: {subpath!r}")
+        return p
+
+
+class Catalog:
+    def __init__(self):
+        self._datasets: dict = {}
+        self._lock = threading.Lock()
+
+    def register(self, ds: Dataset) -> Dataset:
+        with self._lock:
+            self._datasets[ds.name] = ds
+        return ds
+
+    def register_path(self, name: str, root: str, metadata: dict | None = None, policy: Policy | None = None) -> Dataset:
+        return self.register(Dataset(name, root, metadata or {}, policy or Policy()))
+
+    def get(self, name: str) -> Dataset:
+        try:
+            return self._datasets[name]
+        except KeyError:
+            raise ResourceNotFound(f"no dataset {name!r}") from None
+
+    def names(self) -> list:
+        return sorted(self._datasets)
+
+    def resolve_uri(self, uri: DacpUri):
+        """-> (dataset | None, fs_path | None).  None dataset = discovery root."""
+        if not uri.segments:
+            return None, None
+        ds = self.get(uri.segments[0])
+        return ds, ds.resolve("/".join(uri.segments[1:]))
+
+    # -- discovery SDF (GET on the server root) ---------------------------------
+    DISCOVERY_SCHEMA = Schema(
+        [
+            Field("dataset", dtypes.STRING),
+            Field("root", dtypes.STRING),
+            Field("n_files", dtypes.INT64),
+            Field("bytes", dtypes.INT64),
+            Field("metadata", dtypes.STRING),
+        ]
+    )
+
+    def discovery_sdf(self) -> StreamingDataFrame:
+        import json as _json
+
+        names = self.names()
+
+        def stats(ds: Dataset):
+            n, total = 0, 0
+            for dirpath, _d, files in os.walk(ds.root):
+                for fn in files:
+                    n += 1
+                    try:
+                        total += os.path.getsize(os.path.join(dirpath, fn))
+                    except OSError:
+                        pass
+            return n, total
+
+        def gen():
+            from repro.core.batch import RecordBatch
+
+            rows = {"dataset": [], "root": [], "n_files": [], "bytes": [], "metadata": []}
+            for nm in names:
+                ds = self.get(nm)
+                n, b = stats(ds)
+                rows["dataset"].append(nm)
+                rows["root"].append(ds.root)
+                rows["n_files"].append(n)
+                rows["bytes"].append(b)
+                rows["metadata"].append(_json.dumps(ds.metadata, sort_keys=True))
+            rows["n_files"] = np.asarray(rows["n_files"], np.int64)
+            rows["bytes"] = np.asarray(rows["bytes"], np.int64)
+            yield RecordBatch.from_pydict(rows, self.DISCOVERY_SCHEMA)
+
+        return StreamingDataFrame(self.DISCOVERY_SCHEMA, gen)

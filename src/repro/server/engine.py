@@ -1,0 +1,144 @@
+"""SDF Engine — the core kernel of faird (paper §IV-B).
+
+Responsibilities:
+  * lazy materialization: resolving a URI / registering a DAG does **not**
+    read data; physical bytes move only when the output stream is pulled;
+  * schema-aware columnar operator execution (delegates to
+    ``repro.core.operators`` — Filter/Select/Map/... run vectorized on the
+    columnar layout);
+  * the **flow table**: published sub-task result streams, token-gated,
+    with TTL — the reverse-supply rendezvous used by cross-domain plans;
+  * pushdown: every DAG is re-optimized server-side before execution (the
+    optimizer is pure DAG→DAG, identical on client and server).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.core.dag import Dag, Node
+from repro.core.errors import ResourceNotFound, TokenError
+from repro.core.operators import execute
+from repro.core.pushdown import optimize
+from repro.core.sdf import StreamingDataFrame
+from repro.core.tokens import TokenAuthority
+from repro.core.uri import parse as parse_uri
+from repro.server import datasource
+from repro.server.catalog import Catalog
+
+__all__ = ["SDFEngine", "PublishedFlow"]
+
+FLOW_TTL_S = 600.0
+
+
+class PublishedFlow:
+    __slots__ = ("flow_id", "factory", "token_raw", "expires_at", "pulls")
+
+    def __init__(self, flow_id: str, factory, token_raw: str, ttl_s: float = FLOW_TTL_S):
+        self.flow_id = flow_id
+        self.factory = factory  # () -> StreamingDataFrame (fresh stream per pull)
+        self.token_raw = token_raw
+        self.expires_at = time.time() + ttl_s
+        self.pulls = 0
+
+
+class SDFEngine:
+    def __init__(self, authority: str, catalog: Catalog, tokens: TokenAuthority, remote_pull=None, aliases=None):
+        self.authority = authority
+        self.aliases = aliases if aliases is not None else {authority}
+        self.catalog = catalog
+        self.tokens = tokens
+        # remote_pull(uri_str, token_raw, columns, predicate) -> SDF; injected
+        # by the server so the engine can resolve exchange leaves cross-domain.
+        self.remote_pull = remote_pull
+        self._flows: dict = {}
+        self._lock = threading.Lock()
+
+    # -- GET path -----------------------------------------------------------------
+    def open_uri(self, uri_str: str, columns=None, predicate=None, batch_rows: int | None = None) -> StreamingDataFrame:
+        uri = parse_uri(uri_str)
+        if uri.segments and uri.segments[0] == ".flow":
+            if len(uri.segments) != 2:
+                raise ResourceNotFound(f"bad flow uri {uri_str}")
+            return self.take_flow(uri.segments[1])
+        ds, path = self.catalog.resolve_uri(uri)
+        if ds is None:
+            return self.catalog.discovery_sdf()
+        kwargs = {}
+        if batch_rows:
+            kwargs["batch_rows"] = int(batch_rows)
+        return datasource.scan_path(path, columns=columns, predicate=predicate, **kwargs)
+
+    # -- COOK path -----------------------------------------------------------------
+    def execute_dag(self, dag: Dag) -> StreamingDataFrame:
+        """Optimize + lazily execute a (fragment) DAG against this domain."""
+        dag = optimize(dag)
+
+        def resolver(node: Node) -> StreamingDataFrame:
+            if node.op == "source":
+                uri = parse_uri(node.params["uri"])
+                if uri.authority not in self.aliases:
+                    # a mis-planned fragment: pull remotely rather than fail
+                    return self._remote(node)
+                return self.open_uri(
+                    node.params["uri"],
+                    columns=node.params.get("columns"),
+                    predicate=node.params.get("predicate"),
+                )
+            if node.op == "exchange":
+                return self._remote(node)
+            raise ResourceNotFound(f"unresolvable leaf {node.op}")
+
+        return execute(dag, resolver)
+
+    def _remote(self, node: Node) -> StreamingDataFrame:
+        if self.remote_pull is None:
+            raise ResourceNotFound(f"no remote pull configured for {node.params.get('uri')}")
+        return self.remote_pull(
+            node.params["uri"],
+            node.params.get("token"),
+            node.params.get("columns"),
+            node.params.get("predicate"),
+        )
+
+    # -- flow table -------------------------------------------------------------------
+    def publish_flow(self, flow_id: str, factory, ttl_s: float = FLOW_TTL_S) -> str:
+        """Register a lazily-evaluated stream; returns the raw pull token."""
+        token = self.tokens.mint_flow_token(flow_id, resource=f"/.flow/{flow_id}", ttl_s=ttl_s)
+        with self._lock:
+            self._gc_locked()
+            self._flows[flow_id] = PublishedFlow(flow_id, factory, token.raw, ttl_s)
+        return token.raw
+
+    def take_flow(self, flow_id: str) -> StreamingDataFrame:
+        with self._lock:
+            self._gc_locked()
+            flow = self._flows.get(flow_id)
+        if flow is None:
+            raise ResourceNotFound(f"no published flow {flow_id!r}")
+        flow.pulls += 1
+        return flow.factory()
+
+    def verify_flow_token(self, flow_id: str, token_raw: str | None) -> None:
+        if token_raw is None:
+            raise TokenError(f"flow {flow_id} requires a token")
+        claims = self.tokens.verify(token_raw, resource=f"/.flow/{flow_id}", verb="GET")
+        # flows are pullable ONLY with the single-purpose token minted at
+        # schedule time — a wildcard session token must not read exchanges
+        if claims.get("res") == "*":
+            raise TokenError(f"flow {flow_id} requires its scoped flow token")
+
+    def drop_flow(self, flow_id: str) -> None:
+        with self._lock:
+            self._flows.pop(flow_id, None)
+
+    def _gc_locked(self) -> None:
+        now = time.time()
+        dead = [k for k, v in self._flows.items() if v.expires_at < now]
+        for k in dead:
+            del self._flows[k]
+
+    def flow_ids(self) -> list:
+        with self._lock:
+            return sorted(self._flows)

@@ -1,0 +1,222 @@
+"""faird — the DACP reference server (paper §IV).
+
+Request verbs (REQUEST frame header ``{"verb": ..., "uri": ..., "token": ...}``):
+
+    HELLO   credentials → short-lived session token (phased interaction, §III-C)
+    GET     stream an SDF; honors scan pushdown params (columns / predicate)
+    PUT     ingest an SDF stream into a dataset path
+    COOK    body = DAG json; server optimizes, plans, coordinates cross-domain
+            sub-tasks, and streams the root result (non-blocking first batch)
+    SUBMIT  internal: register a plan fragment; returns a flow pull token
+    PING    heartbeat (scheduler liveness probes)
+
+The same handler serves in-process channel pairs (co-hosted data plane — the
+usual deployment inside a training pod) and TCP sockets (standalone server).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.core.dag import Dag
+from repro.core.errors import DacpError, PermissionDenied, ResourceNotFound, TokenError
+from repro.core.expr import Expr
+from repro.core.planner import plan as plan_dag
+from repro.core.pushdown import optimize
+from repro.core.tokens import TokenAuthority
+from repro.core.uri import parse as parse_uri
+from repro.server.catalog import Catalog
+from repro.server.datasource import write_sdf_dataset
+from repro.server.engine import SDFEngine
+from repro.transport import framing
+from repro.transport.flight import recv_sdf, send_error, send_sdf
+
+__all__ = ["FairdServer"]
+
+
+class FairdServer:
+    def __init__(
+        self,
+        authority: str,
+        catalog: Catalog | None = None,
+        secret: bytes | None = None,
+        credentials: dict | None = None,
+        network=None,
+    ):
+        self.authority = authority
+        self.aliases = {authority}  # addresses under which peers reach us
+        self.catalog = catalog or Catalog()
+        self.tokens = TokenAuthority(secret=secret)
+        # subject -> shared secret; None = accept anonymous HELLO
+        self.credentials = credentials
+        self.network = network  # set by the cluster; used for cross-domain pulls
+        self.engine = SDFEngine(authority, self.catalog, self.tokens, remote_pull=self._remote_pull, aliases=self.aliases)
+        self.started_at = time.time()
+        self.stats = {"get": 0, "put": 0, "cook": 0, "submit": 0, "rows_out": 0, "rows_in": 0}
+        self._tcp_server = None
+
+    # ------------------------------------------------------------------ wiring
+    def _remote_pull(self, uri_str, token_raw, columns=None, predicate=None):
+        if self.network is None:
+            raise ResourceNotFound(f"server {self.authority} has no network for {uri_str}")
+        client = self.network.client_for(parse_uri(uri_str).authority)
+        return client.get(uri_str, token=token_raw, columns=columns, predicate=predicate)
+
+    # ------------------------------------------------------------------ auth
+    def _hello(self, header: dict) -> dict:
+        subject = header.get("subject", "anonymous")
+        if self.credentials is not None:
+            secret = header.get("credential")
+            if self.credentials.get(subject) != secret:
+                raise PermissionDenied(f"bad credentials for {subject!r}")
+        tok = self.tokens.mint(subject)
+        return {"token": tok.raw, "authority": self.authority, "expires": tok.claims["exp"]}
+
+    def _authorize(self, header: dict, verb: str) -> str:
+        uri = header.get("uri", "")
+        resource = parse_uri(uri).path if uri else "*"
+        claims = self.tokens.verify(header.get("token", ""), resource=resource, verb=verb)
+        # dataset-level policy inheritance
+        if uri:
+            u = parse_uri(uri)
+            if u.segments and u.segments[0] not in (".flow",):
+                try:
+                    ds = self.catalog.get(u.segments[0])
+                except ResourceNotFound:
+                    ds = None
+                if ds is not None:
+                    ds.policy.check(claims.get("sub", ""))
+        return claims.get("sub", "")
+
+    # ------------------------------------------------------------------ dispatch
+    def handle_channel(self, channel) -> None:
+        """Serve one connection until EOF/close."""
+        while True:
+            try:
+                ftype, header, body = channel.recv()
+            except DacpError:
+                return  # peer closed
+            if ftype != framing.REQUEST:
+                send_error(channel, DacpError(f"expected REQUEST, got {ftype}"))
+                continue
+            try:
+                done = self._dispatch(channel, header, body)
+            except DacpError as e:
+                send_error(channel, e)
+                done = False
+            except Exception as e:  # defensive: never kill the connection loop
+                send_error(channel, DacpError(f"internal: {type(e).__name__}: {e}"))
+                done = False
+            if done:
+                return
+
+    def _dispatch(self, channel, header: dict, body) -> bool:
+        verb = header.get("verb", "").upper()
+        if verb == "HELLO":
+            channel.send(framing.OK, self._hello(header))
+            return False
+        if verb == "PING":
+            channel.send(framing.OK, {"authority": self.authority, "uptime": time.time() - self.started_at, "stats": self.stats})
+            return False
+        if verb == "GET":
+            self._authorize(header, "GET")
+            self.stats["get"] += 1
+            uri = parse_uri(header["uri"])
+            if uri.segments and uri.segments[0] == ".flow":
+                flow_id = uri.segments[1]
+                self.engine.verify_flow_token(flow_id, header.get("token"))
+                sdf = self.engine.take_flow(flow_id)
+            else:
+                predicate = Expr.from_json(header["predicate"]) if header.get("predicate") else None
+                sdf = self.engine.open_uri(
+                    header["uri"],
+                    columns=header.get("columns"),
+                    predicate=predicate,
+                    batch_rows=header.get("batch_rows"),
+                )
+            self.stats["rows_out"] += send_sdf(channel, sdf)
+            return False
+        if verb == "PUT":
+            self._authorize(header, "PUT")
+            self.stats["put"] += 1
+            uri = parse_uri(header["uri"])
+            ds, path = self.catalog.resolve_uri(uri)
+            if ds is None:
+                raise ResourceNotFound("PUT requires a dataset path")
+            channel.send(framing.OK, {"ready": True})
+            sdf = recv_sdf(channel)
+            rows = write_sdf_dataset(path, sdf)
+            self.stats["rows_in"] += rows
+            channel.send(framing.OK, {"rows": rows, "path": uri.path})
+            return False
+        if verb == "COOK":
+            self._authorize(header, "COOK")
+            self.stats["cook"] += 1
+            dag = Dag.from_bytes(bytes(body))
+            sdf = self.cook(dag)
+            self.stats["rows_out"] += send_sdf(channel, sdf)
+            return False
+        if verb == "SUBMIT":
+            # internal cross-domain fragment registration (scheduler-called)
+            self.tokens.verify(header.get("token", ""), resource="*", verb="COOK")
+            self.stats["submit"] += 1
+            frag = Dag.from_bytes(bytes(body))
+            flow_id = header["flow_id"]
+            exchange_tokens = header.get("exchange_tokens", {})
+            for n in frag.nodes.values():
+                if n.op == "exchange" and n.params.get("producer") in exchange_tokens:
+                    n.params["token"] = exchange_tokens[n.params["producer"]]
+            pull_token = self.engine.publish_flow(flow_id, lambda frag=frag: self.engine.execute_dag(frag.copy()))
+            channel.send(framing.OK, {"flow_id": flow_id, "token": pull_token})
+            return False
+        if verb == "BYE":
+            channel.send(framing.OK, {})
+            return True
+        raise DacpError(f"unknown verb {verb!r}")
+
+    # ------------------------------------------------------------------ COOK
+    def cook(self, dag: Dag):
+        """Optimize → plan → schedule cross-domain fragments → root stream."""
+        from repro.server.scheduler import CrossDomainScheduler
+
+        dag = optimize(dag)
+        the_plan = plan_dag(dag, client_domain=self.authority)
+        sched = CrossDomainScheduler(coordinator=self, network=self.network)
+        return sched.run(the_plan)
+
+    # ------------------------------------------------------------------ TCP
+    def serve_tcp(self, host: str = "127.0.0.1", port: int = 0):
+        import socket
+
+        from repro.transport.channel import SocketChannel
+
+        srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        srv.bind((host, port))
+        srv.listen(64)
+        self._tcp_server = srv
+        actual_port = srv.getsockname()[1]
+        self.aliases.add(f"{host}:{actual_port}")
+        if host in ("127.0.0.1", "0.0.0.0"):
+            self.aliases.add(f"localhost:{actual_port}")
+            self.aliases.add(f"127.0.0.1:{actual_port}")
+
+        def loop():
+            while True:
+                try:
+                    conn, _ = srv.accept()
+                except OSError:
+                    return
+                t = threading.Thread(target=self.handle_channel, args=(SocketChannel(conn),), daemon=True)
+                t.start()
+
+        threading.Thread(target=loop, daemon=True).start()
+        return actual_port
+
+    def shutdown(self) -> None:
+        if self._tcp_server is not None:
+            try:
+                self._tcp_server.close()
+            except OSError:
+                pass

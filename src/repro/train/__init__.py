@@ -1,0 +1,6 @@
+"""Training/serving loops built on the DACP data plane."""
+
+from repro.train.loop import Trainer
+from repro.train.steps import make_decode_step, make_prefill_step, make_train_state, make_train_step, opt_axes
+
+__all__ = ["Trainer", "make_decode_step", "make_prefill_step", "make_train_state", "make_train_step", "opt_axes"]

@@ -1,0 +1,77 @@
+"""Training loop with checkpoint/restart, DACP-fed data, async saves.
+
+The loop is deliberately dumb-robust (production rule: restartable at any
+line): state lives in (params, opt, err) pytrees; the data iterator is a
+DACP COOK stream (re-openable); checkpoints are atomic and validated; on
+construction the loop auto-resumes from the newest valid checkpoint.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.optim import AdamWConfig
+from repro.train.steps import make_train_state, make_train_step
+
+__all__ = ["Trainer"]
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg,
+        data_iter_factory,
+        optim_cfg: AdamWConfig | None = None,
+        ckpt_dir: str | None = None,
+        ckpt_every: int = 100,
+        n_micro: int = 1,
+        compress_grads: bool = False,
+        seed: int = 0,
+        log_every: int = 10,
+    ):
+        self.cfg = cfg
+        self.optim_cfg = optim_cfg or AdamWConfig()
+        self.data_iter_factory = data_iter_factory
+        self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        self.ckpt_every = ckpt_every
+        self.log_every = log_every
+        self.step = 0
+        self.metrics_log: list = []
+
+        state, self.axes = make_train_state(cfg, self.optim_cfg, jax.random.PRNGKey(seed), compress_grads)
+        self.state = state
+        if self.ckpt is not None:
+            restored, manifest = self.ckpt.restore_latest()
+            if restored is not None:
+                # cast restored host arrays onto the existing pytree's dtypes
+                self.state = jax.tree.map(lambda cur, new: np.asarray(new).astype(cur.dtype), state, restored)
+                self.step = int(manifest["step"])
+        self._train_step = jax.jit(make_train_step(cfg, self.optim_cfg, n_micro, compress_grads), donate_argnums=(0,))
+
+    def run(self, num_steps: int) -> dict:
+        it = iter(self.data_iter_factory())
+        t0 = time.time()
+        last = None
+        for _ in range(num_steps):
+            try:
+                batch = next(it)
+            except StopIteration:
+                it = iter(self.data_iter_factory())  # epoch wrap
+                batch = next(it)
+            self.state, metrics = self._train_step(self.state, batch)
+            self.step += 1
+            if self.step % self.log_every == 0 or self.step == 1:
+                last = {k: float(v) for k, v in metrics.items()}
+                last["step"] = self.step
+                last["wall_s"] = time.time() - t0
+                self.metrics_log.append(last)
+            if self.ckpt is not None and self.step % self.ckpt_every == 0:
+                self.ckpt.save_async(self.step, self.state)
+        if self.ckpt is not None:
+            self.ckpt.save(self.step, self.state)
+            self.ckpt.wait()
+        return last or {}

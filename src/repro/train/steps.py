@@ -1,0 +1,77 @@
+"""jit-able step builders: train_step / prefill_step / decode_step.
+
+These close over the ArchConfig and optimizer config so the jitted
+signature is pure pytrees — exactly what the dry-run lowers with
+ShapeDtypeStructs and what the training loop runs with real arrays.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import build
+from repro.optim import (
+    AdamWConfig,
+    accumulated_value_and_grad,
+    adamw_init,
+    adamw_update,
+    compress_tree,
+    init_error_state,
+)
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step", "make_train_state", "opt_axes"]
+
+
+def make_train_state(cfg, optim_cfg: AdamWConfig, rng, compress: bool = False):
+    api = build(cfg)
+    params, axes = api.init(rng)
+    opt_state = adamw_init(params)
+    state = {"params": params, "opt": opt_state}
+    if compress:
+        state["err"] = init_error_state(params)
+    return state, axes
+
+
+def opt_axes(param_axes, compress: bool = False):
+    ax = {"params": param_axes, "opt": {"m": param_axes, "v": param_axes, "step": ()}}
+    if compress:
+        ax["err"] = param_axes
+    return ax
+
+
+def make_train_step(cfg, optim_cfg: AdamWConfig, n_micro: int = 1, compress: bool = False):
+    api = build(cfg)
+    accum = accumulated_value_and_grad(api.loss_fn, n_micro)
+
+    def train_step(state, batch):
+        loss, metrics, grads = accum(state["params"], batch)
+        new_state = dict(state)
+        if compress:
+            grads, new_state["err"] = compress_tree(grads, state["err"])
+        params, opt, om = adamw_update(optim_cfg, state["params"], grads, state["opt"])
+        new_state["params"] = params
+        new_state["opt"] = opt
+        out_metrics = {"loss": loss, **metrics, **om}
+        return new_state, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, max_seq: int | None = None):
+    api = build(cfg)
+
+    def prefill_step(params, batch):
+        seq = batch["tokens"].shape[1]
+        return api.prefill(params, batch, max_seq if max_seq is not None else seq)
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    api = build(cfg)
+
+    def decode_step(params, token, cache):
+        return api.decode_step(params, token, cache)
+
+    return decode_step

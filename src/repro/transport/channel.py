@@ -1,0 +1,118 @@
+"""Bidirectional channels carrying DACP frames.
+
+Two implementations with one interface:
+
+  * ``InProcChannel``  — queue-pair passing decoded frames directly
+    (true zero-copy; used by the in-process cluster, tests, and the
+    training data path when faird is co-hosted).
+  * ``SocketChannel``  — TCP, frames serialized with ``framing`` (used by
+    the standalone server and the wire-accurate benchmarks).
+
+Interface (duplex):
+    send(ftype, header, body)    recv() -> (ftype, header, body)
+    close()                      bytes_sent / bytes_received
+"""
+
+from __future__ import annotations
+
+import queue
+import socket
+
+from repro.core.errors import TransportError
+from repro.transport import framing
+
+__all__ = ["InProcChannel", "SocketChannel", "channel_pair", "connect_tcp"]
+
+_CLOSE = object()
+
+
+class InProcChannel:
+    def __init__(self, inbox: queue.Queue, outbox: queue.Queue):
+        self._in = inbox
+        self._out = outbox
+        self.bytes_sent = 0
+        self.bytes_received = 0
+        self._closed = False
+
+    def send(self, ftype: int, header: dict, body=b"") -> None:
+        if self._closed:
+            raise TransportError("send on closed channel")
+        body = bytes(body) if not isinstance(body, (bytes, memoryview)) else body
+        # account bytes as-if framed, so in-proc benchmarks report wire sizes
+        self.bytes_sent += 24 + len(str(header)) + (len(body) if body is not None else 0)
+        self._out.put((ftype, dict(header), body))
+
+    def recv(self, timeout: float | None = None):
+        try:
+            item = self._in.get(timeout=timeout)
+        except queue.Empty:
+            raise TransportError("recv timeout") from None
+        if item is _CLOSE:
+            raise TransportError("channel closed by peer")
+        ftype, header, body = item
+        self.bytes_received += 24 + len(str(header)) + len(body)
+        return ftype, header, memoryview(body) if not isinstance(body, memoryview) else body
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            try:
+                self._out.put_nowait(_CLOSE)
+            except Exception:
+                pass
+
+
+def channel_pair():
+    a2b: queue.Queue = queue.Queue()
+    b2a: queue.Queue = queue.Queue()
+    return InProcChannel(b2a, a2b), InProcChannel(a2b, b2a)
+
+
+class SocketChannel:
+    def __init__(self, sock: socket.socket):
+        self._sock = sock
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._rfile = sock.makefile("rb", buffering=1 << 20)
+        self._wfile = sock.makefile("wb", buffering=1 << 20)
+        self._reader = framing.FrameReader(self._rfile)
+        self._writer = framing.FrameWriter(self._wfile)
+
+    @property
+    def bytes_sent(self) -> int:
+        return self._writer.bytes_written
+
+    @property
+    def bytes_received(self) -> int:
+        return self._reader.bytes_read
+
+    def send(self, ftype: int, header: dict, body=b"") -> None:
+        self._writer.write_frame(ftype, header, body)
+
+    def recv(self, timeout: float | None = None):
+        if timeout is not None:
+            self._sock.settimeout(timeout)
+        try:
+            return self._reader.read_frame()
+        except socket.timeout:
+            raise TransportError("recv timeout") from None
+        finally:
+            if timeout is not None:
+                self._sock.settimeout(None)
+
+    def close(self) -> None:
+        for f in (self._wfile, self._rfile):
+            try:
+                f.close()
+            except Exception:
+                pass
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._sock.close()
+
+
+def connect_tcp(host: str, port: int, timeout: float = 10.0) -> SocketChannel:
+    s = socket.create_connection((host, port), timeout=timeout)
+    s.settimeout(None)
+    return SocketChannel(s)

@@ -1,0 +1,73 @@
+"""Schema / Column / RecordBatch: layout, zero-copy wire roundtrip, kernels."""
+
+import numpy as np
+import pytest
+
+from repro.core import Column, RecordBatch, Schema, SchemaError, concat_batches, dtypes
+
+
+def make_batch(n=10):
+    return RecordBatch.from_pydict(
+        {
+            "i": np.arange(n, dtype=np.int64),
+            "f": np.linspace(0, 1, n).astype(np.float32),
+            "s": [f"row{k}" for k in range(n)],
+            "b": [bytes([k]) * (k + 1) for k in range(n)],
+        },
+        Schema([("i", "int64"), ("f", "float32"), ("s", "string"), ("b", "binary")]),
+    )
+
+
+def test_schema_duplicate_rejected():
+    with pytest.raises(SchemaError):
+        Schema([("a", "int64"), ("a", "int32")])
+
+
+def test_schema_roundtrip():
+    s = Schema([("a", "int64"), ("b", "string")])
+    assert Schema.from_bytes(s.to_bytes()) == s
+
+
+def test_batch_roundtrip_zero_copy():
+    b = make_batch(17)
+    hdr, bufs = b.to_buffers()
+    payload = memoryview(RecordBatch.payload_bytes(bufs))
+    b2 = RecordBatch.from_buffers(b.schema, hdr, payload)
+    assert b2.to_pydict() == b.to_pydict()
+    # zero-copy: the int column's buffer maps into the payload
+    assert b2.column("i").values.base is not None
+
+
+def test_take_filter_slice():
+    b = make_batch(10)
+    t = b.take(np.array([3, 1, 7]))
+    assert t.to_pydict()["i"] == [3, 1, 7]
+    assert t.to_pydict()["s"] == ["row3", "row1", "row7"]
+    f = b.filter(np.arange(10) % 2 == 0)
+    assert f.num_rows == 5 and f.to_pydict()["b"][1] == b"\x02\x02\x02"
+    s = b.slice(4, 8)
+    assert s.to_pydict()["i"] == [4, 5, 6, 7]
+    assert s.to_pydict()["s"] == ["row4", "row5", "row6", "row7"]
+
+
+def test_concat_and_iter_rows():
+    a, b = make_batch(4), make_batch(3)
+    c = concat_batches([a, b])
+    assert c.num_rows == 7
+    rows = list(c.iter_rows())
+    assert rows[5]["s"] == "row1" and rows[5]["i"] == 1
+
+
+def test_type_mismatch_rejected():
+    sch = Schema([("x", "float32")])
+    with pytest.raises(Exception):
+        RecordBatch(sch, [Column.from_values(dtypes.INT64, [1, 2])])
+
+
+def test_empty_batch():
+    sch = Schema([("x", "float32"), ("s", "string")])
+    e = RecordBatch.empty(sch)
+    assert e.num_rows == 0
+    hdr, bufs = e.to_buffers()
+    e2 = RecordBatch.from_buffers(sch, hdr, memoryview(RecordBatch.payload_bytes(bufs)))
+    assert e2.num_rows == 0

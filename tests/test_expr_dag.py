@@ -1,0 +1,141 @@
+"""Expressions, DAG validation, pushdown rewrites + equivalence."""
+
+import numpy as np
+import pytest
+
+from repro.core import Dag, PlanError, RecordBatch, Schema, StreamingDataFrame, col, execute, lit, optimize
+from repro.core.expr import Expr
+from repro.core.pushdown import required_columns
+
+
+def batch():
+    return RecordBatch.from_pydict(
+        {"a": np.arange(20, dtype=np.int64), "b": np.arange(20, dtype=np.float64) * 0.5, "s": [f"x{i%4}" for i in range(20)]}
+    )
+
+
+def test_expr_eval_and_wire():
+    b = batch()
+    e = ((col("a") * 2 + 1) > 10) & col("s").startswith("x1")
+    m = e.evaluate(b)
+    want = ((np.arange(20) * 2 + 1) > 10) & (np.arange(20) % 4 == 1)
+    assert (m == want).all()
+    e2 = Expr.from_json(e.to_json())
+    assert (e2.evaluate(b) == want).all()
+    assert e.referenced_columns() == {"a", "s"}
+
+
+def test_expr_isin_length():
+    b = batch()
+    assert col("a").isin([1, 5]).evaluate(b).sum() == 2
+    assert (col("s").length().evaluate(b) == 2).all()
+
+
+def _chain_dag():
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d/t")
+    m = bld.add("map", {"fn": "blob_lengths", "fn_params": {"column": "s"}}, [s])
+    f = bld.add("filter", {"predicate": col("a") > 5}, [m])
+    f2 = bld.add("filter", {"predicate": col("b") < 8.0}, [f])
+    sel = bld.add("select", {"columns": ["a", "nbytes"]}, [f2])
+    return bld.finish(sel)
+
+
+def test_dag_validation():
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    with pytest.raises(PlanError):
+        bld.add("filter", {"predicate": col("x") > 1}, [s, s])
+        bld.finish("nonexistent")
+
+
+def test_dag_cycle_rejected():
+    from repro.core.dag import Node
+
+    nodes = {
+        "a": Node("a", "filter", {"predicate": col("x") > 1}, ["b"]),
+        "b": Node("b", "filter", {"predicate": col("x") > 1}, ["a"]),
+    }
+    with pytest.raises(PlanError):
+        Dag(nodes, "a")
+
+
+def test_pushdown_sinks_into_source():
+    dag = _chain_dag()
+    opt = optimize(dag)
+    srcs = [n for n in opt.nodes.values() if n.op == "source"]
+    assert len(srcs) == 1
+    # both filters merged + sunk into the source scan (R1 + R3 + R7)
+    assert "predicate" in srcs[0].params
+    filters = [n for n in opt.nodes.values() if n.op == "filter"]
+    assert not filters
+    # no column pruning here: the map reads "*" so the source stays opaque
+    assert "columns" not in srcs[0].params
+
+
+def test_pushdown_prunes_columns_under_select():
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d/t")
+    f = bld.add("filter", {"predicate": col("a") > 5}, [s])
+    sel = bld.add("select", {"columns": ["b"]}, [f])
+    dag = bld.finish(sel)
+    opt = optimize(dag)
+    src = [n for n in opt.nodes.values() if n.op == "source"][0]
+    assert set(src.params["columns"]) == {"a", "b"}  # pred col + selected
+
+
+def test_pushdown_equivalence():
+    """optimize(dag) must stream identical rows as the unoptimized dag."""
+    data = StreamingDataFrame.from_pydict(
+        {"a": np.arange(50, dtype=np.int64), "b": np.arange(50, dtype=np.float64), "s": [f"s{i}" for i in range(50)]},
+        batch_rows=7,
+    )
+    dag = _chain_dag()
+    out1 = execute(dag, lambda n: data).collect().to_pydict()
+    out2 = execute(optimize(dag), lambda n: _apply_scan(data, n)).collect().to_pydict()
+    assert out1 == out2
+
+
+def _apply_scan(sdf, node):
+    """Honor source-level pushdown params the way the datasource does."""
+    cols = node.params.get("columns")
+    pred = node.params.get("predicate")
+
+    def gen():
+        for b in sdf.iter_batches():
+            if pred is not None:
+                b = b.filter(np.asarray(pred.evaluate(b), bool))
+            if cols is not None:
+                b = b.select([c for c in cols if c in b.schema])
+            yield b
+
+    schema = sdf.schema if cols is None else sdf.schema.select([c for c in cols if c in sdf.schema])
+    return StreamingDataFrame(schema, gen)
+
+
+def test_required_columns_narrow():
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d/t")
+    sel = bld.add("select", {"columns": ["a"]}, [s])
+    dag = bld.finish(sel)
+    req = required_columns(dag)
+    assert req[s] == {"a"}
+
+
+def test_limit_streams_lazily():
+    """limit must not pull more batches than needed (laziness probe)."""
+    pulled = []
+
+    def gen():
+        for i in range(100):
+            pulled.append(i)
+            yield RecordBatch.from_pydict({"a": np.arange(5, dtype=np.int64) + i * 5})
+
+    sdf = StreamingDataFrame(RecordBatch.from_pydict({"a": np.arange(1, dtype=np.int64)}).schema, gen)
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    lim = bld.add("limit", {"n": 12}, [s])
+    dag = bld.finish(lim)
+    out = execute(dag, lambda n: sdf).collect()
+    assert out.num_rows == 12
+    assert len(pulled) <= 3  # 3 batches of 5 rows cover 12

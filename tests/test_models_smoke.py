@@ -1,0 +1,120 @@
+"""Per-arch smoke tests: REDUCED same-family configs, one forward/train step
+on CPU, shape + finiteness asserts, and decode-vs-forward agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.models import build
+from repro.optim import AdamWConfig
+from repro.train.steps import make_train_state, make_train_step
+
+ASSIGNED = [
+    "chameleon-34b",
+    "moonshot-v1-16b-a3b",
+    "llama4-scout-17b-a16e",
+    "whisper-small",
+    "gemma-2b",
+    "stablelm-1.6b",
+    "granite-3-8b",
+    "qwen1.5-0.5b",
+    "zamba2-1.2b",
+    "xlstm-125m",
+]
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    r = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(r.integers(0, cfg.vocab_size, (b, s)).astype(np.int32)),
+        "labels": jnp.asarray(r.integers(0, cfg.vocab_size, (b, s)).astype(np.int32)),
+    }
+    if cfg.is_encdec:
+        batch["frames"] = jnp.asarray(r.normal(size=(b, cfg.enc_seq, cfg.d_model)).astype(np.float32))
+    return batch
+
+
+def test_all_assigned_archs_registered():
+    assert set(ASSIGNED) <= set(list_archs())
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    api = build(cfg)
+    params, axes = api.init(jax.random.PRNGKey(0))
+    # axes mirror params (axes leaves are tuples of logical names)
+    ax_struct = jax.tree.structure(axes, is_leaf=lambda x: isinstance(x, tuple))
+    assert jax.tree.structure(params) == ax_struct
+    batch = _batch(cfg)
+    logits, _ = api.forward(params, batch)
+    assert logits.shape == (2, 32, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+    # padded vocab tail is masked
+    if cfg.padded_vocab > cfg.vocab_size:
+        assert float(logits[..., cfg.vocab_size :].max()) < -1e8
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_one_train_step(arch):
+    cfg = get_config(arch).reduced()
+    state, _ = make_train_state(cfg, AdamWConfig(lr=1e-3), jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3)))
+    batch = _batch(cfg)
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    delta = jax.tree.map(lambda a, b: float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()), state["params"], new_state["params"])
+    assert max(jax.tree.leaves(delta)) > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    api = build(cfg)
+    params, _ = api.init(jax.random.PRNGKey(1))
+    b, s = 2, 21
+    batch = _batch(cfg, b, s, seed=3)
+    full, _ = api.forward(params, batch)
+    k = s - 3
+    pre = {k2: v for k2, v in batch.items() if k2 != "labels"}
+    pre["tokens"] = batch["tokens"][:, :k]
+    last, cache = api.prefill(params, pre, s + 2)
+    errs = [float(jnp.abs(last[:, -1] - full[:, k - 1]).max())]
+    cur = cache
+    for i in range(3):
+        logits, cur = api.decode_step(params, batch["tokens"][:, k + i : k + i + 1], cur)
+        errs.append(float(jnp.abs(logits[:, 0] - full[:, k + i]).max()))
+    rel = max(errs) / float(jnp.abs(full).max())
+    assert rel < 2e-3, f"{arch}: decode diverges from forward (rel={rel:.2e})"
+
+
+def test_param_counts_sane():
+    # full (non-reduced) configs: param counts in the right ballpark
+    expect = {
+        "qwen1.5-0.5b": (0.3e9, 0.8e9),
+        "gemma-2b": (2.0e9, 3.3e9),
+        "stablelm-1.6b": (1.2e9, 2.2e9),
+        "granite-3-8b": (7.0e9, 9.5e9),
+        "chameleon-34b": (30e9, 38e9),
+        # spec-literal moonshot (48L × 64e × d_ff 1408) is ~28B total / ~4B
+        # active; the "16b" in the assignment id reflects the smaller HF
+        # layer count — we follow the assignment config (DESIGN.md §4)
+        "moonshot-v1-16b-a3b": (26e9, 30e9),
+        "llama4-scout-17b-a16e": (95e9, 115e9),
+        "whisper-small": (0.2e9, 0.5e9),
+        "zamba2-1.2b": (1.0e9, 1.6e9),
+        "xlstm-125m": (0.1e9, 0.2e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).n_params()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params outside [{lo/1e9}, {hi/1e9}]"
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("moonshot-v1-16b-a3b")
+    assert cfg.active_params() < 0.45 * cfg.n_params()

@@ -1,0 +1,121 @@
+"""Optimizer substrate + checkpoint manager."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.checkpoint import CheckpointManager
+from repro.optim import (
+    AdamWConfig,
+    accumulated_value_and_grad,
+    adamw_init,
+    adamw_update,
+    compress_tree,
+    init_error_state,
+    warmup_cosine,
+)
+
+
+def quad_loss(params, batch):
+    x = params["x"]
+    return jnp.sum((x - batch["target"]) ** 2), {}
+
+
+def test_adamw_converges():
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0)
+    params = {"x": jnp.zeros(8)}
+    state = adamw_init(params)
+    batch = {"target": jnp.arange(8.0)}
+    vg = jax.value_and_grad(lambda p: quad_loss(p, batch)[0])
+    for _ in range(300):
+        loss, g = vg(params)
+        params, state, _ = adamw_update(cfg, params, {"x": g["x"]}, state)
+    assert float(loss) < 1e-2
+
+
+def test_grad_clip_and_lr_schedule():
+    sched = warmup_cosine(1.0, 10, 100)
+    assert float(sched(jnp.asarray(0))) == 0.0
+    assert float(sched(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-3)
+    assert float(sched(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-2)
+    cfg = AdamWConfig(lr=0.1, grad_clip=1.0)
+    params = {"x": jnp.zeros(4)}
+    state = adamw_init(params)
+    huge = {"x": jnp.full(4, 1e9)}
+    _, _, m = adamw_update(cfg, params, huge, state)
+    assert float(m["grad_norm"]) == pytest.approx(2e9, rel=1e-3)
+
+
+def test_accumulation_equivalence():
+    """n_micro grads must equal full-batch grads (linearity of mean-loss)."""
+
+    def loss_fn(params, batch):
+        w = params["w"]
+        pred = batch["x"] @ w
+        return jnp.mean((pred - batch["y"]) ** 2), {"d": jnp.zeros(())}
+
+    r = np.random.default_rng(0)
+    params = {"w": jnp.asarray(r.normal(size=(6,)).astype(np.float32))}
+    batch = {
+        "x": jnp.asarray(r.normal(size=(8, 6)).astype(np.float32)),
+        "y": jnp.asarray(r.normal(size=(8,)).astype(np.float32)),
+    }
+    _, _, g1 = accumulated_value_and_grad(loss_fn, 1)(params, batch)
+    _, _, g4 = accumulated_value_and_grad(loss_fn, 4)(params, batch)
+    assert_allclose(np.asarray(g1["w"], np.float32), np.asarray(g4["w"]), rtol=1e-5, atol=1e-6)
+
+
+def test_grad_compression_error_feedback():
+    """Compression is lossy per-step but error feedback keeps the running sum
+    faithful — the residual never exceeds one quantization bucket."""
+    r = np.random.default_rng(1)
+    g_true = [r.normal(size=(64,)).astype(np.float32) for _ in range(50)]
+    err = init_error_state({"g": jnp.zeros(64)})
+    total_sent = np.zeros(64, np.float32)
+    total_true = np.zeros(64, np.float32)
+    for g in g_true:
+        sent, err = compress_tree({"g": jnp.asarray(g)}, err)
+        total_sent += np.asarray(sent["g"])
+        total_true += g
+    resid = np.abs(total_sent - total_true).max()
+    bucket = np.abs(np.asarray(g_true)).max() / 127.0
+    assert resid <= 2 * bucket
+
+
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": {"b": np.arange(10, dtype=np.float32)}, "list": [np.ones(3), np.zeros(2)], "step": np.asarray(7)}
+    for step in (1, 2, 3):
+        cm.save(step, tree)
+    assert cm.list_steps() == [2, 3]
+    restored, manifest = cm.restore_latest()
+    assert manifest["step"] == 3
+    assert_allclose(restored["a"]["b"], tree["a"]["b"])
+    assert_allclose(restored["list"][1], tree["list"][1])
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=5)
+    tree = {"w": np.arange(100, dtype=np.float32)}
+    cm.save(1, tree)
+    cm.save(2, tree)
+    # corrupt the newest shard
+    d = os.path.join(str(tmp_path), "step_0000000002")
+    shard = [f for f in os.listdir(d) if f.startswith("shard")][0]
+    with open(os.path.join(d, shard), "r+b") as f:
+        f.seek(10)
+        f.write(b"\xde\xad")
+    restored, manifest = cm.restore_latest()
+    assert manifest["step"] == 1  # fell back to the valid checkpoint
+
+
+def test_checkpoint_async(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    cm.save_async(5, {"x": np.ones(4)})
+    cm.wait()
+    restored, mf = cm.restore_latest()
+    assert mf["step"] == 5 and restored["x"].sum() == 4

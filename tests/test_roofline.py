@@ -1,0 +1,46 @@
+"""Roofline analysis: HLO collective parsing + term math."""
+
+from repro.roofline.analysis import HW, dominant_term, parse_collective_bytes, roofline_terms
+
+HLO = """
+HloModule jit_step, is_scheduled=true, num_partitions=256
+%all-reduce.1 = f32[256,1024]{1,0} all-reduce(%dot), channel_id=1, replica_groups=[16,16]<=[16,16]T(1,0), use_global_device_ids=true, to_apply=%add
+%ag = bf16[512,128]{1,0} all-gather(%p0), channel_id=2, replica_groups=[16,16]<=[256], dimensions={0}
+%rs = bf16[32,128]{1,0} reduce-scatter(%x), channel_id=3, replica_groups=[16,16]<=[256], to_apply=%add
+%cp = f32[64]{0} collective-permute(%y), channel_id=4, source_target_pairs={{0,1}}
+%ars = (f32[10]{0}, f32[10]{0}) all-reduce-start(%z), channel_id=5, replica_groups={{0,1,2,3}}
+%ard = f32[10]{0} all-reduce-done(%ars)
+%a2a = bf16[16,64]{1,0} all-to-all(%w), channel_id=6, replica_groups=[32,8]<=[256], dimensions={0}
+"""
+
+
+def test_parse_collective_bytes():
+    out = parse_collective_bytes(HLO)
+    assert out["all-reduce"] == 256 * 1024 * 4 + 10 * 4  # plain + start(last tuple shape)
+    assert out["all-gather"] == 512 * 128 * 2 // 16  # result / group_size
+    assert out["reduce-scatter"] == 32 * 128 * 2 * 16  # result * group_size
+    assert out["collective-permute"] == 64 * 4
+    assert out["all-to-all"] == 16 * 64 * 2
+    assert out["_counts"]["all-reduce"] == 2  # -done skipped
+    assert out["_total"] == sum(out[k] for k in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute"))
+
+
+def test_roofline_terms_and_bound():
+    t = roofline_terms(197e12, 819e9 * 2, 50e9 * 3)
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["memory_s"] - 2.0) < 1e-9
+    assert abs(t["collective_s"] - 3.0) < 1e-9
+    assert t["bound"] == "collective"
+    assert dominant_term({"compute_s": 5, "memory_s": 1, "collective_s": 2}) == "compute"
+
+
+def test_model_flops():
+    from repro.configs import SHAPES, get_config
+    from repro.roofline.analysis import model_flops
+
+    cfg = get_config("qwen1.5-0.5b")
+    mf = model_flops(cfg, SHAPES["train_4k"])
+    n = cfg.n_params()
+    assert abs(mf - 6 * n * 256 * 4096) / mf < 1e-9
+    mfd = model_flops(cfg, SHAPES["decode_32k"])
+    assert abs(mfd - 2 * n * 128) / mfd < 1e-9

@@ -1,0 +1,83 @@
+"""Sharding rule engine + elastic shard assignment."""
+
+import numpy as np
+import pytest
+
+from repro.distributed.elastic import assign_shards, owner_of, plan_recovery
+from repro.distributed.sharding import DEFAULT_RULES, pspec_for
+
+
+class FakeMesh:
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape)
+
+    @property
+    def shape(self):
+        return dict(zip(self.axis_names, self.devices.shape))
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+MESH3 = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_pspec_basic_tp_fsdp():
+    spec = pspec_for(("embed", "ffn"), (4096, 12800), MESH, DEFAULT_RULES)
+    assert tuple(spec) == ("data", "model")
+
+
+def test_pspec_divisibility_fallback():
+    # kv_heads=1 (gemma MQA) cannot shard over model=16 → replicated
+    spec = pspec_for(("embed", "kv_heads", "head_dim"), (2048, 1, 256), MESH, DEFAULT_RULES)
+    assert tuple(spec) == ("data",)
+    # odd vocab is not divisible by 16 → dropped
+    spec = pspec_for(("vocab", "embed"), (49155, 4096), MESH, DEFAULT_RULES)
+    assert tuple(spec) == (None, "data")
+    # padded vocab shards fine
+    spec = pspec_for(("vocab", "embed"), (49408, 4096), MESH, DEFAULT_RULES)
+    assert tuple(spec) == ("model", "data")
+
+
+def test_pspec_multi_axis_batch():
+    spec = pspec_for(("act_batch", None, None), (256, 4096, 1024), MESH3, DEFAULT_RULES)
+    assert tuple(spec)[0] == ("pod", "data")
+    # batch=1 (long_500k): everything dropped
+    spec = pspec_for(("act_batch", None), (1, 128), MESH3, DEFAULT_RULES)
+    assert tuple(spec) == ()
+
+
+def test_pspec_partial_axis_product():
+    # batch 32 divides pod*data=32 on the 3d mesh
+    spec = pspec_for(("act_batch",), (32,), MESH3, DEFAULT_RULES)
+    assert tuple(spec) == (("pod", "data"),)
+    # batch 2 only divides pod (single axis collapses from tuple to name)
+    spec = pspec_for(("act_batch",), (2,), MESH3, DEFAULT_RULES)
+    assert tuple(spec) == ("pod",)
+
+
+def test_rendezvous_deterministic_and_balanced():
+    files = [f"file_{i}" for i in range(2000)]
+    hosts = [f"h{i}" for i in range(8)]
+    a1 = assign_shards(files, hosts)
+    a2 = assign_shards(files, hosts)
+    assert a1 == a2
+    sizes = [len(v) for v in a1.values()]
+    assert min(sizes) > 150 and max(sizes) < 350  # roughly balanced
+
+
+def test_rendezvous_minimal_churn():
+    files = [f"file_{i}" for i in range(1000)]
+    hosts = [f"h{i}" for i in range(10)]
+    moved = plan_recovery(files, hosts, hosts[:-1])  # h9 dies
+    # only h9's files move
+    assert all(old == "h9" for old, _ in moved.values())
+    lost = sum(1 for f in files if owner_of(f, hosts) == "h9")
+    assert len(moved) == lost
+
+
+def test_rendezvous_weights():
+    files = [f"f{i}" for i in range(2000)]
+    hosts = ["big", "small"]
+    a = assign_shards(files, hosts, weights={"big": 3.0, "small": 1.0})
+    ratio = len(a["big"]) / max(len(a["small"]), 1)
+    assert 2.0 < ratio < 4.5

@@ -1,0 +1,75 @@
+"""End-to-end behaviour: the paper's full loop on one box.
+
+Scenario (paper Fig. 3): reviews live at data-center A, image blobs at B.
+A client COOKs a cross-domain DAG; operators run in-situ; only filtered
+columnar streams cross domains; the result feeds a JAX consumer.  Then a
+server dies mid-plan and the replica transparently takes over.
+"""
+
+import numpy as np
+
+from repro.client import LocalNetwork
+from repro.client.jax_adapter import batch_to_arrays
+from repro.core import col
+from repro.data import write_mixed_tree, write_reviews_jsonl
+from repro.server import FairdServer
+
+
+def test_full_cross_domain_pipeline(tmp_path):
+    write_reviews_jsonl(str(tmp_path / "dcA" / "reviews.jsonl"), rows=300, seed=0)
+    write_mixed_tree(str(tmp_path / "dcB"), large_bytes=1 << 16, n_medium=3, medium_bytes=1 << 14, n_small=20, small_bytes=256)
+
+    net = LocalNetwork()
+    sa = FairdServer("dcA:3101")
+    sa.catalog.register_path("reviews", str(tmp_path / "dcA"))
+    sb = FairdServer("dcB:3101")
+    sb.catalog.register_path("images", str(tmp_path / "dcB"))
+    sb2 = FairdServer("dcB2:3101")
+    sb2.catalog.register_path("images", str(tmp_path / "dcB"))
+    for s in (sa, sb, sb2):
+        net.register(s)
+    net.add_replica("dcB:3101", "dcB2:3101")
+
+    client = net.client_for("dcA:3101")
+
+    # 1. discovery
+    seen = client.get("dacp://dcA:3101/").collect().to_pydict()["dataset"]
+    assert seen == ["reviews"]
+
+    # 2. in-situ filtering at A: only 5-star reviews cross the wire
+    stars5 = (
+        client.open("dacp://dcA:3101/reviews/reviews.jsonl")
+        .filter(col("stars") == 5)
+        .select("review_id", "useful")
+        .collect()
+    )
+    assert stars5.num_rows < 300 and stars5.schema.names == ["review_id", "useful"]
+
+    # 3. cross-domain union with metadata-only scan at B
+    small_meta = (
+        client.open("dacp://dcB:3101/images")
+        .filter(col("size") < 1000)
+        .project(keep=False, useful=col("size") * 0, review_id=col("name"))
+        .select("review_id", "useful")
+    )
+    a = client.open("dacp://dcA:3101/reviews/reviews.jsonl").filter(col("stars") == 5).select("review_id", "useful")
+    combined = a.union(small_meta).collect()
+    assert combined.num_rows == stars5.num_rows + 20
+
+    # 4. feed a numeric column into the JAX consumer path
+    arrays = batch_to_arrays(combined, ["useful"])
+    assert arrays["useful"].dtype == np.int64 and len(arrays["useful"]) == combined.num_rows
+
+    # 5. kill B mid-workflow; replica serves the re-issued sub-task
+    net.set_down("dcB:3101")
+    retry = client.open("dacp://dcB:3101/images").filter(col("size") < 1000).select("name").collect()
+    assert retry.num_rows == 20
+    net.set_down("dcB:3101", False)
+
+    # 6. PUT the derived result back to A (streaming ingest) and re-read
+    from repro.core import StreamingDataFrame
+
+    resp = client.put("dacp://dcA:3101/reviews/derived/stars5", StreamingDataFrame.from_batches([combined]))
+    assert resp["rows"] == combined.num_rows
+    back = client.get("dacp://dcA:3101/reviews/derived/stars5").collect()
+    assert back.num_rows == combined.num_rows
