@@ -8,6 +8,8 @@ One section per paper figure/claim:
     unstructured  — Fig. 5 (mixed blob workload, BLOB/Binary/FTP)
     pushdown      — §I-A/§III-B read amplification + filter_select kernel
     cook_insitu   — §III-D/§VI-C move-operators-not-data
+    session_reuse — §III-C phased interaction: v2 multiplexed session vs
+                    channel-per-request for N small GETs
     kernels       — §IV-B hot-spot kernels (interpret-mode indicative)
 
 Results additionally land in benchmarks/results/benchmarks.json.
@@ -21,7 +23,7 @@ import sys
 def main() -> None:
     quick = "--quick" in sys.argv
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-    from benchmarks import cook_insitu, kernels_bench, pushdown, structured, unstructured
+    from benchmarks import cook_insitu, kernels_bench, pushdown, session_reuse, structured, unstructured
 
     out = {}
     print("name,us_per_call,derived")
@@ -29,6 +31,7 @@ def main() -> None:
     out["unstructured"] = unstructured.run(scale=1 / 512 if quick else 1 / 64)
     out["pushdown"] = pushdown.run(rows=10_000 if quick else 100_000)
     out["cook_insitu"] = cook_insitu.run(rows=10_000 if quick else 100_000)
+    out["session_reuse"] = session_reuse.run(n_gets=40 if quick else 200)
     out["kernels"] = kernels_bench.run()
 
     res_dir = os.path.join(os.path.dirname(__file__), "results")
@@ -49,6 +52,11 @@ def main() -> None:
     print(f"#  FTP up/down symmetry: {u['ftp_updown_sym']:.2f} (paper: 0.73–0.87); DACP {s['dacp_updown_sym']:.2f} (~1.0)")
     print(f"#  read amplification avoided: {p['amplification']:.1f}x fewer bytes with pushdown")
     print(f"#  in-situ COOK: {c['byte_reduction']:.0f}x fewer WAN bytes, {c['wan_speedup']:.2f}x at 3.45Gb/s")
+    sr = out["session_reuse"]
+    print(
+        f"#  v2 session reuse: {sr['speedup_session']:.2f}x per GET over channel-per-request; "
+        f"{sr['speedup_concurrent']:.2f}x with 8 in-flight"
+    )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,105 @@
+"""Session reuse — v2 multiplexed session vs v1 channel-per-request.
+
+Measures the per-request cost of N small GETs over real loopback TCP:
+
+  * ``channel``    — a fresh TCP connection per request (the v1 discipline;
+    connect + HELLO-token reuse amortized, but every GET pays socket setup)
+  * ``session``    — all GETs ride one persistent multiplexed channel
+  * ``concurrent`` — the same GETs issued 8-at-a-time over the one session
+    (in-flight pipelining, the §III-C phased-interaction payoff)
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+
+from benchmarks.common import emit, timer
+
+
+def _make_dataset(root: str, rows: int) -> None:
+    os.makedirs(os.path.join(root, "d"), exist_ok=True)
+    with open(os.path.join(root, "d", "t.csv"), "w") as f:
+        f.write("id,score\n")
+        for i in range(rows):
+            f.write(f"{i},{i * 0.5}\n")
+
+
+def run(n_gets: int = 200, rows: int = 64) -> dict:
+    from repro.client.client import DacpClient
+    from repro.server import FairdServer
+    from repro.transport.channel import connect_tcp
+
+    tmp = tempfile.mkdtemp(prefix="dacp_bench_")
+    _make_dataset(tmp, rows)
+    server = FairdServer("bench:0")
+    server.catalog.register_path("d", os.path.join(tmp, "d"))
+    port = server.serve_tcp()
+    authority = f"127.0.0.1:{port}"
+    uri = f"dacp://{authority}/d/t.csv"
+
+    def factory():
+        return connect_tcp("127.0.0.1", port)
+
+    inflight = 8
+    rounds = 3  # alternate modes per round; best-of-rounds tames scheduler noise
+    try:
+        legacy = DacpClient(factory, authority, multiplex=False)
+        mux = DacpClient(factory, authority)
+        legacy.get(uri).collect()  # warm the token + page cache
+        mux.get(uri).collect()  # warm the session
+
+        chan_s, sess_s, conc_s = [], [], []
+        errors: list = []
+
+        def worker(k: int) -> None:
+            try:
+                for _ in range(k):
+                    mux.get(uri).collect()
+            except Exception as e:  # pragma: no cover - surfaces in results
+                errors.append(e)
+
+        for _ in range(rounds):
+            with timer() as t_chan:
+                for _ in range(n_gets):
+                    legacy.get(uri).collect()
+            chan_s.append(t_chan.s)
+            with timer() as t_sess:
+                for _ in range(n_gets):
+                    mux.get(uri).collect()
+            sess_s.append(t_sess.s)
+            with timer() as t_conc:
+                threads = [threading.Thread(target=worker, args=(n_gets // inflight,)) for _ in range(inflight)]
+                for t in threads:
+                    t.start()
+                for t in threads:
+                    t.join()
+            conc_s.append(t_conc.s)
+            if errors:
+                raise errors[0]
+        mux.close()
+    finally:
+        server.shutdown()
+
+    us_chan = min(chan_s) / n_gets * 1e6
+    us_sess = min(sess_s) / n_gets * 1e6
+    us_conc = min(conc_s) / ((n_gets // inflight) * inflight) * 1e6
+    emit("session_channel_per_request", us_chan, f"{n_gets} GETs, fresh TCP each")
+    emit("session_multiplexed", us_sess, f"speedup {us_chan / us_sess:.2f}x")
+    emit("session_multiplexed_8way", us_conc, f"speedup {us_chan / us_conc:.2f}x")
+    return {
+        "us_per_get_channel": us_chan,
+        "us_per_get_session": us_sess,
+        "us_per_get_session_concurrent": us_conc,
+        "speedup_session": us_chan / us_sess,
+        "speedup_concurrent": us_chan / us_conc,
+    }
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    print("name,us_per_call,derived")
+    print(run())

@@ -1,6 +1,16 @@
-"""DACP client SDK: chainable lazy API + network fabric + JAX adapter."""
+"""DACP client SDK: multiplexed sessions, chainable lazy API, network fabric."""
 
-from repro.client.client import DacpClient, RemoteFrame, open_blob
+from repro.client.client import DacpClient, GroupedFrame, RemoteFrame, open_blob
 from repro.client.network import LocalNetwork, Network, TcpNetwork
+from repro.client.session import DacpSession
 
-__all__ = ["DacpClient", "RemoteFrame", "open_blob", "LocalNetwork", "Network", "TcpNetwork"]
+__all__ = [
+    "DacpClient",
+    "DacpSession",
+    "GroupedFrame",
+    "RemoteFrame",
+    "open_blob",
+    "LocalNetwork",
+    "Network",
+    "TcpNetwork",
+]

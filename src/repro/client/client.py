@@ -1,57 +1,64 @@
-"""faird client SDK (paper §IV-D).
+"""faird client SDK (paper §IV-D) — DACP v2.
 
 A lightweight client that masks channel management and the phased interaction
-(HELLO → token → requests).  It does not execute computations: the chainable
-``RemoteFrame`` API builds a logical DAG client-side; triggering consumption
-serializes the DAG and submits it as COOK.  Structured results arrive as
-zero-copy columnar batches; Binary blob columns can be re-opened ("expanded")
-as new SDFs via ``open_blob``.
+(HELLO → token → requests).  Since v2 every ``DacpClient`` owns a persistent
+**multiplexed session** (``repro.client.session.DacpSession``): one long-lived
+channel carries all verbs concurrently, the token renews transparently
+mid-session, and legacy v1 peers transparently degrade to the old
+channel-per-request discipline.
+
+The client does not execute computations: the chainable ``RemoteFrame`` API
+builds a logical DAG client-side; triggering consumption serializes the DAG
+and submits it as COOK.  ``group_by(...).agg(...)`` and ``join(...)`` lower to
+``aggregate`` / ``join`` operators that the optimizer pushes toward the data
+(cross-domain plans ship partial aggregates, not raw rows).  Structured
+results arrive as zero-copy columnar batches; Binary blob columns re-open
+("expand") as new SDFs via ``open_blob`` — parsed in memory, never spooled.
 """
 
 from __future__ import annotations
 
-import time
-
 from repro.core.dag import Dag, DagBuilder
-from repro.core.errors import DacpError, TransportError
 from repro.core.expr import Expr
 from repro.core.sdf import StreamingDataFrame
-from repro.transport import framing
-from repro.transport.flight import recv_sdf, send_sdf
+from repro.client.session import DacpSession
 
-__all__ = ["DacpClient", "RemoteFrame", "open_blob"]
+__all__ = ["DacpClient", "RemoteFrame", "GroupedFrame", "open_blob", "AGG_FNS"]
+
+AGG_FNS = ("sum", "mean", "min", "max", "count")
 
 
 class DacpClient:
-    """One logical connection to a faird server (channel-per-request)."""
+    """One logical connection to a faird server (multiplexed session)."""
 
-    def __init__(self, channel_factory, authority: str, subject: str = "anonymous", credential: str | None = None):
+    def __init__(
+        self,
+        channel_factory,
+        authority: str,
+        subject: str = "anonymous",
+        credential: str | None = None,
+        multiplex: bool = True,
+    ):
         self._factory = channel_factory
         self.authority = authority
         self.subject = subject
         self.credential = credential
-        self._token: str | None = None
-        self._token_exp: float = 0.0
-        self.bytes_received = 0
-        self.bytes_sent = 0
+        self.session = DacpSession(
+            channel_factory,
+            authority,
+            subject=subject,
+            credential=credential,
+            multiplex=multiplex,
+        )
 
-    # -- session -----------------------------------------------------------------
-    def _session_token(self) -> str:
-        if self._token is None or time.time() > self._token_exp - 5.0:
-            ch = self._factory()
-            try:
-                hdr = {"verb": "HELLO", "subject": self.subject}
-                if self.credential is not None:
-                    hdr["credential"] = self.credential
-                ch.send(framing.REQUEST, hdr)
-                ftype, resp, _ = ch.recv()
-                if ftype == framing.ERROR:
-                    raise DacpError.from_wire(resp)
-                self._token = resp["token"]
-                self._token_exp = float(resp.get("expires", time.time() + 240))
-            finally:
-                ch.close()
-        return self._token
+    # -- wire accounting -----------------------------------------------------------
+    @property
+    def bytes_sent(self) -> int:
+        return self.session.bytes_sent
+
+    @property
+    def bytes_received(self) -> int:
+        return self.session.bytes_received
 
     # -- verbs --------------------------------------------------------------------
     def get(
@@ -61,72 +68,40 @@ class DacpClient:
         columns=None,
         predicate: Expr | None = None,
         batch_rows: int | None = None,
+        advisory_columns: bool = False,
     ) -> StreamingDataFrame:
-        ch = self._factory()
-        hdr = {"verb": "GET", "uri": str(uri), "token": token or self._session_token()}
-        if columns is not None:
-            hdr["columns"] = list(columns)
-        if predicate is not None:
-            hdr["predicate"] = predicate.to_json()
-        if batch_rows:
-            hdr["batch_rows"] = int(batch_rows)
-        ch.send(framing.REQUEST, hdr)
-        sdf = recv_sdf(ch)
-        return _close_after(sdf, ch, self)
+        return self.session.get(
+            uri,
+            token=token,
+            columns=columns,
+            predicate=predicate,
+            batch_rows=batch_rows,
+            advisory_columns=advisory_columns,
+        )
 
     def put(self, uri: str, sdf: StreamingDataFrame) -> dict:
-        ch = self._factory()
-        try:
-            ch.send(framing.REQUEST, {"verb": "PUT", "uri": str(uri), "token": self._session_token()})
-            ftype, resp, _ = ch.recv()
-            if ftype == framing.ERROR:
-                raise DacpError.from_wire(resp)
-            send_sdf(ch, sdf)
-            ftype, resp, _ = ch.recv()
-            if ftype == framing.ERROR:
-                raise DacpError.from_wire(resp)
-            self.bytes_sent += ch.bytes_sent
-            return resp
-        finally:
-            ch.close()
+        return self.session.put(uri, sdf)
 
     def cook(self, dag: Dag) -> StreamingDataFrame:
-        ch = self._factory()
-        ch.send(framing.REQUEST, {"verb": "COOK", "token": self._session_token()}, dag.to_bytes())
-        sdf = recv_sdf(ch)
-        return _close_after(sdf, ch, self)
+        return self.session.cook(dag)
 
     def submit(self, fragment: Dag, flow_id: str, exchange_tokens: dict) -> str:
         """Internal (scheduler): register a plan fragment; returns pull token."""
-        ch = self._factory()
-        try:
-            ch.send(
-                framing.REQUEST,
-                {
-                    "verb": "SUBMIT",
-                    "token": self._session_token(),
-                    "flow_id": flow_id,
-                    "exchange_tokens": exchange_tokens,
-                },
-                fragment.to_bytes(),
-            )
-            ftype, resp, _ = ch.recv()
-            if ftype == framing.ERROR:
-                raise DacpError.from_wire(resp)
-            return resp["token"]
-        finally:
-            ch.close()
+        return self.session.submit(fragment, flow_id, exchange_tokens)
+
+    def list(self, prefix: str | None = None, offset: int = 0, limit: int | None = None) -> dict:
+        """Enumerate the peer's catalog (paged).  Metadata only — no data moves."""
+        return self.session.list(prefix=prefix, offset=offset, limit=limit)
+
+    def describe(self, uri: str) -> dict:
+        """Schema + stats + policy for a URI, without streaming any data."""
+        return self.session.describe(uri)
 
     def ping(self, timeout: float = 5.0) -> dict:
-        ch = self._factory()
-        try:
-            ch.send(framing.REQUEST, {"verb": "PING"})
-            ftype, resp, _ = ch.recv(timeout=timeout)
-            if ftype == framing.ERROR:
-                raise DacpError.from_wire(resp)
-            return resp
-        finally:
-            ch.close()
+        return self.session.ping(timeout=timeout)
+
+    def close(self) -> None:
+        self.session.close()
 
     # -- chainable API ---------------------------------------------------------------
     def open(self, uri: str) -> "RemoteFrame":
@@ -136,20 +111,6 @@ class DacpClient:
 
     def dataframe(self, uri: str) -> "RemoteFrame":
         return self.open(uri)
-
-
-def _close_after(sdf: StreamingDataFrame, ch, client: DacpClient) -> StreamingDataFrame:
-    """Wrap a one-shot stream so the channel closes (and bytes are counted)
-    when the stream ends."""
-
-    def gen():
-        try:
-            yield from sdf.iter_batches()
-        finally:
-            client.bytes_received += ch.bytes_received
-            ch.close()
-
-    return StreamingDataFrame.one_shot(sdf.schema, gen())
 
 
 class RemoteFrame:
@@ -163,6 +124,10 @@ class RemoteFrame:
     def _chain(self, op: str, params: dict, extra_inputs=()) -> "RemoteFrame":
         nid = self._b.add(op, params, [self._head, *extra_inputs])
         return RemoteFrame(self._client, self._b, nid)
+
+    def _merge(self, other: "RemoteFrame") -> None:
+        # merge the other builder's nodes into ours (ids are globally unique)
+        self._b.nodes.update(other._b.nodes)
 
     def filter(self, predicate: Expr) -> "RemoteFrame":
         return self._chain("filter", {"predicate": predicate})
@@ -184,9 +149,26 @@ class RemoteFrame:
         return self._chain("limit", {"n": int(n)})
 
     def union(self, other: "RemoteFrame") -> "RemoteFrame":
-        # merge the other builder's nodes into ours (ids are globally unique)
-        self._b.nodes.update(other._b.nodes)
+        self._merge(other)
         nid = self._b.add("union", {}, [self._head, other._head])
+        return RemoteFrame(self._client, self._b, nid)
+
+    # -- relational ops (v2) -------------------------------------------------------
+    def group_by(self, *keys) -> "GroupedFrame":
+        """Start a grouped aggregation: ``rf.group_by("k").agg(total=("sum", "v"))``."""
+        ks = list(keys[0]) if len(keys) == 1 and isinstance(keys[0], (list, tuple)) else list(keys)
+        if not ks:
+            raise ValueError("group_by needs at least one key column")
+        return GroupedFrame(self, ks)
+
+    def join(self, other: "RemoteFrame", on) -> "RemoteFrame":
+        """Inner equi-join on key columns.  Right-side non-key columns that
+        collide with left names are suffixed ``_r``."""
+        on = [on] if isinstance(on, str) else list(on)
+        if not on:
+            raise ValueError("join needs at least one key column")
+        self._merge(other)
+        nid = self._b.add("join", {"on": on}, [self._head, other._head])
         return RemoteFrame(self._client, self._b, nid)
 
     # -- terminal ops -------------------------------------------------------------
@@ -212,21 +194,41 @@ class RemoteFrame:
         return self.stream().count_rows()
 
 
-def open_blob(value: bytes, fmt: str = ""):
+class GroupedFrame:
+    """``RemoteFrame.group_by(...)`` result: holds keys, awaits ``agg``."""
+
+    def __init__(self, frame: RemoteFrame, keys: list):
+        self._frame = frame
+        self._keys = keys
+
+    def agg(self, **aggs) -> RemoteFrame:
+        """Each kwarg is an output column: ``name=("fn", "column")`` with fn in
+        sum/mean/min/max/count, or ``name="count"`` for a bare row count."""
+        if not aggs:
+            raise ValueError("agg needs at least one aggregation")
+        norm = {}
+        for out, spec in aggs.items():
+            if isinstance(spec, str):
+                fn, column = spec, None
+            else:
+                fn, column = spec
+            fn = fn.lower()
+            if fn not in AGG_FNS:
+                raise ValueError(f"unknown aggregation fn {fn!r} (have {AGG_FNS})")
+            if fn != "count" and column is None:
+                raise ValueError(f"aggregation {out}={fn!r} needs a source column")
+            norm[out] = {"fn": fn, "column": column}
+        return self._frame._chain("aggregate", {"keys": list(self._keys), "aggs": norm, "mode": "full"})
+
+    def count(self, name: str = "count") -> RemoteFrame:
+        return self.agg(**{name: "count"})
+
+
+def open_blob(value: bytes, fmt: str = "") -> StreamingDataFrame:
     """Expandable blob column (paper §III-A): re-open binary content as a new
-    SDF.  Structured formats parse; anything else becomes a chunk stream."""
-    import io
-    import os
-    import tempfile
+    SDF.  Structured formats (csv/jsonl/npz/npy) parse in-memory and stream
+    batch-by-batch; anything else becomes a lazy chunk stream.  No temp files,
+    no full materialization."""
+    from repro.server.datasource import scan_bytes
 
-    from repro.server import datasource
-
-    # datasource is file-oriented; spool the blob (kept small by pushdown)
-    suffix = f".{fmt.lstrip('.')}" if fmt else ".bin"
-    with tempfile.NamedTemporaryFile(suffix=suffix, delete=False) as f:
-        f.write(value)
-        tmp = f.name
-    sdf = datasource.scan_path(tmp)
-    collected = sdf.collect()  # materialize before unlink
-    os.unlink(tmp)
-    return StreamingDataFrame.from_batches([collected])
+    return scan_bytes(bytes(value), fmt)

@@ -4,6 +4,11 @@ The scheduler and servers resolve peers through a ``Network`` so the same
 code runs over in-process channel pairs (tests, co-hosted data plane,
 benchmarks without kernel TCP noise) and real TCP sockets.
 
+Clients are cached per authority and each owns a persistent multiplexed v2
+session, so every consumer of the fabric (scheduler submits, engine exchange
+pulls, user verbs) shares one live channel per peer.  ``close_all`` tears the
+sessions down politely (BYE).
+
 Replicas: scientific data centers mirror datasets; ``add_replica`` records
 that an authority's data is also served elsewhere.  The scheduler uses this
 for fail-over and straggler re-issue.
@@ -36,6 +41,14 @@ class Network:
     def ping(self, authority: str, timeout: float = 5.0) -> dict:
         return self.client_for(authority).ping(timeout=timeout)
 
+    def close_all(self) -> None:
+        """BYE + teardown for every cached client session."""
+        for client in list(getattr(self, "_clients", {}).values()):
+            try:
+                client.close()
+            except Exception:  # teardown is best-effort
+                pass
+
 
 class LocalNetwork(Network):
     """In-process cluster: every server is an object; channels are queue pairs."""
@@ -53,9 +66,16 @@ class LocalNetwork(Network):
             server.network = self
 
     def set_down(self, authority: str, down: bool = True) -> None:
-        """Fault injection for tests/benchmarks."""
+        """Fault injection for tests/benchmarks.  Taking a server down also
+        severs any cached client's live session (a crash, not a polite BYE)."""
         with self._lock:
             (self._down.add if down else self._down.discard)(authority)
+            client = self._clients.pop(authority, None) if down else None
+        if client is not None:
+            try:
+                client.close()
+            except Exception:
+                pass
 
     def server(self, authority: str):
         return self._servers[authority]
@@ -64,26 +84,27 @@ class LocalNetwork(Network):
         return sorted(self._servers)
 
     def client_for(self, authority: str) -> DacpClient:
+        # construct-under-lock: concurrent callers (scheduler waves) must
+        # share ONE client/session per authority, never race-create two
         with self._lock:
             if authority in self._clients and authority not in self._down:
                 return self._clients[authority]
-        try:
-            srv = self._servers[authority]
-        except KeyError:
-            raise ResourceNotFound(f"no server registered at {authority!r}") from None
+            try:
+                srv = self._servers[authority]
+            except KeyError:
+                raise ResourceNotFound(f"no server registered at {authority!r}") from None
 
-        def factory():
-            if authority in self._down:
-                raise ResourceNotFound(f"server {authority} is down")
-            client_end, server_end = channel_pair()
-            t = threading.Thread(target=srv.handle_channel, args=(server_end,), daemon=True)
-            t.start()
-            return client_end
+            def factory():
+                if authority in self._down:
+                    raise ResourceNotFound(f"server {authority} is down")
+                client_end, server_end = channel_pair()
+                t = threading.Thread(target=srv.handle_channel, args=(server_end,), daemon=True)
+                t.start()
+                return client_end
 
-        client = DacpClient(factory, authority=authority)
-        with self._lock:
+            client = DacpClient(factory, authority=authority)
             self._clients[authority] = client
-        return client
+            return client
 
 
 class TcpNetwork(Network):
@@ -100,12 +121,11 @@ class TcpNetwork(Network):
         with self._lock:
             if authority in self._clients:
                 return self._clients[authority]
-        host, _, port = authority.partition(":")
+            host, _, port = authority.partition(":")
 
-        def factory():
-            return connect_tcp(host, int(port))
+            def factory():
+                return connect_tcp(host, int(port))
 
-        client = DacpClient(factory, authority=authority, subject=self.subject, credential=self.credential)
-        with self._lock:
+            client = DacpClient(factory, authority=authority, subject=self.subject, credential=self.credential)
             self._clients[authority] = client
-        return client
+            return client

@@ -7,15 +7,26 @@ remote data center safe and schedulable.
 
 Node operator vocabulary (closed set, versioned):
 
-    source   params: {uri}                      0 inputs
-    filter   params: {predicate: Expr}          1 input
-    select   params: {columns: [str]}           1 input
-    project  params: {exprs: {name: Expr}, keep: bool}  1 input
-    map      params: {fn: str, fn_params: {}}   1 input   (registered fn name)
-    rebatch  params: {rows: int}                1 input
-    limit    params: {n: int}                   1 input
-    union    params: {}                         N inputs
-    exchange params: {uri, token}               0 inputs  (planner-inserted pull edge)
+    source    params: {uri}                      0 inputs
+    filter    params: {predicate: Expr}          1 input
+    select    params: {columns: [str]}           1 input
+    project   params: {exprs: {name: Expr}, keep: bool}  1 input
+    map       params: {fn: str, fn_params: {}}   1 input   (registered fn name)
+    rebatch   params: {rows: int}                1 input
+    limit     params: {n: int}                   1 input
+    union     params: {}                         N inputs
+    aggregate params: {keys: [str],              1 input
+                       aggs: {out: {fn, column}},
+                       mode: full|partial|final}
+    join      params: {on: [str]}                2 inputs  (inner equi-join;
+                                                 left = probe, right = build)
+    exchange  params: {uri, token}               0 inputs  (planner-inserted pull edge)
+
+``aggregate`` modes implement distributed partial aggregation: ``full`` is
+the user-facing op; the optimizer may split it into per-branch ``partial``
+aggregates (emitting decomposed state: sums + counts for mean) combined by
+one ``final`` aggregate above the cross-domain merge, so exchanges carry
+partial aggregates instead of raw rows.
 """
 
 from __future__ import annotations
@@ -38,6 +49,8 @@ OPS = {
     "rebatch": (1, 1),
     "limit": (1, 1),
     "union": (1, 64),
+    "aggregate": (1, 1),
+    "join": (2, 2),
     "exchange": (0, 0),
 }
 
@@ -155,7 +168,7 @@ class Dag:
     # -- wire -------------------------------------------------------------------------
     def to_json(self) -> dict:
         return {
-            "version": 1,
+            "version": 2,  # v2: aggregate/join joined the operator vocabulary
             "output": self.output,
             "nodes": [self.nodes[i].to_json() for i in self.topological_order()],
         }

@@ -240,6 +240,235 @@ def _eval_limit(node: Node, ins: list) -> StreamingDataFrame:
     return StreamingDataFrame(src.schema, gen)
 
 
+# ---------------------------------------------------------------------------
+# aggregation (group_by().agg() — full / partial / final modes)
+# ---------------------------------------------------------------------------
+def _sum_dtype(dt):
+    return resolve_dtype("int64") if dt.is_integer else resolve_dtype("float64")
+
+
+def _agg_out_fields(in_schema: Schema, keys: list, aggs: dict, mode: str) -> list:
+    """Output fields for an aggregate node.  ``partial`` emits decomposed
+    state (sum+count for mean) so partials union/exchange cleanly and a
+    ``final`` stage can combine them."""
+    fields = [in_schema.field(k) for k in keys]
+    for out, spec in aggs.items():
+        fn = spec["fn"]
+        column = spec.get("column")
+        if fn == "count":
+            fields.append(Field(out, resolve_dtype("int64")))
+        elif fn == "mean":
+            if mode == "partial":
+                fields.append(Field(f"{out}__psum", resolve_dtype("float64")))
+                fields.append(Field(f"{out}__pcnt", resolve_dtype("int64")))
+            else:
+                fields.append(Field(out, resolve_dtype("float64")))
+        elif fn == "sum":
+            src = in_schema.field(_agg_src(out, spec, mode)).dtype
+            fields.append(Field(out, _sum_dtype(src)))
+        else:  # min / max keep the input dtype
+            src = in_schema.field(_agg_src(out, spec, mode)).dtype
+            fields.append(Field(out, src))
+    return fields
+
+
+def _agg_src(out: str, spec: dict, mode: str) -> str:
+    """Column an agg reads: the user column, or the partial-state column when
+    combining (mode=final reads the partial stage's output names)."""
+    if mode == "final":
+        return out
+    return spec.get("column")
+
+
+class _GroupState:
+    """Incremental hash-aggregation state across batches (streaming: the
+    input is consumed batch-by-batch, never concatenated)."""
+
+    def __init__(self, keys: list, aggs: dict, mode: str, in_schema: Schema):
+        self.keys = keys
+        self.aggs = aggs
+        self.mode = mode
+        self.in_schema = in_schema
+        self.gids: dict = {}  # key tuple -> group id
+        self.key_rows: list = []  # representative key values per group
+        # state name -> numpy accumulator (grown as groups appear)
+        self.acc: dict = {name: np.zeros(0, dt) for name, (_, dt) in self._state_specs().items()}
+
+    def _state_specs(self) -> dict:
+        """state name -> (init value, accumulator numpy dtype).
+
+        Integer sum/min/max accumulate in int64 (exact — float64 would
+        silently corrupt values past 2^53); floats accumulate in float64.
+        """
+        specs = {}
+        for out, spec in self.aggs.items():
+            fn = spec["fn"]
+            if fn == "mean":
+                specs[f"{out}__psum"] = (0.0, np.float64)
+                specs[f"{out}__pcnt"] = (0, np.int64)
+            elif fn == "count":
+                specs[out] = (0, np.int64)
+            else:
+                src_dt = self.in_schema.field(_agg_src(out, spec, self.mode)).dtype
+                if src_dt.is_integer:
+                    init = {"sum": 0, "min": np.iinfo(np.int64).max, "max": np.iinfo(np.int64).min}[fn]
+                    specs[out] = (init, np.int64)
+                else:
+                    init = {"sum": 0.0, "min": np.inf, "max": -np.inf}[fn]
+                    specs[out] = (init, np.float64)
+        return specs
+
+    def update(self, batch: RecordBatch) -> None:
+        n = batch.num_rows
+        if n == 0:
+            return
+        # factorize the key tuple per row (vectorized per-column, then merged)
+        key_lists = [batch.column(k).to_pylist() for k in self.keys]
+        rows = list(zip(*key_lists))
+        gidx = np.empty(n, dtype=np.int64)
+        gids = self.gids
+        for i, kt in enumerate(rows):
+            g = gids.get(kt)
+            if g is None:
+                g = len(gids)
+                gids[kt] = g
+                self.key_rows.append(kt)
+            gidx[i] = g
+        ngroups = len(gids)
+        # grow every accumulator to the new group count in one shot
+        for name, (init, dt) in self._state_specs().items():
+            cur = self.acc[name]
+            if len(cur) < ngroups:
+                self.acc[name] = np.concatenate([cur, np.full(ngroups - len(cur), init, dt)])
+        counts = np.bincount(gidx, minlength=ngroups)
+        # scatter each batch's values straight into the (dtype-exact) accumulators
+        for out, spec in self.aggs.items():
+            fn = spec["fn"]
+            if fn == "count":
+                if self.mode == "final":
+                    vals = np.asarray(batch.column(out).values, dtype=np.int64)
+                    np.add.at(self.acc[out], gidx, vals)
+                else:
+                    self.acc[out] += counts
+            elif fn == "mean":
+                if self.mode == "final":
+                    np.add.at(self.acc[f"{out}__psum"], gidx, np.asarray(batch.column(f"{out}__psum").values, np.float64))
+                    np.add.at(self.acc[f"{out}__pcnt"], gidx, np.asarray(batch.column(f"{out}__pcnt").values, np.int64))
+                else:
+                    vals = np.asarray(batch.column(spec["column"]).to_numpy(), dtype=np.float64)
+                    np.add.at(self.acc[f"{out}__psum"], gidx, vals)
+                    self.acc[f"{out}__pcnt"] += counts
+            else:  # sum / min / max
+                cur = self.acc[out]
+                vals = np.asarray(batch.column(_agg_src(out, spec, self.mode)).to_numpy()).astype(cur.dtype)
+                op = {"sum": np.add, "min": np.minimum, "max": np.maximum}[fn]
+                op.at(cur, gidx, vals)
+
+    def result(self, out_schema: Schema) -> RecordBatch:
+        ngroups = len(self.key_rows)
+        data = {}
+        for i, k in enumerate(self.keys):
+            data[k] = [row[i] for row in self.key_rows]
+        for out, spec in self.aggs.items():
+            fn = spec["fn"]
+            if fn == "mean":
+                psum = self.acc[f"{out}__psum"]
+                pcnt = self.acc[f"{out}__pcnt"]
+                if self.mode == "partial":
+                    data[f"{out}__psum"] = psum
+                    data[f"{out}__pcnt"] = pcnt
+                else:
+                    data[out] = psum / np.maximum(pcnt, 1)
+            else:
+                f = out_schema.field(out)
+                vals = self.acc[out]
+                data[out] = vals.astype(f.dtype.np_dtype) if ngroups else np.zeros(0, f.dtype.np_dtype)
+        cols = []
+        for f in out_schema:
+            vals = data[f.name]
+            cols.append(Column.from_values(f.dtype, vals if not isinstance(vals, np.ndarray) else np.asarray(vals, f.dtype.np_dtype)))
+        return RecordBatch(out_schema, cols)
+
+
+def _eval_aggregate(node: Node, ins: list) -> StreamingDataFrame:
+    (src,) = ins
+    keys = list(node.params["keys"])
+    aggs = dict(node.params["aggs"])
+    mode = node.params.get("mode", "full")
+    missing = [k for k in keys if k not in src.schema]
+    if missing:
+        raise SchemaError(f"aggregate keys missing from input: {missing}")
+    out_schema = Schema(_agg_out_fields(src.schema, keys, aggs, mode))
+
+    def gen():
+        state = _GroupState(keys, aggs, mode, src.schema)
+        for b in src.iter_batches():
+            state.update(b)
+        yield state.result(out_schema)
+
+    return StreamingDataFrame(out_schema, gen)
+
+
+# ---------------------------------------------------------------------------
+# join (inner equi-join: right side builds the hash table, left side probes)
+# ---------------------------------------------------------------------------
+def _join_schema(left: Schema, right: Schema, on: list) -> tuple:
+    """(schema, right_payload_names, rename_map).  Right non-key columns that
+    collide with left names get an ``_r`` suffix."""
+    for k in on:
+        if k not in left or k not in right:
+            raise SchemaError(f"join key {k!r} missing from an input")
+    fields = list(left.fields)
+    left_names = {f.name for f in fields}
+    payload, rename = [], {}
+    for f in right:
+        if f.name in on:
+            continue
+        name = f.name
+        if name in left_names:
+            name = f"{f.name}_r"
+            if name in left_names:
+                raise SchemaError(f"join output column collision on {name!r}")
+            rename[f.name] = name
+        fields.append(Field(name, f.dtype, f.nullable, f.metadata))
+        payload.append(f.name)
+    return Schema(fields), payload, rename
+
+
+def _eval_join(node: Node, ins: list) -> StreamingDataFrame:
+    left, right = ins
+    on = list(node.params["on"])
+    schema, payload, _rename = _join_schema(left.schema, right.schema, on)
+
+    def gen():
+        # build: materialize the right side into key -> row indices
+        build = right.collect()
+        table: dict = {}
+        build_keys = list(zip(*[build.column(k).to_pylist() for k in on])) if build.num_rows else []
+        for i, kt in enumerate(build_keys):
+            table.setdefault(kt, []).append(i)
+        # probe: stream the left side, emitting matches per batch
+        for b in left.iter_batches():
+            if b.num_rows == 0:
+                continue
+            probe_keys = list(zip(*[b.column(k).to_pylist() for k in on]))
+            lidx, ridx = [], []
+            for i, kt in enumerate(probe_keys):
+                for j in table.get(kt, ()):
+                    lidx.append(i)
+                    ridx.append(j)
+            if not lidx:
+                continue
+            lpart = b.take(np.asarray(lidx, np.int64))
+            rpart = build.take(np.asarray(ridx, np.int64))
+            cols = list(lpart.columns)
+            for name in payload:
+                cols.append(rpart.column(name))
+            yield RecordBatch(schema, cols)
+
+    return StreamingDataFrame(schema, gen)
+
+
 def _eval_union(node: Node, ins: list) -> StreamingDataFrame:
     schema = ins[0].schema
     for s in ins[1:]:
@@ -261,6 +490,8 @@ _EVAL = {
     "rebatch": _eval_rebatch,
     "limit": _eval_limit,
     "union": _eval_union,
+    "aggregate": _eval_aggregate,
+    "join": _eval_join,
 }
 
 

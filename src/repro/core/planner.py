@@ -11,6 +11,11 @@ Assignment rule (greedy in-situ): a node inherits its inputs' domain while
 they agree; the first node whose inputs span domains (e.g. a cross-center
 ``union``) — and anything above it — runs at the *consumer* domain.  This is
 exactly the paper's Fig. 3 decomposition.
+
+Exception (v2): a ``join`` whose inputs span domains runs at its **left
+(probe) input's domain** rather than the consumer's — only the build side
+crosses the network, and an aggregate above the join stays in-situ with the
+probe data.  Callers put the larger input on the left.
 """
 
 from __future__ import annotations
@@ -87,7 +92,13 @@ def assign_domains(dag: Dag, client_domain: str = CLIENT_DOMAIN) -> dict:
             domains[nid] = urimod.parse(n.params["uri"]).authority
         else:
             ins = {domains[i] for i in n.inputs}
-            domains[nid] = ins.pop() if len(ins) == 1 else client_domain
+            if len(ins) == 1:
+                domains[nid] = ins.pop()
+            elif n.op == "join":
+                # cross-domain join: probe in-situ, ship only the build side
+                domains[nid] = domains[n.inputs[0]]
+            else:
+                domains[nid] = client_domain
     return domains
 
 

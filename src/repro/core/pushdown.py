@@ -11,6 +11,15 @@ Rewrite rules applied to a COOK DAG before scheduling:
   R6 column pruning         → source gains params["columns"] = required set
   R7 filter∘source          → source gains params["predicate"] (scan-level pushdown)
   R8 limit∘select/map/rebatch → pushed below when row-count-preserving
+  R9 aggregate(full)∘union  → aggregate(final)∘union(aggregate(partial), ...)
+     — distributed partial aggregation: after planning, the partials sit
+     in-situ with their sources, so cross-domain exchanges carry partial
+     aggregates (≤ one row per group per branch) instead of raw rows
+  R10 filter∘aggregate      → aggregate∘filter             (if pred cols ⊆ group keys)
+  R11 projection pruning through join/aggregate — required_columns knows
+     which input columns a join (keys + consumer needs) and an aggregate
+     (keys + agg sources) actually read; sources treat the pruned set as
+     advisory (scan keeps the intersection with its real schema)
 
 The rewrites are purely structural (Exprs are data), so the *same* optimizer
 runs on the client before COOK submission and on the server before execution.
@@ -33,6 +42,7 @@ def optimize(dag: Dag, max_passes: int = 12) -> Dag:
         changed = False
         changed |= _merge_adjacent_filters(dag)
         changed |= _push_filters_down(dag)
+        changed |= _split_aggregate_below_union(dag)
         changed |= _sink_into_sources(dag)
         if not changed:
             break
@@ -93,6 +103,10 @@ def _push_filters_down(dag: Dag) -> bool:
                 swap = True
         elif child.op == "rebatch":
             swap = True
+        elif child.op == "aggregate":
+            # R10: a filter on the group keys commutes with the aggregation
+            if cols <= set(child.params["keys"]):
+                swap = True
         elif child.op == "union":
             # distribute: union(filter(a), filter(b), ...)
             new_ids = []
@@ -114,6 +128,41 @@ def _push_filters_down(dag: Dag) -> bool:
             # undo the self-loop introduced by rewire on child
             child.inputs = [n.id]
             changed = True
+    return changed
+
+
+def _split_aggregate_below_union(dag: Dag) -> bool:
+    """R9: distributed partial aggregation.
+
+    ``aggregate(full)`` directly above a ``union`` splits into per-branch
+    ``partial`` aggregates combined by one ``final`` aggregate above the
+    union.  The planner then places each partial in-situ with its branch's
+    sources, so a cross-domain exchange ships at most one row per group per
+    branch instead of the branch's raw rows.
+    """
+    changed = False
+    for n in list(dag.nodes.values()):
+        if n.id not in dag.nodes or n.op != "aggregate" or n.params.get("mode", "full") != "full":
+            continue
+        (child_id,) = n.inputs
+        child = dag.nodes.get(child_id)
+        if child is None or child.op != "union" or not _single_consumer(dag, child_id):
+            continue
+        keys = list(n.params["keys"])
+        aggs = n.params["aggs"]
+        new_inputs = []
+        for i, inp in enumerate(child.inputs):
+            pid = f"{n.id}_p{i}"
+            dag.nodes[pid] = Node(
+                pid,
+                "aggregate",
+                {"keys": list(keys), "aggs": {k: dict(v) for k, v in aggs.items()}, "mode": "partial"},
+                [inp],
+            )
+            new_inputs.append(pid)
+        child.inputs = new_inputs
+        n.params["mode"] = "final"
+        changed = True
     return changed
 
 
@@ -179,6 +228,29 @@ def required_columns(dag: Dag) -> dict:
                     req[inp] |= need - set(mf.writes)
                     if need_all:
                         opaque[inp] = True
+            elif n.op == "aggregate":
+                # R11: an aggregate reads exactly its keys + agg sources —
+                # consumer needs above it never reach the input
+                req[inp] |= set(n.params["keys"])
+                mode = n.params.get("mode", "full")
+                for out, spec in n.params["aggs"].items():
+                    if mode == "final":
+                        if spec["fn"] == "mean":
+                            req[inp] |= {f"{out}__psum", f"{out}__pcnt"}
+                        else:
+                            req[inp].add(out)
+                    elif spec.get("column") is not None:
+                        req[inp].add(spec["column"])
+            elif n.op == "join":
+                # R11: each side needs the join keys plus whatever the
+                # consumer needs; the pruned set is advisory at the scan, so
+                # naming a column that lives on the other side is harmless.
+                req[inp] |= set(n.params["on"])
+                req[inp] |= need
+                # right-side collisions surface as "<name>_r": map them back
+                req[inp] |= {c[:-2] for c in need if c.endswith("_r")}
+                if need_all:
+                    opaque[inp] = True
             else:  # rebatch/limit/union: passthrough
                 req[inp] |= need
                 if need_all:

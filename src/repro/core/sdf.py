@@ -22,7 +22,7 @@ __all__ = ["StreamingDataFrame", "SDF"]
 
 
 class StreamingDataFrame:
-    __slots__ = ("schema", "_factory", "_consumed")
+    __slots__ = ("schema", "_factory", "_consumed", "__weakref__")
 
     def __init__(self, schema: Schema, batch_factory: Callable[[], Iterator[RecordBatch]]):
         self.schema = schema

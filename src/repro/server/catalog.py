@@ -9,6 +9,17 @@ Resolution of ``dacp://host:port/<seg...>``:
   * zero segments            → the discovery SDF (list of datasets)
   * first segment = dataset  → remaining path resolved inside its root
   * ``.flow/<id>``           → a published sub-task stream (scheduler use)
+
+The catalog is also the backing store for the v2 discovery verbs:
+
+  * ``list_entries`` — paged catalog enumeration (LIST).  Pure metadata:
+    dataset names, policy visibility, file counts and byte totals from
+    ``os.stat`` — data files are never opened.
+  * ``describe``     — schema + stats + policy for one URI (DESCRIBE).
+    Schemas come from sidecar metadata (``_schema.json``), static framing
+    rules (file-list directories, blob chunk streams), or a *bounded* header
+    sniff (first ``SNIFF_BYTES`` of a CSV/JSONL, the npy/npz array headers)
+    cached by ``(path, mtime, size)`` — never from streaming the data path.
 """
 
 from __future__ import annotations
@@ -56,10 +67,18 @@ class Dataset:
         return p
 
 
+SNIFF_BYTES = 64 * 1024  # bounded header read for schema sniffing
+
+
+STATS_TTL_S = 5.0  # dataset_stats walk cache (LIST hits every entry)
+
+
 class Catalog:
     def __init__(self):
         self._datasets: dict = {}
         self._lock = threading.Lock()
+        self._schema_cache: dict = {}  # path -> (mtime, size, Schema | None)
+        self._stats_cache: dict = {}  # root -> (expires_at, stats dict)
 
     def register(self, ds: Dataset) -> Dataset:
         with self._lock:
@@ -129,3 +148,243 @@ class Catalog:
             yield RecordBatch.from_pydict(rows, self.DISCOVERY_SCHEMA)
 
         return StreamingDataFrame(self.DISCOVERY_SCHEMA, gen)
+
+    # -- discovery verbs (LIST / DESCRIBE) ---------------------------------------
+    def dataset_stats(self, ds: Dataset) -> dict:
+        """File count + byte total from os.stat — data files are never opened.
+        The directory walk is cached for STATS_TTL_S (LIST touches every
+        entry; large trees must not be re-walked per page)."""
+        import time as _time
+
+        now = _time.time()
+        with self._lock:
+            hit = self._stats_cache.get(ds.root)
+        if hit is not None and hit[0] > now:
+            return dict(hit[1])
+        n, total, latest = 0, 0, 0.0
+        for dirpath, _d, files in os.walk(ds.root):
+            for fn in files:
+                try:
+                    st = os.stat(os.path.join(dirpath, fn))
+                except OSError:
+                    continue
+                n += 1
+                total += st.st_size
+                latest = max(latest, st.st_mtime)
+        stats = {"n_files": n, "bytes": total, "mtime": latest}
+        with self._lock:
+            self._stats_cache[ds.root] = (now + STATS_TTL_S, stats)
+        return dict(stats)
+
+    def list_entries(self, prefix: str | None = None, offset: int = 0, limit: int | None = None) -> dict:
+        """Paged catalog enumeration (the LIST verb's payload).
+
+        Returns every dataset name for findability — non-public datasets are
+        listed (with ``public: false``) but DESCRIBE enforces their policy.
+        """
+        names = [n for n in self.names() if prefix is None or n.startswith(prefix)]
+        total = len(names)
+        offset = max(0, int(offset))
+        page = names[offset:] if limit is None else names[offset : offset + max(0, int(limit))]
+        entries = []
+        for nm in page:
+            ds = self.get(nm)
+            entries.append(
+                {
+                    "name": nm,
+                    "public": ds.policy.public,
+                    "metadata": dict(ds.metadata),
+                    **self.dataset_stats(ds),
+                }
+            )
+        next_offset = offset + len(page)
+        return {
+            "entries": entries,
+            "total": total,
+            "offset": offset,
+            "next_offset": next_offset if next_offset < total else None,
+        }
+
+    def describe(self, uri: DacpUri, subject: str | None = None) -> dict:
+        """Schema + stats + policy for a URI, without streaming any data.
+
+        Schemas are resolved from metadata only: sidecar ``_schema.json``
+        (columnar datasets), static framing rules (file-list directories and
+        blob chunk streams), or a bounded header sniff for CSV/JSONL/NPY/NPZ
+        files (at most ``SNIFF_BYTES``, cached by path + mtime + size).
+        """
+        if not uri.segments:
+            return {
+                "uri": str(uri),
+                "kind": "root",
+                "datasets": self.names(),
+                "schema": self.DISCOVERY_SCHEMA.to_json(),
+                "stats": {"n_datasets": len(self.names())},
+                "policy": {"public": True, "allowed_subjects": []},
+                "metadata": {},
+            }
+        ds = self.get(uri.segments[0])
+        if subject is not None or not ds.policy.public:
+            ds.policy.check(subject or "")
+        subpath = "/".join(uri.segments[1:])
+        path = ds.resolve(subpath)
+        if not os.path.exists(path):
+            raise ResourceNotFound(f"no such path: {uri}")
+        out = {
+            "uri": str(uri),
+            "kind": "dataset" if not subpath else ("dir" if os.path.isdir(path) else "file"),
+            "dataset": ds.name,
+            "path": subpath,
+            "policy": {"public": ds.policy.public, "allowed_subjects": list(ds.policy.allowed_subjects)},
+            "metadata": dict(ds.metadata),
+        }
+        if os.path.isdir(path):
+            stats = self.dataset_stats(Dataset(ds.name, path))
+            schema, rows = self._dir_schema(path)
+        else:
+            st = os.stat(path)
+            stats = {"n_files": 1, "bytes": st.st_size, "mtime": st.st_mtime}
+            schema, rows = self._sniff_schema(path)
+        if rows is not None:
+            stats["rows"] = rows
+        out["stats"] = stats
+        out["schema"] = schema.to_json() if schema is not None else None
+        return out
+
+    # -- schema sniffing (bounded metadata reads, cached) -----------------------
+    _FILELIST_SCHEMA = Schema(
+        [
+            Field("name", dtypes.STRING),
+            Field("path", dtypes.STRING),
+            Field("format", dtypes.STRING),
+            Field("size", dtypes.INT64),
+            Field("mtime", dtypes.FLOAT64),
+            Field("content", dtypes.BINARY),
+        ]
+    )
+    _CHUNK_SCHEMA = Schema([Field("chunk", dtypes.BINARY), Field("offset", dtypes.INT64)])
+
+    def _dir_schema(self, path: str):
+        sidecar = os.path.join(path, "_schema.json")
+        if os.path.exists(sidecar):
+            import json as _json
+
+            with open(sidecar) as f:
+                return Schema.from_json(_json.load(f)), None
+        # plain directory -> file-list framing (static schema, no file access)
+        return self._FILELIST_SCHEMA, None
+
+    def _sniff_schema(self, path: str):
+        """(Schema | None, rows | None) from at most SNIFF_BYTES of header."""
+        try:
+            st = os.stat(path)
+        except OSError:
+            return None, None
+        key = (st.st_mtime, st.st_size)
+        cached = self._schema_cache.get(path)
+        if cached is not None and cached[0] == key:
+            return cached[1], cached[2]
+        schema, rows = self._sniff_schema_uncached(path)
+        with self._lock:
+            self._schema_cache[path] = (key, schema, rows)
+        return schema, rows
+
+    def _sniff_schema_uncached(self, path: str):
+        ext = os.path.splitext(path)[1].lower()
+        try:
+            if ext == ".csv":
+                return self._sniff_csv(path), None
+            if ext == ".jsonl":
+                return self._sniff_jsonl(path), None
+            if ext == ".npy":
+                return self._sniff_npy(path)
+            if ext == ".npz":
+                return self._sniff_npz(path)
+        except (OSError, ValueError, KeyError):
+            return None, None
+        return self._CHUNK_SCHEMA, None
+
+    @staticmethod
+    def _sniff_csv(path: str) -> Schema:
+        import io as _io
+
+        from repro.server.datasource import _infer_csv_schema
+
+        with open(path, newline="") as f:
+            head = f.read(SNIFF_BYTES)
+        lines = head.splitlines()
+        if not lines:
+            return Schema([])
+        import csv as _csv
+
+        reader = _csv.reader(_io.StringIO("\n".join(lines)))
+        names = next(reader)
+        probe = [r for r in reader if len(r) == len(names)]
+        # the last row may be cut mid-value — but only if the read actually
+        # hit the SNIFF_BYTES window; a short file ends where it ends
+        if probe and len(head) == SNIFF_BYTES and not head.endswith("\n"):
+            probe = probe[:-1]
+        return _infer_csv_schema(probe[:256], names)
+
+    @staticmethod
+    def _sniff_jsonl(path: str) -> Schema:
+        import json as _json
+
+        from repro.server.datasource import _JSON_DT
+
+        with open(path, "rb") as f:
+            first = f.readline(SNIFF_BYTES)
+        rec = _json.loads(first)
+        return Schema([Field(k, _JSON_DT.get(type(v), dtypes.STRING)) for k, v in rec.items()])
+
+    @staticmethod
+    def _sniff_npy(path: str):
+        with open(path, "rb") as f:
+            shape, dt = _read_npy_header(f)
+        base = dtypes.from_numpy(np.dtype(dt))
+        ncol = 1
+        if len(shape) > 1:
+            ncol = int(np.prod(shape[1:]))
+        if ncol > 1:
+            return Schema([Field(f"v{i}", base) for i in range(ncol)]), int(shape[0])
+        return Schema([Field("values", base)]), int(shape[0]) if shape else None
+
+    @staticmethod
+    def _sniff_npz(path: str):
+        """Member array headers only — the zip data blocks are never read."""
+        import zipfile
+
+        headers = {}
+        with zipfile.ZipFile(path) as z:
+            for member in z.namelist():
+                if not member.endswith(".npy"):
+                    continue
+                with z.open(member) as f:
+                    shape, dt = _read_npy_header(f)
+                headers[member[: -len(".npy")]] = (shape, np.dtype(dt))
+        fields, rows = [], None
+        for k in sorted(headers):
+            if k.endswith("__offsets") or k == "__nrows__":
+                continue
+            if k.endswith("__data") and f"{k[: -len('__data')]}__offsets" in headers:
+                base = k[: -len("__data")]
+                fields.append(Field(base, dtypes.BINARY))
+                rows = _min_rows(rows, int(headers[f"{base}__offsets"][0][0]) - 1)
+            else:
+                fields.append(Field(k, dtypes.from_numpy(headers[k][1])))
+                rows = _min_rows(rows, int(headers[k][0][0]) if headers[k][0] else 0)
+        return Schema(sorted(fields, key=lambda f: f.name)), rows
+
+
+def _min_rows(cur, new):
+    return new if cur is None else min(cur, new)
+
+
+def _read_npy_header(f):
+    """(shape, dtype) from an npy stream using only public numpy API."""
+    version = np.lib.format.read_magic(f)
+    if version == (1, 0):
+        shape, _fortran, dt = np.lib.format.read_array_header_1_0(f)
+    else:
+        shape, _fortran, dt = np.lib.format.read_array_header_2_0(f)
+    return shape, dt

@@ -15,6 +15,17 @@ Scan-level pushdown is native here: ``scan`` takes (columns, predicate) and
     file bytes — read amplification goes to ~0 for discovery queries),
   - evaluates predicates on metadata columns *before* loading blob content,
     so filtered-out files are never read (in-situ filtering, §VI-B).
+
+Column selection has two strictness levels: explicit user GET columns are
+**strict** (a typo raises ``SchemaError``), while optimizer pruning hints
+(``strict_columns=False``) are **advisory** — the optimizer computes required
+column sets structurally (without schemas), so a pruned set may legitimately
+name columns that only exist on the *other* side of a join, and the scan
+keeps the intersection.
+
+``scan_bytes`` is the in-memory twin of ``scan_path`` for expandable blob
+columns (client-side ``open_blob``): structured payloads parse straight from
+the byte buffer, batch-by-batch, with no temp file spooling.
 """
 
 from __future__ import annotations
@@ -33,7 +44,7 @@ from repro.core.expr import Expr
 from repro.core.schema import Field, Schema
 from repro.core.sdf import StreamingDataFrame
 
-__all__ = ["scan_path", "write_sdf_dataset", "DEFAULT_BATCH_ROWS", "STRUCTURED_EXTS"]
+__all__ = ["scan_path", "scan_bytes", "write_sdf_dataset", "DEFAULT_BATCH_ROWS", "STRUCTURED_EXTS"]
 
 DEFAULT_BATCH_ROWS = 65536
 DEFAULT_CHUNK_BYTES = 4 << 20
@@ -59,15 +70,22 @@ def scan_path(
     predicate: Expr | None = None,
     batch_rows: int = DEFAULT_BATCH_ROWS,
     chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+    strict_columns: bool = True,
 ) -> StreamingDataFrame:
-    """Open any path (file or directory) as an SDF with pushdown applied."""
+    """Open any path (file or directory) as an SDF with pushdown applied.
+
+    ``strict_columns=True`` (user-facing GET): unknown column names raise
+    ``SchemaError`` — a typo must not silently vanish.  ``False`` (optimizer
+    pruning hints, which are computed structurally and may name columns from
+    the other side of a join): the scan keeps the intersection.
+    """
     if not os.path.exists(path):
         raise ResourceNotFound(f"no such path: {path}")
     if os.path.isdir(path):
         if _is_columnar_dataset(path):
             sdf = _scan_columnar_dataset(path, batch_rows)
         else:
-            sdf = _scan_filelist(path, columns, predicate, batch_rows)
+            sdf = _scan_filelist(path, columns, predicate, batch_rows, strict_columns)
             return sdf  # filelist applies pushdown internally
     else:
         ext = os.path.splitext(path)[1].lower()
@@ -81,10 +99,56 @@ def scan_path(
             sdf = _scan_npy(path, batch_rows)
         else:
             sdf = _scan_blob(path, chunk_bytes)
+    return _apply_pushdown(sdf, columns, predicate, strict_columns)
+
+
+def scan_bytes(
+    data: bytes,
+    fmt: str = "",
+    columns=None,
+    predicate: Expr | None = None,
+    batch_rows: int = DEFAULT_BATCH_ROWS,
+    chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+) -> StreamingDataFrame:
+    """Open an in-memory payload (an expanded blob column value) as an SDF.
+
+    Structured formats parse straight from the buffer and stream in batches;
+    unknown formats become a lazy chunk stream over memoryview slices.  The
+    payload is never written to disk and never force-collected.
+    """
+    ext = "." + fmt.lower().lstrip(".") if fmt else ""
+    if ext == ".csv":
+        text = data.decode()
+        sdf = _scan_csv_stream(lambda: io.StringIO(text, newline=""), batch_rows, "<memory>")
+    elif ext == ".jsonl":
+        sdf = _scan_jsonl_stream(lambda: io.BytesIO(data), batch_rows, "<memory>")
+    elif ext == ".npz":
+        with np.load(io.BytesIO(data)) as z:
+            arrays = {k: z[k] for k in z.files}
+        sdf = _npz_arrays_sdf(arrays, batch_rows)
+    elif ext == ".npy":
+        sdf = _npy_array_sdf(np.load(io.BytesIO(data)), batch_rows)
+    else:
+        sdf = _bytes_chunks(data, chunk_bytes)
     return _apply_pushdown(sdf, columns, predicate)
 
 
-def _apply_pushdown(sdf: StreamingDataFrame, columns, predicate) -> StreamingDataFrame:
+def _bytes_chunks(data: bytes, chunk_bytes: int) -> StreamingDataFrame:
+    schema = Schema([Field("chunk", dtypes.BINARY), Field("offset", dtypes.INT64)])
+    view = memoryview(data)
+
+    def gen():
+        size = len(view)
+        for s in range(0, max(size, 1), chunk_bytes):
+            e = min(s + chunk_bytes, size)
+            yield RecordBatch.from_pydict({"chunk": [bytes(view[s:e])], "offset": [s]}, schema)
+            if size == 0:
+                break
+
+    return StreamingDataFrame(schema, gen)
+
+
+def _apply_pushdown(sdf: StreamingDataFrame, columns, predicate, strict_columns: bool = True) -> StreamingDataFrame:
     schema = sdf.schema
     if predicate is not None:
         pred_cols = predicate.referenced_columns()
@@ -93,6 +157,12 @@ def _apply_pushdown(sdf: StreamingDataFrame, columns, predicate) -> StreamingDat
             raise SchemaError(f"predicate references missing columns {sorted(missing)}")
     out_cols = list(columns) if columns is not None else None
     if out_cols is not None:
+        have = set(schema.names)
+        unknown = [c for c in out_cols if c not in have]
+        if unknown and strict_columns:
+            raise SchemaError(f"no such columns {unknown} (have {schema.names})")
+        # advisory pruning: ignore hinted columns this source doesn't have
+        out_cols = [c for c in out_cols if c in have]
         out_schema = schema.select(out_cols)
     else:
         out_schema = schema
@@ -134,13 +204,14 @@ def _infer_csv_schema(rows: list, names: list) -> Schema:
     return Schema(fields)
 
 
-def _scan_csv(path: str, batch_rows: int) -> StreamingDataFrame:
-    with open(path, newline="") as f:
+def _scan_csv_stream(opener, batch_rows: int, what: str) -> StreamingDataFrame:
+    """``opener`` returns a fresh text stream per iteration (file or memory)."""
+    with opener() as f:
         reader = _csv.reader(f)
         try:
             names = next(reader)
         except StopIteration:
-            raise SchemaError(f"empty csv {path}") from None
+            raise SchemaError(f"empty csv {what}") from None
         probe = []
         for row in reader:
             probe.append(row)
@@ -149,7 +220,7 @@ def _scan_csv(path: str, batch_rows: int) -> StreamingDataFrame:
     schema = _infer_csv_schema(probe, names)
 
     def gen():
-        with open(path, newline="") as f:
+        with opener() as f:
             reader = _csv.reader(f)
             next(reader)  # header
             buf: list = []
@@ -162,6 +233,10 @@ def _scan_csv(path: str, batch_rows: int) -> StreamingDataFrame:
                 yield _rows_to_batch(schema, buf)
 
     return StreamingDataFrame(schema, gen)
+
+
+def _scan_csv(path: str, batch_rows: int) -> StreamingDataFrame:
+    return _scan_csv_stream(lambda: open(path, newline=""), batch_rows, path)
 
 
 def _rows_to_batch(schema: Schema, rows: list) -> RecordBatch:
@@ -180,11 +255,12 @@ def _rows_to_batch(schema: Schema, rows: list) -> RecordBatch:
 _JSON_DT = {bool: dtypes.BOOL, int: dtypes.INT64, float: dtypes.FLOAT64, str: dtypes.STRING}
 
 
-def _scan_jsonl(path: str, batch_rows: int) -> StreamingDataFrame:
-    with open(path, "rb") as f:
+def _scan_jsonl_stream(opener, batch_rows: int, what: str) -> StreamingDataFrame:
+    """``opener`` returns a fresh binary line stream per iteration."""
+    with opener() as f:
         first = f.readline()
     if not first.strip():
-        raise SchemaError(f"empty jsonl {path}")
+        raise SchemaError(f"empty jsonl {what}")
     rec = json.loads(first)
     fields = []
     for k, v in rec.items():
@@ -202,7 +278,7 @@ def _scan_jsonl(path: str, batch_rows: int) -> StreamingDataFrame:
         return v
 
     def gen():
-        with open(path, "rb") as f:
+        with opener() as f:
             buf: dict = {k: [] for k in schema.names}
             n = 0
             for line in f:
@@ -222,6 +298,10 @@ def _scan_jsonl(path: str, batch_rows: int) -> StreamingDataFrame:
     return StreamingDataFrame(schema, gen)
 
 
+def _scan_jsonl(path: str, batch_rows: int) -> StreamingDataFrame:
+    return _scan_jsonl_stream(lambda: open(path, "rb"), batch_rows, path)
+
+
 def _npz_schema(arrays: dict) -> Schema:
     fields = []
     for k in sorted(arrays):
@@ -238,6 +318,10 @@ def _npz_schema(arrays: dict) -> Schema:
 def _scan_npz(path: str, batch_rows: int) -> StreamingDataFrame:
     with np.load(path, mmap_mode="r") as z:
         arrays = {k: z[k] for k in z.files}
+    return _npz_arrays_sdf(arrays, batch_rows)
+
+
+def _npz_arrays_sdf(arrays: dict, batch_rows: int) -> StreamingDataFrame:
     schema = _npz_schema(arrays)
     n = None
     for f in schema:
@@ -269,7 +353,10 @@ def _scan_npz(path: str, batch_rows: int) -> StreamingDataFrame:
 
 
 def _scan_npy(path: str, batch_rows: int) -> StreamingDataFrame:
-    arr = np.load(path, mmap_mode="r")
+    return _npy_array_sdf(np.load(path, mmap_mode="r"), batch_rows)
+
+
+def _npy_array_sdf(arr: np.ndarray, batch_rows: int) -> StreamingDataFrame:
     flat = arr.reshape(arr.shape[0], -1) if arr.ndim > 1 else arr.reshape(-1, 1)
     # N-d arrays frame as one column per trailing index ("v0", "v1", ...)
     ncol = flat.shape[1]
@@ -317,10 +404,16 @@ def _list_files(root: str) -> list:
     return out
 
 
-def _scan_filelist(root: str, columns, predicate, batch_rows: int) -> StreamingDataFrame:
+def _scan_filelist(root: str, columns, predicate, batch_rows: int, strict_columns: bool = True) -> StreamingDataFrame:
     want_content = columns is None or "content" in columns
     fields = list(_META_FIELDS) + ([_CONTENT_FIELD] if want_content else [])
     schema = Schema(fields)
+    if columns is not None:
+        have = {f.name for f in fields}
+        unknown = [c for c in columns if c not in have]
+        if unknown and strict_columns:
+            raise SchemaError(f"no such columns {unknown} (have {sorted(have)})")
+        columns = [c for c in columns if c in have]  # advisory pruning
     out_schema = schema.select(columns) if columns is not None else schema
     files = _list_files(root)
     meta_rows = min(batch_rows, 1024)

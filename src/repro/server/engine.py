@@ -33,7 +33,7 @@ FLOW_TTL_S = 600.0
 
 
 class PublishedFlow:
-    __slots__ = ("flow_id", "factory", "token_raw", "expires_at", "pulls")
+    __slots__ = ("flow_id", "factory", "token_raw", "expires_at", "pulls", "rows_out")
 
     def __init__(self, flow_id: str, factory, token_raw: str, ttl_s: float = FLOW_TTL_S):
         self.flow_id = flow_id
@@ -41,6 +41,7 @@ class PublishedFlow:
         self.token_raw = token_raw
         self.expires_at = time.time() + ttl_s
         self.pulls = 0
+        self.rows_out = 0  # rows that crossed the exchange via this flow
 
 
 class SDFEngine:
@@ -56,7 +57,14 @@ class SDFEngine:
         self._lock = threading.Lock()
 
     # -- GET path -----------------------------------------------------------------
-    def open_uri(self, uri_str: str, columns=None, predicate=None, batch_rows: int | None = None) -> StreamingDataFrame:
+    def open_uri(
+        self,
+        uri_str: str,
+        columns=None,
+        predicate=None,
+        batch_rows: int | None = None,
+        strict_columns: bool = True,
+    ) -> StreamingDataFrame:
         uri = parse_uri(uri_str)
         if uri.segments and uri.segments[0] == ".flow":
             if len(uri.segments) != 2:
@@ -68,7 +76,9 @@ class SDFEngine:
         kwargs = {}
         if batch_rows:
             kwargs["batch_rows"] = int(batch_rows)
-        return datasource.scan_path(path, columns=columns, predicate=predicate, **kwargs)
+        return datasource.scan_path(
+            path, columns=columns, predicate=predicate, strict_columns=strict_columns, **kwargs
+        )
 
     # -- COOK path -----------------------------------------------------------------
     def execute_dag(self, dag: Dag) -> StreamingDataFrame:
@@ -85,6 +95,7 @@ class SDFEngine:
                     node.params["uri"],
                     columns=node.params.get("columns"),
                     predicate=node.params.get("predicate"),
+                    strict_columns=False,  # optimizer-pruned hints, not user input
                 )
             if node.op == "exchange":
                 return self._remote(node)
@@ -118,7 +129,14 @@ class SDFEngine:
         if flow is None:
             raise ResourceNotFound(f"no published flow {flow_id!r}")
         flow.pulls += 1
-        return flow.factory()
+        sdf = flow.factory()
+
+        def gen():
+            for b in sdf.iter_batches():
+                flow.rows_out += b.num_rows
+                yield b
+
+        return StreamingDataFrame(sdf.schema, gen)
 
     def verify_flow_token(self, flow_id: str, token_raw: str | None) -> None:
         if token_raw is None:
@@ -132,6 +150,44 @@ class SDFEngine:
     def drop_flow(self, flow_id: str) -> None:
         with self._lock:
             self._flows.pop(flow_id, None)
+
+    def flow_stats(self) -> dict:
+        """Per-flow pull/row accounting (exchange-traffic observability)."""
+        with self._lock:
+            return {
+                fid: {"pulls": f.pulls, "rows_out": f.rows_out, "expires_at": f.expires_at}
+                for fid, f in self._flows.items()
+            }
+
+    # -- DESCRIBE path ------------------------------------------------------------
+    def describe_uri(self, uri_str: str, subject: str | None = None) -> dict:
+        """Schema + stats + policy for a URI, answered from catalog metadata.
+
+        ``.flow`` URIs describe the published stream (id, TTL, pull count)
+        without activating it; everything else delegates to the catalog's
+        metadata-only describe — the data path (``datasource.scan_path``)
+        is never invoked.
+        """
+        uri = parse_uri(uri_str)
+        if uri.segments and uri.segments[0] == ".flow":
+            if len(uri.segments) != 2:
+                raise ResourceNotFound(f"bad flow uri {uri_str}")
+            flow_id = uri.segments[1]
+            with self._lock:
+                flow = self._flows.get(flow_id)
+            if flow is None:
+                raise ResourceNotFound(f"no published flow {flow_id!r}")
+            return {
+                "uri": uri_str,
+                "kind": "flow",
+                "dataset": None,
+                "path": f".flow/{flow_id}",
+                "schema": None,  # activating the factory would move data
+                "stats": {"pulls": flow.pulls, "rows_out": flow.rows_out, "ttl_s": max(0.0, flow.expires_at - time.time())},
+                "policy": {"public": False, "allowed_subjects": [f"flow:{flow_id}"]},
+                "metadata": {},
+            }
+        return self.catalog.describe(uri, subject=subject)
 
     def _gc_locked(self) -> None:
         now = time.time()

@@ -2,13 +2,24 @@
 
 Request verbs (REQUEST frame header ``{"verb": ..., "uri": ..., "token": ...}``):
 
-    HELLO   credentials → short-lived session token (phased interaction, §III-C)
-    GET     stream an SDF; honors scan pushdown params (columns / predicate)
-    PUT     ingest an SDF stream into a dataset path
-    COOK    body = DAG json; server optimizes, plans, coordinates cross-domain
-            sub-tasks, and streams the root result (non-blocking first batch)
-    SUBMIT  internal: register a plan fragment; returns a flow pull token
-    PING    heartbeat (scheduler liveness probes)
+    HELLO    credentials → short-lived session token (phased interaction,
+             §III-C); a v2 HELLO also pins the channel as a persistent
+             multiplexed session (response advertises ``proto``)
+    GET      stream an SDF; honors scan pushdown params (columns / predicate)
+    PUT      ingest an SDF stream into a dataset path
+    COOK     body = DAG json; server optimizes, plans, coordinates cross-domain
+             sub-tasks, and streams the root result (non-blocking first batch)
+    SUBMIT   internal: register a plan fragment; returns a flow pull token
+    LIST     paged catalog enumeration — metadata only, no data files opened
+    DESCRIBE schema + stats + policy for one URI — metadata only
+    PING     heartbeat (scheduler liveness probes)
+    BYE      close the connection / session
+
+DACP v2 multiplexing: a REQUEST carrying a ``rid`` is dispatched to a worker
+thread whose response frames are stamped with the same ``rid``, so many
+requests interleave concurrently on one channel (one session = one channel =
+N in-flight requests).  Requests without a ``rid`` take the v1 synchronous
+path unchanged, which is the legacy-peer fallback.
 
 The same handler serves in-process channel pairs (co-hosted data plane — the
 usual deployment inside a training pod) and TCP sockets (standalone server).
@@ -20,7 +31,7 @@ import threading
 import time
 
 from repro.core.dag import Dag
-from repro.core.errors import DacpError, PermissionDenied, ResourceNotFound, TokenError
+from repro.core.errors import DacpError, PermissionDenied, ResourceNotFound, TokenError, TransportError
 from repro.core.expr import Expr
 from repro.core.planner import plan as plan_dag
 from repro.core.pushdown import optimize
@@ -30,9 +41,12 @@ from repro.server.catalog import Catalog
 from repro.server.datasource import write_sdf_dataset
 from repro.server.engine import SDFEngine
 from repro.transport import framing
+from repro.transport.channel import TaggedChannel
 from repro.transport.flight import recv_sdf, send_error, send_sdf
 
 __all__ = ["FairdServer"]
+
+MAX_INFLIGHT = 64  # advertised per-session concurrency budget
 
 
 class FairdServer:
@@ -43,6 +57,7 @@ class FairdServer:
         secret: bytes | None = None,
         credentials: dict | None = None,
         network=None,
+        protocol_version: int = framing.PROTOCOL_VERSION,
     ):
         self.authority = authority
         self.aliases = {authority}  # addresses under which peers reach us
@@ -51,9 +66,12 @@ class FairdServer:
         # subject -> shared secret; None = accept anonymous HELLO
         self.credentials = credentials
         self.network = network  # set by the cluster; used for cross-domain pulls
+        # protocol_version=1 serves the legacy wire protocol only (tests /
+        # staged rollouts); v2 peers then fall back to channel-per-request.
+        self.protocol_version = protocol_version
         self.engine = SDFEngine(authority, self.catalog, self.tokens, remote_pull=self._remote_pull, aliases=self.aliases)
         self.started_at = time.time()
-        self.stats = {"get": 0, "put": 0, "cook": 0, "submit": 0, "rows_out": 0, "rows_in": 0}
+        self.stats = {"get": 0, "put": 0, "cook": 0, "submit": 0, "list": 0, "describe": 0, "rows_out": 0, "rows_in": 0}
         self._tcp_server = None
 
     # ------------------------------------------------------------------ wiring
@@ -61,7 +79,9 @@ class FairdServer:
         if self.network is None:
             raise ResourceNotFound(f"server {self.authority} has no network for {uri_str}")
         client = self.network.client_for(parse_uri(uri_str).authority)
-        return client.get(uri_str, token=token_raw, columns=columns, predicate=predicate)
+        # columns here come from optimizer pruning (exchange/source leaves):
+        # advisory on the remote scan, never a user-input error
+        return client.get(uri_str, token=token_raw, columns=columns, predicate=predicate, advisory_columns=True)
 
     # ------------------------------------------------------------------ auth
     def _hello(self, header: dict) -> dict:
@@ -71,7 +91,11 @@ class FairdServer:
             if self.credentials.get(subject) != secret:
                 raise PermissionDenied(f"bad credentials for {subject!r}")
         tok = self.tokens.mint(subject)
-        return {"token": tok.raw, "authority": self.authority, "expires": tok.claims["exp"]}
+        resp = {"token": tok.raw, "authority": self.authority, "expires": tok.claims["exp"]}
+        if self.protocol_version >= 2 and int(header.get("proto", 1)) >= 2:
+            resp["proto"] = min(self.protocol_version, int(header["proto"]))
+            resp["max_inflight"] = MAX_INFLIGHT
+        return resp
 
     def _authorize(self, header: dict, verb: str) -> str:
         uri = header.get("uri", "")
@@ -91,25 +115,81 @@ class FairdServer:
 
     # ------------------------------------------------------------------ dispatch
     def handle_channel(self, channel) -> None:
-        """Serve one connection until EOF/close."""
-        while True:
-            try:
-                ftype, header, body = channel.recv()
-            except DacpError:
-                return  # peer closed
-            if ftype != framing.REQUEST:
-                send_error(channel, DacpError(f"expected REQUEST, got {ftype}"))
-                continue
-            try:
-                done = self._dispatch(channel, header, body)
-            except DacpError as e:
-                send_error(channel, e)
-                done = False
-            except Exception as e:  # defensive: never kill the connection loop
-                send_error(channel, DacpError(f"internal: {type(e).__name__}: {e}"))
-                done = False
-            if done:
-                return
+        """Serve one connection until EOF/close.
+
+        The loop is a demux: REQUEST frames with a ``rid`` spawn a worker
+        whose responses are rid-tagged (multiplexed session); non-REQUEST
+        frames with a ``rid`` are routed to the in-flight worker that owns it
+        (PUT upload streams); untagged REQUESTs run inline, one at a time —
+        the v1 wire discipline.
+        """
+        send_lock = threading.Lock()
+        inflight: dict = {}  # rid -> TaggedChannel of the worker serving it
+        try:
+            while True:
+                try:
+                    ftype, header, body = channel.recv()
+                except DacpError:
+                    return  # peer closed
+                rid = header.get("rid") if isinstance(header, dict) else None
+                if ftype != framing.REQUEST:
+                    tc = inflight.get(rid)
+                    if tc is not None:
+                        tc.push((ftype, header, body))
+                    else:
+                        with send_lock:
+                            send_error(channel, DacpError(f"unexpected frame type {ftype} outside a request"))
+                    continue
+                if rid is None or self.protocol_version < 2:
+                    # v1 synchronous path (legacy peers, and v1-only servers)
+                    plain = TaggedChannel(channel, None, send_lock)
+                    try:
+                        done = self._dispatch(plain, header, body)
+                    except DacpError as e:
+                        send_error(plain, e)
+                        done = False
+                    except Exception as e:  # defensive: never kill the connection loop
+                        send_error(plain, DacpError(f"internal: {type(e).__name__}: {e}"))
+                        done = False
+                    if done:
+                        return
+                    continue
+                verb = header.get("verb", "").upper()
+                if verb == "BYE":
+                    with send_lock:
+                        channel.send(framing.OK, {"rid": rid})
+                    return
+                if len(inflight) >= MAX_INFLIGHT:
+                    # the budget advertised at HELLO is a hard per-session cap
+                    err = DacpError(f"too many in-flight requests (max {MAX_INFLIGHT})").to_wire()
+                    err["rid"] = rid
+                    with send_lock:
+                        channel.send(framing.ERROR, err)
+                    continue
+                tc = TaggedChannel(channel, rid, send_lock)
+                inflight[rid] = tc
+                threading.Thread(
+                    target=self._serve_request,
+                    args=(tc, header, body, inflight),
+                    daemon=True,
+                ).start()
+        finally:
+            # unblock any worker waiting on an upload stream
+            err = TransportError("connection closed")
+            for tc in list(inflight.values()):
+                tc.push(err)
+
+    def _serve_request(self, tc: TaggedChannel, header: dict, body, inflight: dict) -> None:
+        """One multiplexed request, served on its own worker thread."""
+        try:
+            self._dispatch(tc, header, body)
+        except DacpError as e:
+            send_error(tc, e)
+        except Exception as e:  # defensive: surface, never wedge the session
+            send_error(tc, DacpError(f"internal: {type(e).__name__}: {e}"))
+        finally:
+            tc.finish()  # unblock the demux loop if it's mid-push to us
+            inflight.pop(tc.rid, None)
 
     def _dispatch(self, channel, header: dict, body) -> bool:
         verb = header.get("verb", "").upper()
@@ -134,6 +214,7 @@ class FairdServer:
                     columns=header.get("columns"),
                     predicate=predicate,
                     batch_rows=header.get("batch_rows"),
+                    strict_columns=header.get("columns_mode") != "advisory",
                 )
             self.stats["rows_out"] += send_sdf(channel, sdf)
             return False
@@ -169,6 +250,23 @@ class FairdServer:
                     n.params["token"] = exchange_tokens[n.params["producer"]]
             pull_token = self.engine.publish_flow(flow_id, lambda frag=frag: self.engine.execute_dag(frag.copy()))
             channel.send(framing.OK, {"flow_id": flow_id, "token": pull_token})
+            return False
+        if verb == "LIST":
+            # discovery: catalog enumeration with paging — no data files opened
+            self._authorize(header, "GET")
+            self.stats["list"] += 1
+            page = self.catalog.list_entries(
+                prefix=header.get("prefix"),
+                offset=int(header.get("offset", 0)),
+                limit=header.get("limit"),
+            )
+            channel.send(framing.OK, {"authority": self.authority, **page})
+            return False
+        if verb == "DESCRIBE":
+            # discovery: schema + stats + policy from catalog metadata only
+            subject = self._authorize(header, "GET")
+            self.stats["describe"] += 1
+            channel.send(framing.OK, self.engine.describe_uri(header["uri"], subject=subject))
             return False
         if verb == "BYE":
             channel.send(framing.OK, {})

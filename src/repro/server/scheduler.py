@@ -4,7 +4,11 @@ Takes a ``Plan`` (sub-tasks in dependency order) and coordinates execution:
 
   * **registration** — each remote fragment is SUBMITted to its domain; the
     domain publishes it as a lazily-evaluated flow and returns a short-lived
-    pull token.  No data moves at this point (lazy loading).
+    pull token.  No data moves at this point (lazy loading).  Registration
+    proceeds in **dependency waves**: fragments whose upstream tokens are
+    already known submit concurrently — over the v2 multiplexed sessions the
+    SUBMITs to N domains (or N fragments to one domain) interleave on the
+    live channels instead of serializing.
   * **token-gated pulls** — downstream fragments receive the upstream flow
     tokens; when the outermost consumer pulls, activation cascades upstream
     (reverse supply).
@@ -115,8 +119,32 @@ class CrossDomainScheduler:
         local_root = self._is_local(plan.root.domain)
 
         remote_subtasks = [st for st in plan.subtasks if not (st.id == plan.root_id and local_root)]
-        for st in remote_subtasks:
-            if self._is_local(st.domain):
+        pending = list(remote_subtasks)
+        while pending:
+            # dependency wave: everything whose upstream tokens are known
+            wave = [st for st in pending if all(d in flow_tokens for d in st.depends_on)]
+            if not wave:  # defensive: never wedge on a malformed plan
+                wave = pending[:1]
+            pending = [st for st in pending if st not in wave]
+            results: dict = {}
+            errors: dict = {}
+
+            def register(st: SubTask) -> None:
+                try:
+                    results[st.id] = self._submit_one(st, flow_tokens)
+                except Exception as e:  # noqa: BLE001 - re-raised below
+                    errors[st.id] = e
+
+            local_wave = [st for st in wave if self._is_local(st.domain)]
+            remote_wave = [st for st in wave if not self._is_local(st.domain)]
+            threads = [threading.Thread(target=register, args=(st,), daemon=True) for st in remote_wave[1:]]
+            for t in threads:
+                t.start()
+            if remote_wave:
+                register(remote_wave[0])  # reuse the caller's thread for one
+            for t in threads:
+                t.join()
+            for st in local_wave:
                 # coordinator-local fragment published on the local engine
                 ex = {
                     n.params.get("producer"): flow_tokens[n.params.get("producer")]
@@ -131,15 +159,16 @@ class CrossDomainScheduler:
                 tok = self.coordinator.engine.publish_flow(
                     st.id, lambda frag=frag: self.coordinator.engine.execute_dag(frag.copy())
                 )
-                flow_tokens[st.id] = (
+                results[st.id] = (
                     self.coordinator.authority,
                     st.id,
                     tok,
                     f"dacp://{self.coordinator.authority}/.flow/{st.id}",
                 )
                 self._log("publish_local", st.id)
-            else:
-                flow_tokens[st.id] = self._submit_one(st, flow_tokens)
+            for sid, e in errors.items():
+                raise e
+            flow_tokens.update(results)
 
         if local_root:
             root = plan.root

@@ -11,17 +11,24 @@ Two implementations with one interface:
 Interface (duplex):
     send(ftype, header, body)    recv() -> (ftype, header, body)
     close()                      bytes_sent / bytes_received
+
+``TaggedChannel`` layers DACP v2 multiplexing on top of either: it is a
+per-request *view* over a shared channel that stamps outbound frames with
+the request id and receives inbound frames from a demux-fed inbox, so the
+flight helpers (``send_sdf``/``recv_sdf``) run unmodified over a channel
+carrying many interleaved requests.
 """
 
 from __future__ import annotations
 
 import queue
 import socket
+import threading
 
 from repro.core.errors import TransportError
 from repro.transport import framing
 
-__all__ = ["InProcChannel", "SocketChannel", "channel_pair", "connect_tcp"]
+__all__ = ["InProcChannel", "SocketChannel", "TaggedChannel", "channel_pair", "connect_tcp"]
 
 _CLOSE = object()
 
@@ -100,16 +107,94 @@ class SocketChannel:
                 self._sock.settimeout(None)
 
     def close(self) -> None:
-        for f in (self._wfile, self._rfile):
-            try:
-                f.close()
-            except Exception:
-                pass
+        # flush pending writes, then shut the socket down BEFORE closing the
+        # buffered reader: a concurrent recv (session reader thread) holds
+        # the buffer lock while blocked in readinto, and only the shutdown
+        # wakes it — closing the file first would deadlock on that lock.
+        try:
+            self._wfile.close()
+        except Exception:
+            pass
         try:
             self._sock.shutdown(socket.SHUT_RDWR)
         except OSError:
             pass
+        try:
+            self._rfile.close()
+        except Exception:
+            pass
         self._sock.close()
+
+
+INBOX_FRAMES = 256  # per-request demux inbox bound (upload backpressure)
+
+
+class TaggedChannel:
+    """One multiplexed request's view of a shared duplex channel.
+
+    * ``send`` stamps ``rid`` into the frame header and serializes writes
+      through the shared lock (a frame is several writes on a socket file;
+      concurrent handlers must not interleave mid-frame).
+    * ``recv`` pops frames from this request's inbox, which the owning demux
+      loop fills with frames whose header carried the matching ``rid``.
+      Queued exceptions (connection death) re-raise on the consumer side.
+      The inbox is bounded: when a handler drains an upload slower than the
+      socket delivers it, ``push`` blocks the demux loop, which propagates
+      backpressure to the peer instead of buffering the stream in memory.
+    * ``rid=None`` degrades to an untagged pass-through used by the v1
+      one-at-a-time path, where the dispatcher may read the channel directly.
+    """
+
+    def __init__(self, base, rid, send_lock: threading.Lock):
+        self._base = base
+        self.rid = rid
+        self._send_lock = send_lock
+        self.inbox: queue.Queue = queue.Queue(maxsize=INBOX_FRAMES)
+        self._done = False
+
+    @property
+    def bytes_sent(self) -> int:
+        return self._base.bytes_sent
+
+    @property
+    def bytes_received(self) -> int:
+        return self._base.bytes_received
+
+    def send(self, ftype: int, header: dict, body=b"") -> None:
+        if self.rid is not None:
+            header = dict(header)
+            header["rid"] = self.rid
+        with self._send_lock:
+            self._base.send(ftype, header, body)
+
+    def recv(self, timeout: float | None = None):
+        if self.rid is None:
+            return self._base.recv(timeout=timeout)
+        try:
+            item = self.inbox.get(timeout=timeout)
+        except queue.Empty:
+            raise TransportError("recv timeout") from None
+        if isinstance(item, Exception):
+            raise item
+        return item
+
+    def push(self, item) -> None:
+        """Demux side: deliver a frame tuple (or a terminal exception).
+        Blocks on a full inbox (backpressure) but re-checks ``finish`` so a
+        dead handler's leftover frames are dropped, not wedged on."""
+        while not self._done:
+            try:
+                self.inbox.put(item, timeout=0.25)
+                return
+            except queue.Full:
+                continue
+
+    def finish(self) -> None:
+        """Handler completed/died: subsequent pushes for this rid drop."""
+        self._done = True
+
+    def close(self) -> None:
+        """No-op: the demux loop owns the underlying channel's lifecycle."""
 
 
 def connect_tcp(host: str, port: int, timeout: float = 10.0) -> SocketChannel:

@@ -21,6 +21,13 @@ Frame types:
     ERROR    header = DacpError wire form
     REQUEST  header = {verb, uri, token, ...}, body = optional payload (DAG)
     OK       header = ack / result metadata
+
+DACP v2 multiplexing: a REQUEST may carry a ``rid`` (request id) in its
+header; every frame belonging to that request's response — OK, SCHEMA,
+BATCH, END, ERROR, and upload stream frames — echoes the same ``rid``.
+Tagged requests from concurrent callers interleave on one channel; frames
+without a ``rid`` follow the v1 one-request-at-a-time discipline, so v1
+peers interoperate unchanged (they simply never tag).
 """
 
 from __future__ import annotations
@@ -37,10 +44,13 @@ __all__ = [
     "ERROR",
     "REQUEST",
     "OK",
+    "PROTOCOL_VERSION",
     "encode_frame",
     "FrameReader",
     "FrameWriter",
 ]
+
+PROTOCOL_VERSION = 2
 
 MAGIC = b"DACP"
 SCHEMA, BATCH, END, ERROR, REQUEST, OK = 1, 2, 3, 4, 5, 6

@@ -1,6 +1,10 @@
 """Property-based tests (hypothesis) on the protocol's invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Dag, RecordBatch, Schema, StreamingDataFrame, col, execute, optimize
