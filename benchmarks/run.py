@@ -10,6 +10,8 @@ One section per paper figure/claim:
     cook_insitu   — §III-D/§VI-C move-operators-not-data
     session_reuse — §III-C phased interaction: v2 multiplexed session vs
                     channel-per-request for N small GETs
+    executor      — §III-D morsel-driven parallel executor: 1 vs N workers,
+                    numpy vs pallas backend, rows/s on a COOK pipeline
     kernels       — §IV-B hot-spot kernels (interpret-mode indicative)
 
 Results additionally land in benchmarks/results/benchmarks.json.
@@ -23,7 +25,7 @@ import sys
 def main() -> None:
     quick = "--quick" in sys.argv
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-    from benchmarks import cook_insitu, kernels_bench, pushdown, session_reuse, structured, unstructured
+    from benchmarks import cook_insitu, executor, kernels_bench, pushdown, session_reuse, structured, unstructured
 
     out = {}
     print("name,us_per_call,derived")
@@ -32,6 +34,7 @@ def main() -> None:
     out["pushdown"] = pushdown.run(rows=10_000 if quick else 100_000)
     out["cook_insitu"] = cook_insitu.run(rows=10_000 if quick else 100_000)
     out["session_reuse"] = session_reuse.run(n_gets=40 if quick else 200)
+    out["executor"] = executor.run(rows=100_000 if quick else 400_000)
     out["kernels"] = kernels_bench.run()
 
     res_dir = os.path.join(os.path.dirname(__file__), "results")
@@ -56,6 +59,11 @@ def main() -> None:
     print(
         f"#  v2 session reuse: {sr['speedup_session']:.2f}x per GET over channel-per-request; "
         f"{sr['speedup_concurrent']:.2f}x with 8 in-flight"
+    )
+    ex = out["executor"]
+    print(
+        f"#  morsel executor: {ex['speedup_4w_vs_seed']:.2f}x rows/s at 4 workers vs the "
+        f"single-threaded seed path ({ex['rows_per_s_4w'] / 1e6:.2f} Mrows/s)"
     )
 
 

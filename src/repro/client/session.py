@@ -344,15 +344,22 @@ class DacpSession:
                 call.release()
 
     def _stream_result(self, sdf: StreamingDataFrame, call: _Call) -> StreamingDataFrame:
+        holder: dict = {}
+
         def gen():
             try:
                 yield from sdf.iter_batches()
             finally:
+                holder.clear()
                 call.release()
 
         out = StreamingDataFrame.one_shot(sdf.schema, gen())
         # a never-iterated generator skips its finally even on GC; tie the
-        # release to the SDF's lifetime so an abandoned stream frees its rid
+        # release to the SDF's lifetime so an abandoned stream frees its rid.
+        # The generator must in turn pin the SDF (holder cell): a caller that
+        # keeps only `sdf.iter_batches()` would otherwise GC the SDF, fire
+        # the finalizer mid-stream, and drop the rest of the stream's frames.
+        holder["sdf"] = out
         weakref.finalize(out, call.release)
         return out
 

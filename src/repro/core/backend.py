@@ -1,0 +1,259 @@
+"""Pluggable compute backends for the morsel executor (paper §III-D).
+
+A *backend* supplies the vectorized kernels that operator evaluators run on
+each morsel: predicate evaluation, filtering, and the fused filter+select
+that the executor peepholes out of adjacent Filter→Select pairs.  Backends
+are looked up in a **kernel registry** keyed ``(backend name, op name)``;
+resolution falls back to the numpy reference kernels, so a backend only
+overrides the ops it accelerates and everything else keeps reference
+semantics bit-for-bit.
+
+Two backends ship in-tree:
+
+  * ``numpy``  — the reference implementation (always present).
+  * ``pallas`` — dispatches eligible morsels to the JAX/Pallas kernels in
+    ``repro.kernels`` (``filter_select.py`` via the jit wrappers in
+    ``ops.py``).  A morsel is *eligible* for the fused kernel when the
+    predicate is a simple ``col > literal`` comparison, every touched column
+    is float32 with no validity mask, the threshold is exactly representable
+    in float32, and the buffer is finite (the MXU one-hot matmuls would
+    propagate NaN/Inf from unselected columns).  Anything else — including
+    jax being absent entirely — falls back to the numpy kernel, so results
+    are identical either way.  (Known normalization: ``-0.0`` compacts to
+    ``+0.0`` through the MXU path.)
+
+``get_backend("auto")`` selects pallas only when jax reports a real TPU;
+interpret-mode Pallas on CPU is for correctness tests, not speed.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from typing import Callable
+
+import numpy as np
+
+from repro.core.batch import Column, RecordBatch
+from repro.core.expr import Expr
+
+__all__ = [
+    "ComputeBackend",
+    "KERNELS",
+    "register_kernel",
+    "get_backend",
+    "available_backends",
+    "BACKENDS",
+]
+
+
+# ---------------------------------------------------------------------------
+# kernel registry
+# ---------------------------------------------------------------------------
+KERNELS: dict = {"numpy": {}, "pallas": {}}
+
+
+def register_kernel(backend: str, op: str):
+    """Register ``fn(backend_instance, ...)`` as ``op`` for ``backend``."""
+
+    def deco(fn: Callable) -> Callable:
+        KERNELS.setdefault(backend, {})[op] = fn
+        return fn
+
+    return deco
+
+
+class ComputeBackend:
+    """Kernel dispatch facade.  Instances are stateless and thread-safe."""
+
+    name = "numpy"
+
+    def kernel(self, op: str) -> Callable:
+        impl = KERNELS.get(self.name, {}).get(op)
+        if impl is None:
+            impl = KERNELS["numpy"][op]
+        return impl
+
+    # -- morsel-level entry points (used by operator evaluators) ------------
+    def eval_predicate(self, batch: RecordBatch, predicate: Expr) -> np.ndarray:
+        return self.kernel("eval_predicate")(self, batch, predicate)
+
+    def filter(self, batch: RecordBatch, predicate: Expr):
+        """Apply a predicate; returns the surviving rows or ``None`` when the
+        whole morsel is filtered out (no empty frames downstream)."""
+        return self.kernel("filter")(self, batch, predicate)
+
+    def filter_select(self, batch: RecordBatch, predicate: Expr, columns: list):
+        """Fused filter + column projection (the executor's peephole)."""
+        return self.kernel("filter_select")(self, batch, predicate, columns)
+
+
+# ---------------------------------------------------------------------------
+# numpy reference kernels
+# ---------------------------------------------------------------------------
+@register_kernel("numpy", "eval_predicate")
+def _np_eval_predicate(bk, batch: RecordBatch, predicate: Expr) -> np.ndarray:
+    return np.asarray(predicate.evaluate(batch), dtype=bool)
+
+
+@register_kernel("numpy", "filter")
+def _np_filter(bk, batch: RecordBatch, predicate: Expr):
+    mask = _np_eval_predicate(bk, batch, predicate)
+    if mask.all():
+        return batch
+    if not mask.any():
+        return None
+    return batch.filter(mask)
+
+
+@register_kernel("numpy", "filter_select")
+def _np_filter_select(bk, batch: RecordBatch, predicate: Expr, columns: list):
+    out = _np_filter(bk, batch, predicate)
+    return None if out is None else out.select(columns)
+
+
+class NumpyBackend(ComputeBackend):
+    name = "numpy"
+
+
+# ---------------------------------------------------------------------------
+# pallas backend
+# ---------------------------------------------------------------------------
+class PallasBackend(ComputeBackend):
+    name = "pallas"
+    tile = 256
+
+    def __init__(self):
+        self._kernel_mod = None
+        self._disabled = False
+        self._lock = threading.Lock()
+        self.kernel_calls = 0  # observability: fused-kernel dispatch count
+
+    def _ops(self):
+        """Import the jit'd kernel wrappers once; a failed import (no jax)
+        permanently disables dispatch and every kernel falls back to numpy."""
+        if self._disabled:
+            return None
+        if self._kernel_mod is None:
+            with self._lock:
+                if self._kernel_mod is None and not self._disabled:
+                    try:
+                        from repro.kernels import ops as kernel_ops
+
+                        self._kernel_mod = kernel_ops
+                    except Exception:
+                        self._disabled = True
+        return self._kernel_mod
+
+
+def _fused_plan(batch: RecordBatch, predicate: Expr, columns: list):
+    """Eligibility check for the Pallas fused kernel.  Returns
+    ``(pred_name, threshold, table_cols)`` or ``None`` (→ numpy fallback)."""
+    if not (
+        isinstance(predicate, Expr)
+        and predicate.op == "gt"
+        and isinstance(predicate.args[0], Expr)
+        and predicate.args[0].op == "col"
+        and isinstance(predicate.args[1], Expr)
+        and predicate.args[1].op == "lit"
+    ):
+        return None
+    threshold = predicate.args[1].args[0]
+    if isinstance(threshold, bool) or not isinstance(threshold, (int, float)):
+        return None
+    if float(np.float32(threshold)) != float(threshold):
+        return None  # f32 kernel compare would differ from the f64 reference
+    pred_name = predicate.args[0].args[0]
+    needed = [pred_name] + [c for c in columns if c != pred_name]
+    schema = batch.schema
+    for name in needed:
+        if name not in schema:
+            return None
+        f = schema.field(name)
+        if f.dtype.name != "float32":
+            return None
+        if batch.column(name).validity is not None:
+            return None
+    return pred_name, float(threshold), needed
+
+
+@register_kernel("pallas", "filter_select")
+def _pl_filter_select(bk: PallasBackend, batch: RecordBatch, predicate: Expr, columns: list):
+    kernel_ops = bk._ops()
+    plan = _fused_plan(batch, predicate, columns) if kernel_ops is not None else None
+    if plan is None or batch.num_rows == 0:
+        return _np_filter_select(bk, batch, predicate, columns)
+    pred_name, threshold, needed = plan
+    tile = bk.tile
+    n = batch.num_rows
+    n_pad = -(-n // tile) * tile
+    table = np.full((n_pad, len(needed)), threshold, dtype=np.float32)
+    for j, name in enumerate(needed):
+        table[:n, j] = batch.column(name).values
+    if not np.isfinite(table).all():
+        return _np_filter_select(bk, batch, predicate, columns)
+    sel_idx = tuple(needed.index(c) for c in columns)
+    try:
+        compacted, n_sel = kernel_ops.filter_select(table, 0, threshold, sel_idx, tile=tile)
+    except Exception:
+        return _np_filter_select(bk, batch, predicate, columns)
+    bk.kernel_calls += 1
+    if n_sel == 0:
+        return None
+    out_schema = batch.schema.select(columns)
+    cols = [
+        Column(f.dtype, values=np.ascontiguousarray(compacted[:, j]))
+        for j, f in enumerate(out_schema)
+    ]
+    return RecordBatch(out_schema, cols)
+
+
+@register_kernel("pallas", "filter")
+def _pl_filter(bk: PallasBackend, batch: RecordBatch, predicate: Expr):
+    # the unfused form is only kernel-eligible when EVERY column is float32
+    return _pl_filter_select(bk, batch, predicate, list(batch.schema.names))
+
+
+# ---------------------------------------------------------------------------
+# backend selection
+# ---------------------------------------------------------------------------
+BACKENDS = {"numpy": NumpyBackend, "pallas": PallasBackend}
+_instances: dict = {}
+_instances_lock = threading.Lock()
+
+
+def _jax_tpu() -> bool:
+    try:
+        import jax
+
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def available_backends() -> list:
+    out = ["numpy"]
+    try:
+        import importlib.util
+
+        if importlib.util.find_spec("jax") is not None:
+            out.append("pallas")
+    except Exception:
+        pass
+    return out
+
+
+def get_backend(name: str | None = None) -> ComputeBackend:
+    """Resolve a backend by name.  ``auto`` (default, or env
+    ``DACP_BACKEND``) picks pallas only on a real TPU; ``pallas`` without
+    jax still resolves — its kernels just fall back to numpy."""
+    name = name or os.environ.get("DACP_BACKEND", "auto")
+    if name == "auto":
+        name = "pallas" if _jax_tpu() else "numpy"
+    if name not in BACKENDS:
+        raise KeyError(f"unknown compute backend {name!r}; known: {sorted(BACKENDS)}")
+    with _instances_lock:
+        inst = _instances.get(name)
+        if inst is None:
+            inst = _instances[name] = BACKENDS[name]()
+        return inst

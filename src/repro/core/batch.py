@@ -283,17 +283,27 @@ class RecordBatch:
             cols.append(Column.from_buffers(f.dtype, n, hc["kinds"], views))
         return RecordBatch(schema, cols)
 
+    _PAD = b"\x00" * (_ALIGN - 1)
+
     @staticmethod
-    def payload_bytes(bufs) -> bytes:
-        """Concatenate buffers with 8-byte alignment (the frame body)."""
+    def payload_parts(bufs) -> list:
+        """Buffer parts (with 8-byte alignment padding interleaved) ready for
+        a writev-style frame write — **no concatenation copy**.  Views
+        reference the column memory directly; the writer streams them out
+        sequentially (``FrameWriter.write_frame`` with a list body)."""
         parts = []
         for b in bufs:
             raw = memoryview(b).cast("B")
             parts.append(raw)
             p = _pad(len(raw))
             if p:
-                parts.append(b"\x00" * p)
-        return b"".join(parts)
+                parts.append(RecordBatch._PAD[:p])
+        return parts
+
+    @staticmethod
+    def payload_bytes(bufs) -> bytes:
+        """Concatenate buffers with 8-byte alignment (the frame body)."""
+        return b"".join(RecordBatch.payload_parts(bufs))
 
 
 def concat_batches(batches) -> RecordBatch:

@@ -1,0 +1,526 @@
+"""Morsel-driven parallel pipeline driver (paper §III-D: "as fast as the
+hardware allows").
+
+``execute_parallel`` compiles an (optimized) COOK DAG into **pipelines** —
+maximal chains of morsel-pure operators (filter/select/project/map)
+separated by **pipeline breakers** (aggregate build, join build).  Each
+pipeline's source stream is cut into *morsels* (RecordBatch slices of
+``morsel_rows``) that a pool of worker threads drains concurrently; results
+are reassembled **in input order** through a bounded reorder window, which
+doubles as backpressure: workers stop pulling new morsels when the consumer
+falls more than ``window`` morsels behind.  Output batches therefore stream
+to the caller as they are produced — the first batch is yielded while later
+morsels are still being scanned/computed, preserving SDF streaming
+semantics, and results are byte-deterministic for a given morsel size
+regardless of worker count.
+
+Breakers:
+
+  * ``aggregate`` — each worker folds its morsel into a private
+    ``GroupState`` (vectorized factorization); the consumer merges the
+    partial states in morsel order, so group order matches the reference
+    single-threaded pull chain.
+  * ``join`` — the build side runs as its own parallel stage to a
+    materialized hash table (built once, shared read-only); probing is
+    morsel-pure and stays inside the probe pipeline.
+  * ``limit`` / ``rebatch`` — inherently sequential; they run as a serial
+    tail over the (already parallel) upstream stage via the reference
+    evaluators.
+
+Every pipeline source is wrapped in a bounded **prefetcher** thread started
+at stage activation, so scans and cross-domain exchange pulls overlap with
+compute — and union branches pull their exchanges concurrently instead of
+serially (the scheduler's network/compute overlap).
+
+Compute is delegated to a pluggable backend (``repro.core.backend``):
+adjacent Filter→Select pairs are peephole-fused into the backend's
+``filter_select`` kernel, which the pallas backend dispatches to the
+TPU kernels in ``repro.kernels`` when the morsel is eligible.
+
+Laziness contract: building the executor does no work; worker threads spin
+up on the first pull of the output SDF and wind down when it is exhausted
+or closed.
+"""
+
+from __future__ import annotations
+
+import os
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Iterator
+
+from repro.core.backend import ComputeBackend, get_backend
+from repro.core.batch import RecordBatch, concat_batches
+from repro.core.dag import Dag, Node
+from repro.core.errors import PlanError, SchemaError
+from repro.core.operators import (
+    GroupState,
+    agg_out_fields,
+    build_join_table,
+    execute_node,
+    filter_morsel,
+    get_map,
+    join_probe_morsel,
+    join_schema,
+    map_morsel,
+    project_morsel,
+    project_schema,
+    select_morsel,
+)
+from repro.core.schema import Schema
+from repro.core.sdf import StreamingDataFrame
+
+__all__ = ["ExecutorConfig", "execute_parallel", "prefetch_sdf", "default_workers"]
+
+DEFAULT_MORSEL_ROWS = 65536
+_STREAMING_OPS = ("filter", "select", "project", "map")
+
+
+def default_workers() -> int:
+    env = os.environ.get("DACP_EXECUTOR_WORKERS")
+    if env:
+        return max(0, int(env))
+    return min(4, os.cpu_count() or 1)
+
+
+@dataclass
+class ExecutorConfig:
+    """Executor tuning knobs (engine/server-level configuration).
+
+    num_workers   morsel worker threads per pipeline stage; 1 = sequential
+                  in-line execution (no threads), 0 = delegate to the
+                  reference pull chain (``operators.execute``).
+    morsel_rows   rows per morsel (source batches are sliced to this).
+    backend       compute backend name ("numpy" | "pallas" | "auto").
+    window        reorder/backpressure window in morsels (0 → 4×workers).
+    prefetch_batches  per-source prefetch queue depth (0 disables).
+    stream_depth  producer-queue depth used by the server when streaming
+                  result frames (faird GET/COOK overlap; 0 disables).
+    scan_workers  parallel file readers inside datasource scans.
+    """
+
+    num_workers: int = field(default_factory=default_workers)
+    morsel_rows: int = field(default_factory=lambda: int(os.environ.get("DACP_MORSEL_ROWS", DEFAULT_MORSEL_ROWS)))
+    backend: str = field(default_factory=lambda: os.environ.get("DACP_BACKEND", "auto"))
+    window: int = 0
+    prefetch_batches: int = 4
+    stream_depth: int = 4
+    scan_workers: int = field(default_factory=lambda: int(os.environ.get("DACP_SCAN_WORKERS", "4")))
+
+    def effective_window(self) -> int:
+        return self.window if self.window > 0 else 4 * max(1, self.num_workers)
+
+
+# ---------------------------------------------------------------------------
+# bounded source prefetch (network/disk ↔ compute overlap)
+# ---------------------------------------------------------------------------
+_DONE = object()
+
+
+class _Prefetch:
+    """Pulls an SDF's batches on a background thread into a bounded queue.
+    Exceptions (e.g. a dead exchange pull) are re-raised to the consumer
+    with their original type, so upstream resilience/retry still works."""
+
+    def __init__(self, sdf: StreamingDataFrame, depth: int):
+        self._sdf = sdf
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
+        self._stop = False
+        self._exc: BaseException | None = None
+        self._thread: threading.Thread | None = None
+
+    def start(self) -> None:
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._run, daemon=True)
+            self._thread.start()
+
+    def _run(self) -> None:
+        try:
+            for b in self._sdf.iter_batches():
+                if not self._put(b):
+                    return
+        except BaseException as e:  # noqa: BLE001 - re-raised on the consumer side
+            self._exc = e
+        self._put(_DONE)
+
+    def _put(self, item) -> bool:
+        while not self._stop:
+            try:
+                self._q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def __iter__(self) -> Iterator[RecordBatch]:
+        self.start()
+        while not self._stop:
+            try:
+                item = self._q.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            if item is _DONE:
+                if self._exc is not None:
+                    raise self._exc
+                return
+            yield item
+
+    def close(self) -> None:
+        self._stop = True
+
+
+def prefetch_sdf(sdf: StreamingDataFrame, depth: int = 4) -> StreamingDataFrame:
+    """Producer-queue wrapper: batches are computed ``depth`` ahead of the
+    consumer on a background thread (the server uses this to overlap result
+    production with socket writes)."""
+    if depth <= 0:
+        return sdf
+
+    def gen():
+        pf = _Prefetch(sdf, depth)
+        try:
+            yield from pf
+        finally:
+            pf.close()
+
+    return StreamingDataFrame(sdf.schema, gen)
+
+
+# ---------------------------------------------------------------------------
+# ordered morsel runs
+# ---------------------------------------------------------------------------
+class _Branch:
+    """One pipeline input: a source SDF plus the op specs applied to its
+    morsels.  Unions contribute several branches to the same stage."""
+
+    __slots__ = ("sdf", "specs")
+
+    def __init__(self, sdf: StreamingDataFrame, specs: list | None = None):
+        self.sdf = sdf
+        self.specs = specs if specs is not None else []
+
+
+def _apply_ops(ops: list, batch: RecordBatch) -> RecordBatch | None:
+    for op in ops:
+        batch = op(batch)
+        if batch is None:
+            return None
+    return batch
+
+
+def _morsel_slices(batch: RecordBatch, morsel_rows: int):
+    if batch.num_rows <= morsel_rows:
+        yield batch
+        return
+    for s in range(0, batch.num_rows, morsel_rows):
+        yield batch.slice(s, s + morsel_rows)
+
+
+def _run_ordered(branches: list, cfg: ExecutorConfig, backend: ComputeBackend, make_item: Callable):
+    """Drive branches' morsels through a worker pool; yield non-None
+    ``make_item(ops, morsel)`` results in strict input order.
+
+    With ``num_workers <= 1`` this degrades to a fully synchronous loop —
+    no threads, reference pull-chain behavior."""
+    compiled = [(br, _finalize_ops(br.specs, backend)) for br in branches]
+
+    if cfg.num_workers <= 1:
+        for br, ops in compiled:
+            for batch in br.sdf.iter_batches():
+                for m in _morsel_slices(batch, cfg.morsel_rows):
+                    out = make_item(ops, m)
+                    if out is not None:
+                        yield out
+        return
+
+    window = cfg.effective_window()
+    prefetchers = [_Prefetch(br.sdf, cfg.prefetch_batches) for br, _ in compiled]
+    for pf in prefetchers:
+        pf.start()  # all sources (incl. every exchange pull) activate now
+
+    def morsels():
+        for (_, ops), pf in zip(compiled, prefetchers):
+            for batch in pf:
+                for m in _morsel_slices(batch, cfg.morsel_rows):
+                    yield ops, m
+
+    it = morsels()
+    src_lock = threading.Lock()
+    cond = threading.Condition()
+    state = {"assigned": 0, "next": 0, "total": None, "error": None, "stop": False, "buf": {}}
+
+    def worker():
+        while True:
+            with cond:
+                while (
+                    not state["stop"]
+                    and state["error"] is None
+                    and state["assigned"] - state["next"] >= window
+                ):
+                    cond.wait()
+                if state["stop"] or state["error"] is not None:
+                    return
+            with src_lock:
+                if state["total"] is not None:
+                    return
+                try:
+                    ops, m = next(it)
+                except StopIteration:
+                    state["total"] = state["assigned"]
+                    with cond:
+                        cond.notify_all()
+                    return
+                except BaseException as e:  # noqa: BLE001 - surfaced to consumer
+                    with cond:
+                        if state["error"] is None:
+                            state["error"] = e
+                        state["total"] = state["assigned"]
+                        cond.notify_all()
+                    return
+                seq = state["assigned"]
+                state["assigned"] = seq + 1
+            try:
+                out = make_item(ops, m)
+            except BaseException as e:  # noqa: BLE001 - surfaced to consumer
+                with cond:
+                    if state["error"] is None:
+                        state["error"] = e
+                    cond.notify_all()
+                return
+            with cond:
+                state["buf"][seq] = out
+                cond.notify_all()
+
+    threads = [threading.Thread(target=worker, daemon=True) for _ in range(cfg.num_workers)]
+    for t in threads:
+        t.start()
+    try:
+        while True:
+            with cond:
+                while (
+                    state["next"] not in state["buf"]
+                    and state["error"] is None
+                    and not (state["total"] is not None and state["next"] >= state["total"])
+                ):
+                    cond.wait(timeout=0.1)
+                if state["error"] is not None:
+                    raise state["error"]
+                if state["next"] not in state["buf"]:
+                    return  # total reached: all morsels emitted
+                item = state["buf"].pop(state["next"])
+                state["next"] += 1
+                cond.notify_all()
+            if item is not None:
+                yield item
+    finally:
+        with cond:
+            state["stop"] = True
+            cond.notify_all()
+        for pf in prefetchers:
+            pf.close()
+
+
+# ---------------------------------------------------------------------------
+# op-spec finalization (backend binding + filter→select fusion)
+# ---------------------------------------------------------------------------
+def _finalize_ops(specs: list, backend: ComputeBackend) -> list:
+    """Turn compile-time op specs into morsel closures, peephole-fusing
+    adjacent filter+select into the backend's fused kernel."""
+    ops: list = []
+    i = 0
+    while i < len(specs):
+        kind, args = specs[i]
+        if kind == "filter" and i + 1 < len(specs) and specs[i + 1][0] == "select":
+            pred, cols = args[0], list(specs[i + 1][1][0])
+            ops.append(lambda b, _p=pred, _c=cols: backend.filter_select(b, _p, _c))
+            i += 2
+            continue
+        if kind == "filter":
+            pred = args[0]
+            ops.append(lambda b, _p=pred: filter_morsel(b, _p, backend))
+        elif kind == "select":
+            cols = list(args[0])
+            ops.append(lambda b, _c=cols: select_morsel(b, _c))
+        elif kind == "project":
+            exprs, out_schema = args
+            ops.append(lambda b, _e=exprs, _s=out_schema: project_morsel(b, _e, _s))
+        elif kind == "map":
+            mf, fn_params = args
+            ops.append(lambda b, _m=mf, _p=fn_params: map_morsel(b, _m, _p))
+        elif kind == "probe":
+            once, on, payload, schema = args
+            ops.append(
+                lambda b, _o=once, _on=on, _pl=payload, _s=schema: join_probe_morsel(
+                    b, _o.get()[0], _o.get()[1], _on, _pl, _s
+                )
+            )
+        else:  # pragma: no cover - compiler invariant
+            raise PlanError(f"unknown morsel op {kind!r}")
+        i += 1
+    return ops
+
+
+class _Once:
+    """Thread-safe lazily-computed value (join build table)."""
+
+    def __init__(self, factory: Callable):
+        self._factory = factory
+        self._lock = threading.Lock()
+        self._value = None
+        self._ready = False
+
+    def get(self):
+        if not self._ready:
+            with self._lock:
+                if not self._ready:
+                    self._value = self._factory()
+                    self._ready = True
+        return self._value
+
+
+# ---------------------------------------------------------------------------
+# DAG → pipeline compiler
+# ---------------------------------------------------------------------------
+class _Compiler:
+    def __init__(self, dag: Dag, resolver: Callable[[Node], StreamingDataFrame], cfg: ExecutorConfig, backend: ComputeBackend):
+        self.dag = dag
+        self.resolver = resolver
+        self.cfg = cfg
+        self.backend = backend
+        self._memo: dict = {}  # node id -> (branches, schema)
+
+    def compile(self) -> StreamingDataFrame:
+        branches, schema = self._stream(self.dag.output)
+        return self._stage_sdf(branches, schema)
+
+    # -- stage assembly -----------------------------------------------------
+    def _stage_sdf(self, branches: list, schema: Schema) -> StreamingDataFrame:
+        if len(branches) == 1 and not branches[0].specs:
+            return branches[0].sdf  # nothing to compute: pass the source through
+
+        def gen():
+            yield from _run_ordered(branches, self.cfg, self.backend, _apply_ops)
+
+        return StreamingDataFrame(schema, gen)
+
+    def _collect_stage(self, branches: list, schema: Schema) -> RecordBatch:
+        got = list(_run_ordered(branches, self.cfg, self.backend, _apply_ops))
+        return concat_batches(got) if got else RecordBatch.empty(schema)
+
+    # -- recursive compilation ---------------------------------------------
+    def _stream(self, nid: str) -> tuple:
+        memo = self._memo.get(nid)
+        if memo is not None:
+            branches, schema = memo
+            # consumers mutate spec lists; hand each its own copy
+            return [_Branch(br.sdf, list(br.specs)) for br in branches], schema
+        out = self._compile_node(self.dag.nodes[nid])
+        self._memo[nid] = out
+        branches, schema = out
+        return [_Branch(br.sdf, list(br.specs)) for br in branches], schema
+
+    def _compile_node(self, node: Node) -> tuple:
+        op = node.op
+        if op in ("source", "exchange"):
+            sdf = self.resolver(node)
+            return [_Branch(sdf)], sdf.schema
+        if op in _STREAMING_OPS:
+            branches, schema = self._stream(node.inputs[0])
+            spec, schema = self._streaming_spec(node, schema)
+            for br in branches:
+                br.specs.append(spec)
+            return branches, schema
+        if op == "union":
+            branches, schema = self._stream(node.inputs[0])
+            for other in node.inputs[1:]:
+                b2, s2 = self._stream(other)
+                if not s2.equals(schema):
+                    raise SchemaError("union over mismatched schemas")
+                branches.extend(b2)
+            return branches, schema
+        if op == "aggregate":
+            return self._compile_aggregate(node)
+        if op == "join":
+            return self._compile_join(node)
+        if op in ("limit", "rebatch"):
+            # sequential-by-nature: serial tail over the parallel upstream
+            branches, schema = self._stream(node.inputs[0])
+            sdf = execute_node(node, [self._stage_sdf(branches, schema)])
+            return [_Branch(sdf)], sdf.schema
+        raise PlanError(f"operator {op!r} has no parallel evaluator")
+
+    def _streaming_spec(self, node: Node, in_schema: Schema) -> tuple:
+        if node.op == "filter":
+            return ("filter", (node.params["predicate"],)), in_schema
+        if node.op == "select":
+            cols = list(node.params["columns"])
+            return ("select", (cols,)), in_schema.select(cols)
+        if node.op == "project":
+            exprs = dict(node.params["exprs"])
+            keep = bool(node.params.get("keep", True))
+            out_schema = project_schema(in_schema, exprs, keep)
+            return ("project", (exprs, out_schema)), out_schema
+        if node.op == "map":
+            mf = get_map(node.params["fn"])
+            fn_params = dict(node.params.get("fn_params", {}))
+            return ("map", (mf, fn_params)), mf.schema_fn(in_schema, **fn_params)
+        raise PlanError(f"not a streaming op: {node.op!r}")  # pragma: no cover
+
+    def _compile_aggregate(self, node: Node) -> tuple:
+        keys = list(node.params["keys"])
+        aggs = dict(node.params["aggs"])
+        mode = node.params.get("mode", "full")
+        branches, in_schema = self._stream(node.inputs[0])
+        missing = [k for k in keys if k not in in_schema]
+        if missing:
+            raise SchemaError(f"aggregate keys missing from input: {missing}")
+        out_schema = Schema(agg_out_fields(in_schema, keys, aggs, mode))
+        cfg, backend = self.cfg, self.backend
+
+        def fold(ops, morsel):
+            b = _apply_ops(ops, morsel)
+            if b is None or b.num_rows == 0:
+                return None
+            st = GroupState(keys, aggs, mode, in_schema, vectorized=True)
+            st.update(b)
+            return st
+
+        def agg_gen():
+            # breaker: fold morsels into per-morsel partial states in
+            # parallel, merge them in morsel order (deterministic output)
+            total = GroupState(keys, aggs, mode, in_schema, vectorized=True)
+            for st in _run_ordered(branches, cfg, backend, fold):
+                total.merge(st)
+            yield total.result(out_schema)
+
+        return [_Branch(StreamingDataFrame(out_schema, agg_gen))], out_schema
+
+    def _compile_join(self, node: Node) -> tuple:
+        on = list(node.params["on"])
+        left_branches, ls = self._stream(node.inputs[0])
+        right_branches, rs = self._stream(node.inputs[1])
+        schema, payload, _rename = join_schema(ls, rs, on)
+
+        def build():
+            rb = self._collect_stage(right_branches, rs)
+            return rb, build_join_table(rb, on)
+
+        once = _Once(build)
+        for br in left_branches:
+            br.specs.append(("probe", (once, on, payload, schema)))
+        return left_branches, schema
+
+
+def execute_parallel(
+    dag: Dag,
+    source_resolver: Callable[[Node], StreamingDataFrame],
+    config: ExecutorConfig | None = None,
+) -> StreamingDataFrame:
+    """Wire the DAG into morsel-parallel pipelines and return the output SDF.
+
+    Semantics match ``operators.execute`` (same rows, same order for a given
+    morsel size); execution is lazy — workers start on the first pull."""
+    cfg = config or ExecutorConfig()
+    backend = get_backend(cfg.backend)
+    return _Compiler(dag, source_resolver, cfg, backend).compile()

@@ -1,9 +1,20 @@
-"""Operator library + pull-based streaming executor (paper §III-B, §IV-B).
+"""Operator library: morsel-pure evaluators + the reference pull driver
+(paper §III-B, §IV-B).
 
-Every operator consumes and produces SDF batch streams.  Execution is
-**lazy / pull-based (reverse supply)**: building an executor does no work;
-iterating the *output* recursively pulls from inputs, activating upstream
-operators one batch at a time — the paper's §III-D execution model.
+The module is split in two layers since the executor refactor:
+
+  * **morsel-pure functions** (``filter_morsel``, ``select_morsel``,
+    ``project_morsel``, ``map_morsel``, ``join_probe_morsel``) — each maps
+    one RecordBatch to at most one RecordBatch with no cross-batch state.
+    They are the unit of work the morsel-driven parallel driver
+    (``repro.core.executor``) hands to its workers, and they take a
+    ``ComputeBackend`` so eligible morsels dispatch to Pallas kernels.
+  * **streaming evaluators + ``execute``** — the reference lazy pull chain
+    (reverse supply): building an executor does no work; iterating the
+    output recursively pulls from inputs one batch at a time — the paper's
+    §III-D execution model, single-threaded.  ``SDFEngine`` uses the
+    parallel driver by default and keeps this path as the ``num_workers=0``
+    reference/fallback.
 
 ``map`` operators reference functions from a **named registry** — the DAG
 itself never carries code.  Each registered fn declares the columns it reads
@@ -25,7 +36,24 @@ from repro.core.expr import Expr
 from repro.core.schema import Field, Schema
 from repro.core.sdf import StreamingDataFrame
 
-__all__ = ["MapFn", "register_map", "get_map", "MAP_REGISTRY", "execute", "execute_node"]
+__all__ = [
+    "MapFn",
+    "register_map",
+    "get_map",
+    "MAP_REGISTRY",
+    "execute",
+    "execute_node",
+    "filter_morsel",
+    "select_morsel",
+    "project_morsel",
+    "project_schema",
+    "map_morsel",
+    "join_schema",
+    "build_join_table",
+    "join_probe_morsel",
+    "GroupState",
+    "agg_out_fields",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -97,6 +125,48 @@ register_map("lowercase", reads=("*",), writes=())(_lowercase)
 
 
 # ---------------------------------------------------------------------------
+# morsel-pure operator functions (shared by the pull chain and the parallel
+# executor; each maps one batch -> one batch or None, no cross-batch state)
+# ---------------------------------------------------------------------------
+def filter_morsel(batch: RecordBatch, predicate: Expr, backend=None) -> RecordBatch | None:
+    """Surviving rows of one morsel, or None when fully masked (no empty
+    frames downstream).  ``backend`` dispatches eligible morsels to
+    accelerator kernels; None means the numpy reference path."""
+    if backend is not None:
+        return backend.filter(batch, predicate)
+    mask = np.asarray(predicate.evaluate(batch), dtype=bool)
+    if mask.all():
+        return batch
+    if not mask.any():
+        return None
+    return batch.filter(mask)
+
+
+def select_morsel(batch: RecordBatch, columns: list) -> RecordBatch:
+    return batch.select(columns)
+
+
+def map_morsel(batch: RecordBatch, mf: "MapFn", fn_params: dict) -> RecordBatch:
+    return mf.fn(batch, **fn_params)
+
+
+def project_morsel(batch: RecordBatch, exprs: dict, out_schema: Schema) -> RecordBatch:
+    """Evaluate projection exprs against one morsel, shaping the output to a
+    precomputed schema (dtype-coerced — morsel workers must all agree)."""
+    new_cols = {}
+    for name, e in exprs.items():
+        vals = np.asarray(e.evaluate(batch))
+        if vals.ndim == 0:
+            vals = np.full(batch.num_rows, vals[()])
+        f = out_schema.field(name)
+        if not f.dtype.is_varwidth and vals.dtype != f.dtype.np_dtype:
+            vals = vals.astype(f.dtype.np_dtype)
+        new_cols[name] = Column.from_values(f.dtype, vals)
+    cols = [new_cols[f.name] if f.name in new_cols else batch.column(f.name) for f in out_schema]
+    return RecordBatch(out_schema, cols)
+
+
+# ---------------------------------------------------------------------------
 # per-node streaming evaluators
 # ---------------------------------------------------------------------------
 def _eval_filter(node: Node, ins: list) -> StreamingDataFrame:
@@ -105,12 +175,9 @@ def _eval_filter(node: Node, ins: list) -> StreamingDataFrame:
 
     def gen() -> Iterator[RecordBatch]:
         for b in src.iter_batches():
-            mask = np.asarray(pred.evaluate(b), dtype=bool)
-            if mask.all():
-                yield b
-            elif mask.any():
-                yield b.filter(mask)
-            # fully-masked batches are dropped (no empty frames on the wire)
+            out = filter_morsel(b, pred)
+            if out is not None:
+                yield out
 
     return StreamingDataFrame(src.schema, gen)
 
@@ -122,9 +189,13 @@ def _eval_select(node: Node, ins: list) -> StreamingDataFrame:
 
     def gen():
         for b in src.iter_batches():
-            yield b.select(cols)
+            yield select_morsel(b, cols)
 
     return StreamingDataFrame(schema, gen)
+
+
+def project_schema(src_schema: Schema, exprs: dict, keep: bool) -> Schema:
+    return _infer_project_schema(src_schema, exprs, keep)
 
 
 def _infer_project_schema(src_schema: Schema, exprs: dict, keep: bool) -> Schema:
@@ -193,7 +264,7 @@ def _eval_map(node: Node, ins: list) -> StreamingDataFrame:
 
     def gen():
         for b in src.iter_batches():
-            yield mf.fn(b, **fn_params)
+            yield map_morsel(b, mf, fn_params)
 
     return StreamingDataFrame(schema, gen)
 
@@ -247,6 +318,10 @@ def _sum_dtype(dt):
     return resolve_dtype("int64") if dt.is_integer else resolve_dtype("float64")
 
 
+def agg_out_fields(in_schema: Schema, keys: list, aggs: dict, mode: str) -> list:
+    return _agg_out_fields(in_schema, keys, aggs, mode)
+
+
 def _agg_out_fields(in_schema: Schema, keys: list, aggs: dict, mode: str) -> list:
     """Output fields for an aggregate node.  ``partial`` emits decomposed
     state (sum+count for mean) so partials union/exchange cleanly and a
@@ -280,15 +355,26 @@ def _agg_src(out: str, spec: dict, mode: str) -> str:
     return spec.get("column")
 
 
-class _GroupState:
+class GroupState:
     """Incremental hash-aggregation state across batches (streaming: the
-    input is consumed batch-by-batch, never concatenated)."""
+    input is consumed batch-by-batch, never concatenated).
 
-    def __init__(self, keys: list, aggs: dict, mode: str, in_schema: Schema):
+    ``vectorized=True`` (the parallel executor's mode) factorizes fixed-width
+    key columns with ``np.unique`` — the python loop shrinks from per-row to
+    per-distinct-group-per-batch.  Var-width keys keep the reference row loop
+    so first-seen group order is preserved for string keys either way.
+
+    Partial states combine with ``merge`` — the morsel driver builds one
+    state per morsel and merges them in morsel order, so the grouped output
+    is deterministic regardless of worker count.
+    """
+
+    def __init__(self, keys: list, aggs: dict, mode: str, in_schema: Schema, vectorized: bool = False):
         self.keys = keys
         self.aggs = aggs
         self.mode = mode
         self.in_schema = in_schema
+        self.vectorized = vectorized and all(not in_schema.field(k).dtype.is_varwidth for k in keys)
         self.gids: dict = {}  # key tuple -> group id
         self.key_rows: list = []  # representative key values per group
         # state name -> numpy accumulator (grown as groups appear)
@@ -318,28 +404,61 @@ class _GroupState:
                     specs[out] = (init, np.float64)
         return specs
 
-    def update(self, batch: RecordBatch) -> None:
-        n = batch.num_rows
-        if n == 0:
-            return
-        # factorize the key tuple per row (vectorized per-column, then merged)
-        key_lists = [batch.column(k).to_pylist() for k in self.keys]
-        rows = list(zip(*key_lists))
-        gidx = np.empty(n, dtype=np.int64)
+    def _intern_groups(self, key_tuples) -> np.ndarray:
+        """Map key tuples to (new or existing) group ids."""
+        out = np.empty(len(key_tuples), dtype=np.int64)
         gids = self.gids
-        for i, kt in enumerate(rows):
+        for i, kt in enumerate(key_tuples):
             g = gids.get(kt)
             if g is None:
                 g = len(gids)
                 gids[kt] = g
                 self.key_rows.append(kt)
-            gidx[i] = g
-        ngroups = len(gids)
-        # grow every accumulator to the new group count in one shot
+            out[i] = g
+        return out
+
+    def _factorize(self, batch: RecordBatch) -> np.ndarray:
+        """Per-row group ids for one batch.  The vectorized path matches the
+        reference row loop exactly: new groups intern in first-seen row
+        order, and any validity mask on a key column falls back to the row
+        loop (null keys must stay distinct from the sentinel value)."""
+        key_cols = [batch.column(k) for k in self.keys]
+        if self.vectorized and all(c.validity is None for c in key_cols):
+            arrs = [np.ascontiguousarray(c.values) for c in key_cols]
+            if len(arrs) == 1:
+                uniq, first_idx, inv = np.unique(arrs[0], return_index=True, return_inverse=True)
+            else:
+                comb = np.empty(batch.num_rows, dtype=[(f"k{i}", a.dtype) for i, a in enumerate(arrs)])
+                for i, a in enumerate(arrs):
+                    comb[f"k{i}"] = a
+                uniq, first_idx, inv = np.unique(comb, return_index=True, return_inverse=True)
+            # np.unique sorts; re-rank uniques by first occurrence so group
+            # ids come out in first-seen row order (reference parity)
+            order = np.argsort(first_idx, kind="stable")
+            rank = np.empty(len(order), np.int64)
+            rank[order] = np.arange(len(order))
+            uniq = uniq[order]
+            uniq_keys = [(v,) for v in uniq.tolist()] if len(arrs) == 1 else [tuple(v) for v in uniq.tolist()]
+            return self._intern_groups(uniq_keys)[rank[inv.reshape(-1)]]
+        # reference path: factorize the key tuple per row
+        key_lists = [c.to_pylist() for c in key_cols]
+        return self._intern_groups(list(zip(*key_lists)))
+
+    def _grow(self) -> None:
+        """Grow every accumulator to the current group count in one shot."""
+        ngroups = len(self.gids)
         for name, (init, dt) in self._state_specs().items():
             cur = self.acc[name]
             if len(cur) < ngroups:
                 self.acc[name] = np.concatenate([cur, np.full(ngroups - len(cur), init, dt)])
+
+    def update(self, batch: RecordBatch) -> None:
+        n = batch.num_rows
+        if n == 0:
+            return
+        gidx = self._factorize(batch)
+        self._grow()
+        ngroups = len(self.gids)
         counts = np.bincount(gidx, minlength=ngroups)
         # scatter each batch's values straight into the (dtype-exact) accumulators
         for out, spec in self.aggs.items():
@@ -363,6 +482,26 @@ class _GroupState:
                 vals = np.asarray(batch.column(_agg_src(out, spec, self.mode)).to_numpy()).astype(cur.dtype)
                 op = {"sum": np.add, "min": np.minimum, "max": np.maximum}[fn]
                 op.at(cur, gidx, vals)
+
+    def merge(self, other: "GroupState") -> "GroupState":
+        """Combine another partial state into this one (same keys/aggs/mode).
+        Each of ``other``'s groups maps to a distinct group here, so the
+        combine is a plain fancy-indexed binary op per accumulator."""
+        m = len(other.key_rows)
+        if m == 0:
+            return self
+        idx = self._intern_groups(other.key_rows)
+        self._grow()
+        for out, spec in self.aggs.items():
+            fn = spec["fn"]
+            if fn == "mean":
+                for part in (f"{out}__psum", f"{out}__pcnt"):
+                    self.acc[part][idx] += other.acc[part][:m]
+            else:
+                op = {"sum": np.add, "count": np.add, "min": np.minimum, "max": np.maximum}[fn]
+                cur = self.acc[out]
+                cur[idx] = op(cur[idx], other.acc[out][:m])
+        return self
 
     def result(self, out_schema: Schema) -> RecordBatch:
         ngroups = len(self.key_rows)
@@ -401,7 +540,7 @@ def _eval_aggregate(node: Node, ins: list) -> StreamingDataFrame:
     out_schema = Schema(_agg_out_fields(src.schema, keys, aggs, mode))
 
     def gen():
-        state = _GroupState(keys, aggs, mode, src.schema)
+        state = GroupState(keys, aggs, mode, src.schema)
         for b in src.iter_batches():
             state.update(b)
         yield state.result(out_schema)
@@ -409,9 +548,48 @@ def _eval_aggregate(node: Node, ins: list) -> StreamingDataFrame:
     return StreamingDataFrame(out_schema, gen)
 
 
+# back-compat alias for the pre-refactor private name
+_GroupState = GroupState
+
+
 # ---------------------------------------------------------------------------
 # join (inner equi-join: right side builds the hash table, left side probes)
 # ---------------------------------------------------------------------------
+def join_schema(left: Schema, right: Schema, on: list) -> tuple:
+    return _join_schema(left, right, on)
+
+
+def build_join_table(build: RecordBatch, on: list) -> dict:
+    """key tuple -> row indices of the (materialized) build side."""
+    table: dict = {}
+    if build.num_rows:
+        for i, kt in enumerate(zip(*[build.column(k).to_pylist() for k in on])):
+            table.setdefault(kt, []).append(i)
+    return table
+
+
+def join_probe_morsel(
+    batch: RecordBatch, build: RecordBatch, table: dict, on: list, payload: list, schema: Schema
+) -> RecordBatch | None:
+    """Probe one morsel against a prebuilt hash table; None when no matches."""
+    if batch.num_rows == 0:
+        return None
+    probe_keys = list(zip(*[batch.column(k).to_pylist() for k in on]))
+    lidx, ridx = [], []
+    for i, kt in enumerate(probe_keys):
+        for j in table.get(kt, ()):
+            lidx.append(i)
+            ridx.append(j)
+    if not lidx:
+        return None
+    lpart = batch.take(np.asarray(lidx, np.int64))
+    rpart = build.take(np.asarray(ridx, np.int64))
+    cols = list(lpart.columns)
+    for name in payload:
+        cols.append(rpart.column(name))
+    return RecordBatch(schema, cols)
+
+
 def _join_schema(left: Schema, right: Schema, on: list) -> tuple:
     """(schema, right_payload_names, rename_map).  Right non-key columns that
     collide with left names get an ``_r`` suffix."""
@@ -443,28 +621,12 @@ def _eval_join(node: Node, ins: list) -> StreamingDataFrame:
     def gen():
         # build: materialize the right side into key -> row indices
         build = right.collect()
-        table: dict = {}
-        build_keys = list(zip(*[build.column(k).to_pylist() for k in on])) if build.num_rows else []
-        for i, kt in enumerate(build_keys):
-            table.setdefault(kt, []).append(i)
+        table = build_join_table(build, on)
         # probe: stream the left side, emitting matches per batch
         for b in left.iter_batches():
-            if b.num_rows == 0:
-                continue
-            probe_keys = list(zip(*[b.column(k).to_pylist() for k in on]))
-            lidx, ridx = [], []
-            for i, kt in enumerate(probe_keys):
-                for j in table.get(kt, ()):
-                    lidx.append(i)
-                    ridx.append(j)
-            if not lidx:
-                continue
-            lpart = b.take(np.asarray(lidx, np.int64))
-            rpart = build.take(np.asarray(ridx, np.int64))
-            cols = list(lpart.columns)
-            for name in payload:
-                cols.append(rpart.column(name))
-            yield RecordBatch(schema, cols)
+            out = join_probe_morsel(b, build, table, on, payload, schema)
+            if out is not None:
+                yield out
 
     return StreamingDataFrame(schema, gen)
 

@@ -22,12 +22,11 @@ __all__ = ["StreamingDataFrame", "SDF"]
 
 
 class StreamingDataFrame:
-    __slots__ = ("schema", "_factory", "_consumed", "__weakref__")
+    __slots__ = ("schema", "_factory", "__weakref__")
 
     def __init__(self, schema: Schema, batch_factory: Callable[[], Iterator[RecordBatch]]):
         self.schema = schema
         self._factory = batch_factory
-        self._consumed = False
 
     # -- constructors -----------------------------------------------------------
     @staticmethod
@@ -67,6 +66,21 @@ class StreamingDataFrame:
             return iterator
 
         return StreamingDataFrame(schema, gen)
+
+    # -- transformation -------------------------------------------------------
+    def map_batches(
+        self, fn: Callable[[RecordBatch], RecordBatch], schema: Schema | None = None
+    ) -> "StreamingDataFrame":
+        """Lazily apply ``fn`` to every batch (executor/engine glue — e.g.
+        per-batch accounting or casting).  ``schema`` overrides the output
+        schema when ``fn`` changes it; defaults to the input schema."""
+        out_schema = schema if schema is not None else self.schema
+
+        def gen() -> Iterator[RecordBatch]:
+            for b in self.iter_batches():
+                yield fn(b)
+
+        return StreamingDataFrame(out_schema, gen)
 
     # -- consumption ----------------------------------------------------------
     def iter_batches(self) -> Iterator[RecordBatch]:

@@ -34,6 +34,8 @@ import csv as _csv
 import io
 import json
 import os
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
@@ -48,6 +50,7 @@ __all__ = ["scan_path", "scan_bytes", "write_sdf_dataset", "DEFAULT_BATCH_ROWS",
 
 DEFAULT_BATCH_ROWS = 65536
 DEFAULT_CHUNK_BYTES = 4 << 20
+DEFAULT_SCAN_WORKERS = int(os.environ.get("DACP_SCAN_WORKERS", "4"))
 
 STRUCTURED_EXTS = {".csv", ".jsonl", ".npz", ".npy"}
 
@@ -71,6 +74,7 @@ def scan_path(
     batch_rows: int = DEFAULT_BATCH_ROWS,
     chunk_bytes: int = DEFAULT_CHUNK_BYTES,
     strict_columns: bool = True,
+    scan_workers: int = DEFAULT_SCAN_WORKERS,
 ) -> StreamingDataFrame:
     """Open any path (file or directory) as an SDF with pushdown applied.
 
@@ -78,14 +82,18 @@ def scan_path(
     ``SchemaError`` — a typo must not silently vanish.  ``False`` (optimizer
     pruning hints, which are computed structurally and may name columns from
     the other side of a join): the scan keeps the intersection.
+
+    ``scan_workers > 1`` reads multi-file sources (columnar dataset parts,
+    file-list blob content) with a bounded reader pool, emitting batches in
+    the same order as the sequential scan.
     """
     if not os.path.exists(path):
         raise ResourceNotFound(f"no such path: {path}")
     if os.path.isdir(path):
         if _is_columnar_dataset(path):
-            sdf = _scan_columnar_dataset(path, batch_rows)
+            sdf = _scan_columnar_dataset(path, batch_rows, scan_workers)
         else:
-            sdf = _scan_filelist(path, columns, predicate, batch_rows, strict_columns)
+            sdf = _scan_filelist(path, columns, predicate, batch_rows, strict_columns, scan_workers)
             return sdf  # filelist applies pushdown internally
     else:
         ext = os.path.splitext(path)[1].lower()
@@ -404,7 +412,19 @@ def _list_files(root: str) -> list:
     return out
 
 
-def _scan_filelist(root: str, columns, predicate, batch_rows: int, strict_columns: bool = True) -> StreamingDataFrame:
+def _read_file(p: str) -> bytes:
+    with open(p, "rb") as f:
+        return f.read()
+
+
+def _scan_filelist(
+    root: str,
+    columns,
+    predicate,
+    batch_rows: int,
+    strict_columns: bool = True,
+    scan_workers: int = DEFAULT_SCAN_WORKERS,
+) -> StreamingDataFrame:
     want_content = columns is None or "content" in columns
     fields = list(_META_FIELDS) + ([_CONTENT_FIELD] if want_content else [])
     schema = Schema(fields)
@@ -431,24 +451,32 @@ def _scan_filelist(root: str, columns, predicate, batch_rows: int, strict_column
         )
 
     def gen():
-        for s in range(0, len(files), meta_rows):
-            paths = files[s : s + meta_rows]
-            mb = meta_batch(paths)
-            keep = np.ones(mb.num_rows, bool)
-            if predicate is not None:
-                # in-situ: metadata predicate runs BEFORE any content read
-                keep = np.asarray(predicate.evaluate(mb), bool)
-                if not keep.any():
-                    continue
-                mb = mb.filter(keep)
-                paths = [p for p, k in zip(paths, keep) if k]
-            if want_content:
-                blobs = []
-                for p in paths:
-                    with open(p, "rb") as f:
-                        blobs.append(f.read())
-                mb = mb.with_column(_CONTENT_FIELD, Column.from_values(dtypes.BINARY, blobs))
-            yield mb.select(out_schema.names)
+        pool = None
+        try:
+            for s in range(0, len(files), meta_rows):
+                paths = files[s : s + meta_rows]
+                mb = meta_batch(paths)
+                keep = np.ones(mb.num_rows, bool)
+                if predicate is not None:
+                    # in-situ: metadata predicate runs BEFORE any content read
+                    keep = np.asarray(predicate.evaluate(mb), bool)
+                    if not keep.any():
+                        continue
+                    mb = mb.filter(keep)
+                    paths = [p for p, k in zip(paths, keep) if k]
+                if want_content:
+                    if scan_workers > 1 and len(paths) > 1:
+                        if pool is None:  # one reader pool per scan, not per batch
+                            pool = ThreadPoolExecutor(max_workers=scan_workers)
+                        # parallel content reads; map() preserves path order
+                        blobs = list(pool.map(_read_file, paths))
+                    else:
+                        blobs = [_read_file(p) for p in paths]
+                    mb = mb.with_column(_CONTENT_FIELD, Column.from_values(dtypes.BINARY, blobs))
+                yield mb.select(out_schema.names)
+        finally:
+            if pool is not None:
+                pool.shutdown(wait=False)
 
     return StreamingDataFrame(out_schema, gen)
 
@@ -457,7 +485,7 @@ def _is_columnar_dataset(path: str) -> bool:
     return os.path.exists(os.path.join(path, "_schema.json"))
 
 
-def _scan_columnar_dataset(root: str, batch_rows: int) -> StreamingDataFrame:
+def _scan_columnar_dataset(root: str, batch_rows: int, scan_workers: int = DEFAULT_SCAN_WORKERS) -> StreamingDataFrame:
     with open(os.path.join(root, "_schema.json")) as f:
         schema = Schema.from_json(json.load(f))
     parts = sorted(p for p in os.listdir(root) if p.startswith("part-") and p.endswith(".npz"))
@@ -472,10 +500,32 @@ def _scan_columnar_dataset(root: str, batch_rows: int) -> StreamingDataFrame:
             cols.append(c)
         return RecordBatch(schema, cols)
 
+    def _load(p: str) -> dict:
+        with np.load(os.path.join(root, p), mmap_mode="r") as z:
+            return {k: z[k] for k in z.files}
+
     def gen():
-        for p in parts:
-            for b in _scan_npz(os.path.join(root, p), batch_rows).iter_batches():
-                yield _cast(b)
+        if scan_workers <= 1 or len(parts) <= 1:
+            for p in parts:
+                for b in _npz_arrays_sdf(_load(p), batch_rows).iter_batches():
+                    yield _cast(b)
+            return
+        # bounded read-ahead: up to scan_workers part files decode in
+        # background threads while earlier parts stream out, in part order
+        with ThreadPoolExecutor(max_workers=scan_workers) as pool:
+            pending: deque = deque()
+            it = iter(parts)
+            for p in it:
+                pending.append(pool.submit(_load, p))
+                if len(pending) >= scan_workers:
+                    break
+            while pending:
+                arrays = pending.popleft().result()
+                nxt = next(it, None)
+                if nxt is not None:
+                    pending.append(pool.submit(_load, nxt))
+                for b in _npz_arrays_sdf(arrays, batch_rows).iter_batches():
+                    yield _cast(b)
 
     return StreamingDataFrame(schema, gen)
 

@@ -19,6 +19,7 @@ import time
 
 from repro.core.dag import Dag, Node
 from repro.core.errors import ResourceNotFound, TokenError
+from repro.core.executor import ExecutorConfig, execute_parallel
 from repro.core.operators import execute
 from repro.core.pushdown import optimize
 from repro.core.sdf import StreamingDataFrame
@@ -45,7 +46,15 @@ class PublishedFlow:
 
 
 class SDFEngine:
-    def __init__(self, authority: str, catalog: Catalog, tokens: TokenAuthority, remote_pull=None, aliases=None):
+    def __init__(
+        self,
+        authority: str,
+        catalog: Catalog,
+        tokens: TokenAuthority,
+        remote_pull=None,
+        aliases=None,
+        executor: ExecutorConfig | None = None,
+    ):
         self.authority = authority
         self.aliases = aliases if aliases is not None else {authority}
         self.catalog = catalog
@@ -53,6 +62,9 @@ class SDFEngine:
         # remote_pull(uri_str, token_raw, columns, predicate) -> SDF; injected
         # by the server so the engine can resolve exchange leaves cross-domain.
         self.remote_pull = remote_pull
+        # morsel-executor configuration (worker count, morsel rows, compute
+        # backend); num_workers=0 falls back to the reference pull chain.
+        self.executor = executor if executor is not None else ExecutorConfig()
         self._flows: dict = {}
         self._lock = threading.Lock()
 
@@ -77,7 +89,12 @@ class SDFEngine:
         if batch_rows:
             kwargs["batch_rows"] = int(batch_rows)
         return datasource.scan_path(
-            path, columns=columns, predicate=predicate, strict_columns=strict_columns, **kwargs
+            path,
+            columns=columns,
+            predicate=predicate,
+            strict_columns=strict_columns,
+            scan_workers=self.executor.scan_workers,
+            **kwargs,
         )
 
     # -- COOK path -----------------------------------------------------------------
@@ -101,7 +118,9 @@ class SDFEngine:
                 return self._remote(node)
             raise ResourceNotFound(f"unresolvable leaf {node.op}")
 
-        return execute(dag, resolver)
+        if self.executor.num_workers <= 0:
+            return execute(dag, resolver)  # reference single-threaded pull chain
+        return execute_parallel(dag, resolver, self.executor)
 
     def _remote(self, node: Node) -> StreamingDataFrame:
         if self.remote_pull is None:
@@ -131,12 +150,11 @@ class SDFEngine:
         flow.pulls += 1
         sdf = flow.factory()
 
-        def gen():
-            for b in sdf.iter_batches():
-                flow.rows_out += b.num_rows
-                yield b
+        def account(b):
+            flow.rows_out += b.num_rows
+            return b
 
-        return StreamingDataFrame(sdf.schema, gen)
+        return sdf.map_batches(account)
 
     def verify_flow_token(self, flow_id: str, token_raw: str | None) -> None:
         if token_raw is None:

@@ -32,6 +32,7 @@ import time
 
 from repro.core.dag import Dag
 from repro.core.errors import DacpError, PermissionDenied, ResourceNotFound, TokenError, TransportError
+from repro.core.executor import ExecutorConfig, prefetch_sdf
 from repro.core.expr import Expr
 from repro.core.planner import plan as plan_dag
 from repro.core.pushdown import optimize
@@ -58,6 +59,7 @@ class FairdServer:
         credentials: dict | None = None,
         network=None,
         protocol_version: int = framing.PROTOCOL_VERSION,
+        executor: ExecutorConfig | None = None,
     ):
         self.authority = authority
         self.aliases = {authority}  # addresses under which peers reach us
@@ -69,7 +71,17 @@ class FairdServer:
         # protocol_version=1 serves the legacy wire protocol only (tests /
         # staged rollouts); v2 peers then fall back to channel-per-request.
         self.protocol_version = protocol_version
-        self.engine = SDFEngine(authority, self.catalog, self.tokens, remote_pull=self._remote_pull, aliases=self.aliases)
+        # morsel-executor configuration: worker count, morsel rows, compute
+        # backend, producer-queue depth for outbound streams
+        self.executor = executor if executor is not None else ExecutorConfig()
+        self.engine = SDFEngine(
+            authority,
+            self.catalog,
+            self.tokens,
+            remote_pull=self._remote_pull,
+            aliases=self.aliases,
+            executor=self.executor,
+        )
         self.started_at = time.time()
         self.stats = {"get": 0, "put": 0, "cook": 0, "submit": 0, "list": 0, "describe": 0, "rows_out": 0, "rows_in": 0}
         self._tcp_server = None
@@ -216,7 +228,8 @@ class FairdServer:
                     batch_rows=header.get("batch_rows"),
                     strict_columns=header.get("columns_mode") != "advisory",
                 )
-            self.stats["rows_out"] += send_sdf(channel, sdf)
+            # producer-queue streaming: scan/compute runs ahead of the socket
+            self.stats["rows_out"] += send_sdf(channel, prefetch_sdf(sdf, self.executor.stream_depth))
             return False
         if verb == "PUT":
             self._authorize(header, "PUT")
@@ -236,7 +249,7 @@ class FairdServer:
             self.stats["cook"] += 1
             dag = Dag.from_bytes(bytes(body))
             sdf = self.cook(dag)
-            self.stats["rows_out"] += send_sdf(channel, sdf)
+            self.stats["rows_out"] += send_sdf(channel, prefetch_sdf(sdf, self.executor.stream_depth))
             return False
         if verb == "SUBMIT":
             # internal cross-domain fragment registration (scheduler-called)

@@ -20,6 +20,10 @@ Takes a ``Plan`` (sub-tasks in dependency order) and coordinates execution:
   * **straggler mitigation** — a slow first batch (beyond ``straggler_after_s``)
     triggers speculative re-registration on a replica; first stream to produce
     wins, the loser is dropped.
+  * **overlap** — exchange pulls are prefetched on background threads (the
+    morsel executor starts every exchange leaf's prefetcher when a stage
+    activates, and the delivered root stream is pulled ``prefetch_batches``
+    ahead of the consumer), so network transfer overlaps local compute.
   * **monitoring** — per-subtask attempt/latency log + server heartbeats.
 """
 
@@ -29,6 +33,7 @@ import threading
 import time
 
 from repro.core.errors import DacpError, SubTaskFailed
+from repro.core.executor import prefetch_sdf
 from repro.core.planner import Plan, SubTask
 from repro.core.sdf import StreamingDataFrame
 
@@ -188,7 +193,9 @@ class CrossDomainScheduler:
     def _open_root_stream(self, plan: Plan, flow_tokens: dict) -> StreamingDataFrame:
         authority, flow_id, tok, uri = flow_tokens[plan.root_id]
         client = self.network.client_for(authority)
-        return client.get(uri, token=tok)
+        # prefetch: the remote pull runs ahead of the consumer, overlapping
+        # the network with whatever computation consumes this stream
+        return prefetch_sdf(client.get(uri, token=tok), depth=4)
 
     def _resilient_pull(self, plan: Plan, flow_tokens: dict) -> StreamingDataFrame:
         root = plan.root

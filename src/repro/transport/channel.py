@@ -44,7 +44,12 @@ class InProcChannel:
     def send(self, ftype: int, header: dict, body=b"") -> None:
         if self._closed:
             raise TransportError("send on closed channel")
-        body = bytes(body) if not isinstance(body, (bytes, memoryview)) else body
+        if isinstance(body, (list, tuple)):
+            # writev-style buffer list: in-proc frames stay decoded, so the
+            # parts are joined here (the peer reconstructs views into it)
+            body = b"".join(memoryview(p).cast("B") for p in body)
+        elif not isinstance(body, (bytes, memoryview)):
+            body = bytes(body)
         # account bytes as-if framed, so in-proc benchmarks report wire sizes
         self.bytes_sent += 24 + len(str(header)) + (len(body) if body is not None else 0)
         self._out.put((ftype, dict(header), body))

@@ -26,7 +26,9 @@ def send_sdf(channel, sdf: StreamingDataFrame) -> int:
     try:
         for batch in sdf.iter_batches():
             header, bufs = batch.to_buffers()
-            channel.send(framing.BATCH, header, RecordBatch.payload_bytes(bufs))
+            # zero-copy send: column buffers go to the channel as a list of
+            # views, written writev-style without concatenation
+            channel.send(framing.BATCH, header, RecordBatch.payload_parts(bufs))
             rows += batch.num_rows
     except DacpError as e:
         channel.send(framing.ERROR, e.to_wire())

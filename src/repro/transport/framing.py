@@ -10,9 +10,11 @@ DACP stream is a sequence of frames:
     +--------+------+----------+------------+------------+---------+-----+------+
 
 The body of a BATCH frame is the 8-aligned concatenation of raw column
-buffers (``RecordBatch.payload_bytes``); the header carries the buffer
-layout.  Receivers reconstruct columns with ``np.frombuffer`` views into the
-body — one memcpy from the socket, zero further copies (§III-A Zero-Copy).
+buffers (``RecordBatch.payload_parts``); the header carries the buffer
+layout.  Senders hand ``FrameWriter`` the buffer list and it is written
+writev-style — no concatenation copy on the send path.  Receivers
+reconstruct columns with ``np.frombuffer`` views into the body — one memcpy
+from the socket, zero further copies (§III-A Zero-Copy).
 
 Frame types:
     SCHEMA   header = schema json                      (opens an SDF stream)
@@ -81,14 +83,20 @@ class FrameWriter:
         self.bytes_written = 0
 
     def write_frame(self, ftype: int, header: dict, body=b"") -> None:
+        """``body`` is bytes-like OR a list of 8-aligned buffer parts.
+
+        A list is written writev-style — each column buffer goes to the
+        (buffered) stream in sequence with **no concatenation copy**, which
+        is what keeps the send path zero-copy from ``RecordBatch`` memory
+        to the socket (§III-A).
+        """
         hjson = json.dumps(header, separators=(",", ":")).encode()
-        if isinstance(body, (bytes, bytearray)):
-            body_len = len(body)
-            parts = [body] if body_len else []
-        else:  # list of buffers already 8-aligned-concatenated by caller
-            body = bytes(body)
-            body_len = len(body)
-            parts = [body] if body_len else []
+        if isinstance(body, (list, tuple)):
+            parts = [p if isinstance(p, memoryview) else memoryview(p) for p in body]
+            parts = [p.cast("B") if p.format != "B" or p.ndim != 1 else p for p in parts]
+        else:
+            parts = [memoryview(body).cast("B")] if len(body) else []
+        body_len = sum(len(p) for p in parts)
         head = _HDR.pack(MAGIC, ftype, b"\x00\x00\x00", len(hjson), body_len)
         self._raw.write(head)
         self._raw.write(hjson)

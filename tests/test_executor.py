@@ -1,0 +1,317 @@
+"""Morsel-driven parallel executor: parity with the reference pull chain,
+streaming preservation (first output before last input morsel), ordering,
+breakers (aggregate/join), serial tails (limit/rebatch), error propagation,
+and engine/server integration."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.batch import RecordBatch, concat_batches
+from repro.core.dag import Dag
+from repro.core.errors import SchemaError
+from repro.core.executor import ExecutorConfig, execute_parallel, prefetch_sdf
+from repro.core.expr import col
+from repro.core.operators import execute
+from repro.core.sdf import StreamingDataFrame
+
+
+def _table(n=10_000, seed=0):
+    rng = np.random.default_rng(seed)
+    return RecordBatch.from_pydict(
+        {
+            "k": rng.integers(0, 23, n),
+            "x": rng.standard_normal(n),
+            "tag": np.asarray([f"t{i % 5}" for i in range(n)]),
+        }
+    )
+
+
+def _sdf(batch, rows=1000):
+    def gen():
+        for s in range(0, batch.num_rows, rows):
+            yield batch.slice(s, s + rows)
+
+    return StreamingDataFrame(batch.schema, gen)
+
+
+def _cfg(workers, **kw):
+    kw.setdefault("morsel_rows", 512)
+    kw.setdefault("backend", "numpy")
+    return ExecutorConfig(num_workers=workers, **kw)
+
+
+def _agg_dict(pd, keys):
+    vals = [pd[k] for k in keys]
+    other = [c for c in pd if c not in keys]
+    return {tuple(kt): tuple(pd[c][i] for c in other) for i, kt in enumerate(zip(*vals))}
+
+
+# ---------------------------------------------------------------------------
+# parity with the reference pull chain
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("workers", [1, 2, 4])
+def test_pipeline_parity_with_reference(workers):
+    full = _table()
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    f = bld.add("filter", {"predicate": col("x") > 0.0}, [s])
+    p = bld.add("project", {"exprs": {"y": col("x") * 2.0 + 1.0}, "keep": True}, [f])
+    sel = bld.add("select", {"columns": ["k", "y"]}, [p])
+    dag = bld.finish(sel)
+
+    ref = execute(dag, lambda n: _sdf(full)).collect()
+    got = execute_parallel(dag, lambda n: _sdf(full), _cfg(workers)).collect()
+    assert got.schema.names == ref.schema.names
+    # streaming ops preserve row order exactly, regardless of worker count
+    for name in ref.schema.names:
+        assert np.array_equal(got.column(name).to_numpy(), ref.column(name).to_numpy())
+
+
+@pytest.mark.parametrize("workers", [1, 4])
+def test_aggregate_parity(workers):
+    full = _table()
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    f = bld.add("filter", {"predicate": col("x") > -0.5}, [s])
+    a = bld.add(
+        "aggregate",
+        {
+            "keys": ["k"],
+            "aggs": {
+                "n": {"fn": "count"},
+                "sx": {"fn": "sum", "column": "x"},
+                "mx": {"fn": "mean", "column": "x"},
+                "lo": {"fn": "min", "column": "k"},
+                "hi": {"fn": "max", "column": "k"},
+            },
+        },
+        [f],
+    )
+    dag = bld.finish(a)
+    ref_pd = execute(dag, lambda n: _sdf(full)).collect().to_pydict()
+    got_pd = execute_parallel(dag, lambda n: _sdf(full), _cfg(workers)).collect().to_pydict()
+    # group order matches the reference first-seen order exactly
+    assert got_pd["k"] == ref_pd["k"]
+    ref, got = _agg_dict(ref_pd, ["k"]), _agg_dict(got_pd, ["k"])
+    assert set(got) == set(ref)
+    for kt in ref:
+        rn, rsx, rmx, rlo, rhi = ref[kt]
+        gn, gsx, gmx, glo, ghi = got[kt]
+        assert gn == rn and glo == rlo and ghi == rhi
+        assert gsx == pytest.approx(rsx)
+        assert gmx == pytest.approx(rmx)
+
+
+def test_aggregate_group_order_deterministic_for_string_keys():
+    """String keys keep first-seen group order (the reference semantics the
+    v2 session tests rely on), at any worker count."""
+    full = _table()
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    a = bld.add("aggregate", {"keys": ["tag"], "aggs": {"n": {"fn": "count"}}}, [s])
+    dag = bld.finish(a)
+    for workers in (1, 4):
+        got = execute_parallel(dag, lambda n: _sdf(full), _cfg(workers)).collect().to_pydict()
+        assert got["tag"] == ["t0", "t1", "t2", "t3", "t4"]
+        assert got["n"] == [full.num_rows // 5] * 5
+
+
+@pytest.mark.parametrize("workers", [1, 4])
+def test_join_and_union(workers):
+    full = _table(4000)
+    bld = Dag.build()
+    sl = bld.source("dacp://h:1/left")
+    sr = bld.source("dacp://h:1/right")
+    fl = bld.add("filter", {"predicate": col("x") > 0.0}, [sl])
+    sell = bld.add("select", {"columns": ["k", "x"]}, [fl])
+    ar = bld.add("aggregate", {"keys": ["k"], "aggs": {"n": {"fn": "count"}}}, [sr])
+    j = bld.add("join", {"on": ["k"]}, [sell, ar])
+    dag = bld.finish(j)
+
+    def resolver(node):
+        return _sdf(full)
+
+    ref = execute(dag, resolver).collect()
+    got = execute_parallel(dag, resolver, _cfg(workers)).collect()
+    assert got.num_rows == ref.num_rows
+    assert got.schema.names == ref.schema.names
+    for name in ref.schema.names:
+        assert np.array_equal(got.column(name).to_numpy(), ref.column(name).to_numpy())
+
+    # union of two branches preserves branch-major order
+    bld2 = Dag.build()
+    a = bld2.source("dacp://h:1/a")
+    b = bld2.source("dacp://h:1/b")
+    u = bld2.add("union", {}, [a, b])
+    f2 = bld2.add("filter", {"predicate": col("x") > -10.0}, [u])
+    dag2 = bld2.finish(f2)
+    got2 = execute_parallel(dag2, lambda n: _sdf(full), _cfg(workers)).collect()
+    expect = concat_batches([full, full])
+    assert np.array_equal(got2.column("k").to_numpy(), expect.column("k").to_numpy())
+
+
+@pytest.mark.parametrize("workers", [1, 4])
+def test_limit_and_rebatch_serial_tails(workers):
+    full = _table(5000)
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    f = bld.add("filter", {"predicate": col("x") > -10.0}, [s])
+    r = bld.add("rebatch", {"rows": 300}, [f])
+    lim = bld.add("limit", {"n": 1234}, [r])
+    dag = bld.finish(lim)
+    got = execute_parallel(dag, lambda n: _sdf(full), _cfg(workers))
+    batches = list(got.iter_batches())
+    assert sum(b.num_rows for b in batches) == 1234
+    assert all(b.num_rows <= 300 for b in batches)
+    cat = concat_batches(batches)
+    assert np.array_equal(cat.column("k").to_numpy(), full.column("k").to_numpy()[:1234])
+
+
+# ---------------------------------------------------------------------------
+# streaming semantics (the acceptance assertion)
+# ---------------------------------------------------------------------------
+def test_first_output_before_last_input_morsel():
+    """The parallel executor must stream: its first output batch is yielded
+    while later input morsels are still unconsumed (backpressure window)."""
+    full = _table(64_000)
+    consumed = []
+
+    def gen():
+        for i in range(64):
+            consumed.append(i)
+            yield full.slice(i * 1000, (i + 1) * 1000)
+
+    sdf = StreamingDataFrame(full.schema, gen)
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    f = bld.add("filter", {"predicate": col("x") > -10.0}, [s])
+    dag = bld.finish(f)
+    out = execute_parallel(dag, lambda n: sdf, _cfg(4, morsel_rows=1000))
+    it = out.iter_batches()
+    first = next(it)
+    assert first.num_rows > 0
+    # strictly before the source is exhausted — parallelism did not degrade
+    # into drain-everything-then-emit
+    assert len(consumed) < 64
+    rest = [first] + list(it)
+    assert sum(b.num_rows for b in rest) == full.num_rows
+
+
+def test_early_close_stops_workers():
+    full = _table(20_000)
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    f = bld.add("filter", {"predicate": col("x") > -10.0}, [s])
+    dag = bld.finish(f)
+    before = threading.active_count()
+    out = execute_parallel(dag, lambda n: _sdf(full, rows=500), _cfg(4, morsel_rows=500))
+    it = out.iter_batches()
+    next(it)
+    it.close()
+    for _ in range(100):  # workers + prefetchers wind down on close
+        if threading.active_count() <= before + 1:
+            break
+        time.sleep(0.05)
+    assert threading.active_count() <= before + 1
+
+
+def test_error_propagates_from_workers():
+    full = _table(5000)
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    f = bld.add("filter", {"predicate": col("nope") > 0.0}, [s])
+    dag = bld.finish(f)
+    out = execute_parallel(dag, lambda n: _sdf(full), _cfg(4))
+    with pytest.raises(Exception):
+        out.collect()
+
+
+def test_source_error_propagates():
+    full = _table(2000)
+
+    def gen():
+        yield full.slice(0, 500)
+        raise SchemaError("mid-stream source failure")
+
+    sdf = StreamingDataFrame(full.schema, gen)
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    f = bld.add("filter", {"predicate": col("x") > -10.0}, [s])
+    dag = bld.finish(f)
+    with pytest.raises(SchemaError):
+        execute_parallel(dag, lambda n: sdf, _cfg(4, morsel_rows=100)).collect()
+
+
+def test_prefetch_sdf_passthrough_and_overlap():
+    full = _table(3000)
+    wrapped = prefetch_sdf(_sdf(full, rows=500), depth=2)
+    assert wrapped.schema.equals(full.schema)
+    got = wrapped.collect()
+    assert got.num_rows == full.num_rows
+    assert prefetch_sdf(_sdf(full), 0) is not None  # depth<=0 → original sdf
+
+
+# ---------------------------------------------------------------------------
+# engine / server integration
+# ---------------------------------------------------------------------------
+def _server(tmp_tree, workers):
+    from repro.client import LocalNetwork
+    from repro.server import FairdServer
+
+    net = LocalNetwork()
+    srv = FairdServer(
+        "exec:3101",
+        executor=ExecutorConfig(num_workers=workers, morsel_rows=128, backend="numpy"),
+    )
+    srv.catalog.register_path("structured", str(tmp_tree / "structured"))
+    net.register(srv)
+    return net.client_for("exec:3101")
+
+
+def test_cook_results_match_reference_engine(tmp_tree):
+    frames = {}
+    for workers in (0, 4):  # 0 = legacy reference pull chain
+        c = _server(tmp_tree, workers)
+        out = (
+            c.open("dacp://exec:3101/structured/table.csv")
+            .filter(col("id") % 2 == 0)
+            .group_by("tag")
+            .agg(n="count", s=("sum", "score"), m=("mean", "id"))
+            .collect()
+        )
+        frames[workers] = out.to_pydict()
+    ref, got = frames[0], frames[4]
+    assert got["tag"] == ref["tag"]
+    assert got["n"] == ref["n"]
+    assert got["s"] == pytest.approx(ref["s"])
+    assert got["m"] == pytest.approx(ref["m"])
+
+
+def test_vectorized_groupstate_matches_reference_factorization():
+    """First-seen group order and null-key handling: the vectorized
+    factorization must agree with the reference row loop exactly."""
+    from repro.core import dtypes
+    from repro.core.batch import Column
+    from repro.core.operators import GroupState
+    from repro.core.schema import Field, Schema
+
+    schema = Schema([Field("k", dtypes.INT64)])
+    b = RecordBatch(schema, [Column.from_values(dtypes.INT64, [3, 1, 3, 2, 1])])
+    for vec in (False, True):
+        st = GroupState(["k"], {"n": {"fn": "count"}}, "full", schema, vectorized=vec)
+        st.update(b)
+        assert st.key_rows == [(3,), (1,), (2,)]  # first-seen row order
+        assert st.acc["n"].tolist() == [2, 2, 1]
+
+    # a validity mask on a key column must keep null keys distinct from the
+    # sentinel value (vectorized path falls back to the row loop)
+    col = Column.from_values(dtypes.INT64, [7, 7, 5])
+    col.validity = np.asarray([True, False, True])
+    bn = RecordBatch(schema, [col])
+    st = GroupState(["k"], {"n": {"fn": "count"}}, "full", schema, vectorized=True)
+    st.update(bn)
+    assert st.key_rows == [(7,), (None,), (5,)]
+    assert st.acc["n"].tolist() == [1, 1, 1]

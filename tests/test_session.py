@@ -402,3 +402,16 @@ def test_open_blob_roundtrip_from_filelist(local_cluster):
     blob = r.to_pydict()["content"][0]
     sdf = open_blob(blob)  # unknown format -> chunk stream
     assert b"".join(sdf.collect().to_pydict()["chunk"]) == blob
+
+
+def test_stream_survives_dropped_sdf_reference(local_cluster):
+    """``client.get(...).iter_batches()`` drops the SDF object immediately;
+    the abandoned-stream rid finalizer must NOT fire while the generator is
+    still live, or the demux drops the remaining stream frames mid-GET."""
+    import gc
+
+    net, *_ = local_cluster
+    c = net.client_for("h1:3101")
+    it = c.get("dacp://h1:3101/structured/table.csv", batch_rows=64).iter_batches()
+    gc.collect()  # would trigger the premature release before the fix
+    assert sum(b.num_rows for b in it) == 500
