@@ -1,11 +1,14 @@
 """Morsel executor — 1 vs N workers, numpy vs pallas backend, rows/s.
 
-A filter→project→aggregate COOK over a columnar dataset, executed by:
+An aggregate-heavy filter→project→aggregate COOK over a columnar dataset,
+executed by:
 
   * ``seed``    — the single-threaded reference pull chain
     (``ExecutorConfig(num_workers=0)`` → ``operators.execute``), i.e. the
     pre-executor data plane
   * ``1w``/``2w``/``4w`` — the morsel-driven parallel executor
+  * ``auto4w``  — 4 workers with ``morsel_rows="auto"`` (EWMA latency-tuned
+    morsel size; the chosen size is reported from ``ExecutorStats``)
   * ``pallas4w`` — 4 workers with the pallas compute backend (only timed on
     a real TPU, or when DACP_BENCH_PALLAS=1 forces interpret mode; interpret
     numbers are correctness-indicative, not speed)
@@ -66,7 +69,7 @@ def _dag() -> Dag:
     return bld.finish(a)
 
 
-def _cook_rows_per_s(root: str, rows: int, cfg: ExecutorConfig, repeats: int = 3) -> float:
+def _cook_rows_per_s(root: str, rows: int, cfg: ExecutorConfig, repeats: int = 3):
     server = FairdServer("bench:3101", executor=cfg)
     server.catalog.register_path("ds", os.path.join(root, "ds"))
     dag = _dag()
@@ -76,7 +79,7 @@ def _cook_rows_per_s(root: str, rows: int, cfg: ExecutorConfig, repeats: int = 3
             out = server.cook(dag.copy()).collect()
         assert out.num_rows > 0
         best = min(best, t.s)
-    return rows / best
+    return rows / best, server.engine.executor_stats()
 
 
 def _pallas_timing_enabled() -> bool:
@@ -103,17 +106,24 @@ def run(rows: int = 400_000, verbose: bool = True) -> dict:
         "1w": ExecutorConfig(num_workers=1, morsel_rows=morsel, backend="numpy"),
         "2w": ExecutorConfig(num_workers=2, morsel_rows=morsel, backend="numpy"),
         "4w": ExecutorConfig(num_workers=4, morsel_rows=morsel, backend="numpy"),
+        "auto4w": ExecutorConfig(num_workers=4, morsel_rows="auto", backend="numpy"),
     }
     if _pallas_timing_enabled():
         configs["pallas4w"] = ExecutorConfig(num_workers=4, morsel_rows=morsel, backend="pallas")
     for name, cfg in configs.items():
-        rps = _cook_rows_per_s(root, rows, cfg)
+        rps, exec_stats = _cook_rows_per_s(root, rows, cfg)
         results[f"rows_per_s_{name}"] = rps
-        emit(f"executor_{name}", 1e6 * rows / rps, f"{rps / 1e6:.2f} Mrows/s")
+        note = f"{rps / 1e6:.2f} Mrows/s"
+        if cfg.num_workers > 0 and cfg.auto_morsels:
+            sizes = [p["morsel_rows"] for p in exec_stats["pipelines"]]
+            results["morsel_rows_auto"] = max(sizes) if sizes else None
+            note += f",auto_morsel={results['morsel_rows_auto']}"
+        emit(f"executor_{name}", 1e6 * rows / rps, note)
     if "rows_per_s_pallas4w" not in results:
         emit("executor_pallas4w", 0.0, "skipped (no TPU; set DACP_BENCH_PALLAS=1 to force interpret)")
     results["speedup_4w_vs_seed"] = results["rows_per_s_4w"] / results["rows_per_s_seed"]
     results["speedup_4w_vs_1w"] = results["rows_per_s_4w"] / results["rows_per_s_1w"]
+    results["speedup_auto_vs_4w"] = results["rows_per_s_auto4w"] / results["rows_per_s_4w"]
     return results
 
 
@@ -124,3 +134,4 @@ if __name__ == "__main__":
     out = run(rows=100_000 if "--quick" in sys.argv else 400_000)
     print(f"# 4 workers vs seed path: {out['speedup_4w_vs_seed']:.2f}x rows/s")
     print(f"# 4 workers vs 1 worker : {out['speedup_4w_vs_1w']:.2f}x rows/s")
+    print(f"# auto morsels vs static: {out['speedup_auto_vs_4w']:.2f}x rows/s (chose {out.get('morsel_rows_auto')})")

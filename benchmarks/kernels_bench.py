@@ -59,9 +59,35 @@ def run(verbose: bool = True) -> dict:
     results["filter_select_us"] = _time(lambda: ops.filter_select_tiles(table, 1, 0.0, (0, 2), tile=256))
     results["filter_select_ref_us"] = _time(lambda: ref.filter_select_ref(table, 1, 0.0, (0, 2), 256))
 
+    # multi-dtype bit-plane form (int64 predicate over hi/lo planes) —
+    # the production kernel the compute backend dispatches to
+    n = 4096
+    planes = jnp.asarray(r.integers(-(2**31), 2**31, (n, 4)).astype(np.int32))
+    pred = planes[:, :2]
+    scalars = jnp.asarray([n, 0, 0], jnp.int32)  # [n_rows, t_hi bits, t_lo bits]
+    results["filter_select_planes_us"] = _time(
+        lambda: ops.filter_select_planes(pred, planes, scalars, "gt", "i64", tile=256)
+    )
+
+    # segment reductions (the aggregate breaker's per-morsel partial fold)
+    gidx = jnp.asarray(r.integers(0, 64, n).astype(np.int32))
+    limbs = jnp.asarray(r.integers(0, 255, (n, 8)).astype(np.int32))
+    results["segment_sum_us"] = _time(lambda: ops.segment_sum_tiles(gidx, limbs, n, 64, tile=256))
+    vals = jnp.asarray(r.normal(size=(n, 2)).astype(np.float32))
+    results["segment_minmax_us"] = _time(
+        lambda: ops.segment_minmax_tiles(gidx, vals, n, 64, ("min", "max"), tile=256)
+    )
+
+    # fused project arithmetic ((a*2+1, a/b) over one VMEM pass)
+    ptbl = jnp.asarray(r.normal(size=(n, 2)).astype(np.float32))
+    descrs = (("add", ("mul", ("col", 0), ("lit", 2.0)), ("lit", 1.0)), ("div", ("col", 0), ("col", 1)))
+    results["project_arith_us"] = _time(lambda: ops.project_tiles(ptbl, descrs, tile=256))
+
     if verbose:
         for name in ("flash_attention", "decode_attention", "ssd_scan", "mlstm_chunk", "filter_select"):
             emit(f"kernels.{name}", results[f"{name}_us"], f"ref={results[f'{name}_ref_us']:.0f}us,interp")
+        for name in ("filter_select_planes", "segment_sum", "segment_minmax", "project_arith"):
+            emit(f"kernels.{name}", results[f"{name}_us"], "interp")
     return results
 
 

@@ -1,26 +1,40 @@
 """Pluggable compute backends for the morsel executor (paper §III-D).
 
 A *backend* supplies the vectorized kernels that operator evaluators run on
-each morsel: predicate evaluation, filtering, and the fused filter+select
-that the executor peepholes out of adjacent Filter→Select pairs.  Backends
-are looked up in a **kernel registry** keyed ``(backend name, op name)``;
-resolution falls back to the numpy reference kernels, so a backend only
-overrides the ops it accelerates and everything else keeps reference
-semantics bit-for-bit.
+each morsel: predicate evaluation, filtering, the fused filter+select that
+the executor peepholes out of adjacent Filter→Select pairs, projection
+arithmetic, and per-morsel segment reductions for partial aggregation.
+Backends are looked up in a **kernel registry** keyed ``(backend name,
+op name)``; resolution falls back to the numpy reference kernels, so a
+backend only overrides the ops it accelerates and everything else keeps
+reference semantics bit-for-bit.
 
 Two backends ship in-tree:
 
   * ``numpy``  — the reference implementation (always present).
   * ``pallas`` — dispatches eligible morsels to the JAX/Pallas kernels in
-    ``repro.kernels`` (``filter_select.py`` via the jit wrappers in
-    ``ops.py``).  A morsel is *eligible* for the fused kernel when the
-    predicate is a simple ``col > literal`` comparison, every touched column
-    is float32 with no validity mask, the threshold is exactly representable
-    in float32, and the buffer is finite (the MXU one-hot matmuls would
-    propagate NaN/Inf from unselected columns).  Anything else — including
-    jax being absent entirely — falls back to the numpy kernel, so results
-    are identical either way.  (Known normalization: ``-0.0`` compacts to
-    ``+0.0`` through the MXU path.)
+    ``repro.kernels``.  Columns cross into the kernels as **int32
+    bit-planes** (one plane per 4 bytes of width), so compaction and
+    reduction matmuls move bit patterns exactly — the kernels are
+    bit-identical to numpy for every fixed-width dtype, including
+    ``-0.0``, NaN payloads, Inf, and full-range int64.  Eligibility is
+    decided per morsel *and per column*; anything outside a kernel's
+    envelope — var-width columns, validity masks, unsupported literal /
+    column dtype pairings, or jax being absent entirely — falls back to
+    the numpy kernel, so results are identical either way.
+
+Dispatchable ops:
+
+    filter_select   predicate ``col <cmp> lit`` with ``<cmp>`` in
+                    {<, <=, >, >=, ==, !=}; predicate column float32 /
+                    int32 / int64; projected columns any fixed-width dtype
+    filter          the unfused form (projects every column)
+    project         arithmetic Expr chains (+ - * / over float32 columns,
+                    + - * over int32 columns, python-scalar literals)
+    segment_reduce  per-group partial folds: count always, sum for integer
+                    columns (8-bit-limb exact, wraparound-identical to
+                    numpy), min/max for finite float32 and int32-safe
+                    integer columns; ≤ 256 groups per morsel
 
 ``get_backend("auto")`` selects pallas only when jax reports a real TPU;
 interpret-mode Pallas on CPU is for correctness tests, not speed.
@@ -87,6 +101,20 @@ class ComputeBackend:
         """Fused filter + column projection (the executor's peephole)."""
         return self.kernel("filter_select")(self, batch, predicate, columns)
 
+    def project(self, batch: RecordBatch, exprs: dict, out_schema):
+        """Projection arithmetic over one morsel (shaped to ``out_schema``)."""
+        return self.kernel("project")(self, batch, exprs, out_schema)
+
+    def segment_reduce(self, gidx: np.ndarray, ngroups: int, specs: list, n_rows: int) -> dict:
+        """Per-group partial reductions for one factorized morsel.
+
+        ``specs`` is ``[(state_name, fn, values), ...]`` with ``fn`` in
+        {count, sum, min, max} (``values`` is None for count).  Returns a
+        dict mapping the state names the backend accelerated to per-group
+        arrays of length ``ngroups``; callers scatter the rest with numpy.
+        The numpy backend accelerates nothing (``{}``)."""
+        return self.kernel("segment_reduce")(self, gidx, ngroups, specs, n_rows)
+
 
 # ---------------------------------------------------------------------------
 # numpy reference kernels
@@ -112,8 +140,60 @@ def _np_filter_select(bk, batch: RecordBatch, predicate: Expr, columns: list):
     return None if out is None else out.select(columns)
 
 
+@register_kernel("numpy", "project")
+def _np_project(bk, batch: RecordBatch, exprs: dict, out_schema):
+    from repro.core.operators import project_morsel
+
+    return project_morsel(batch, exprs, out_schema)
+
+
+@register_kernel("numpy", "segment_reduce")
+def _np_segment_reduce(bk, gidx, ngroups, specs, n_rows) -> dict:
+    return {}  # reference path: GroupState scatters with numpy ufuncs
+
+
 class NumpyBackend(ComputeBackend):
     name = "numpy"
+
+
+# ---------------------------------------------------------------------------
+# int32 bit-plane column codec (host side of the pallas kernels)
+# ---------------------------------------------------------------------------
+_WIDE = {"float64", "int64", "uint64"}  # two planes: hi word, lo word
+_NARROW_INT = {"int8", "int16", "uint8", "uint16", "bool"}  # widened exactly
+
+
+def _plane_count(dtype_name: str) -> int:
+    return 2 if dtype_name in _WIDE else 1
+
+
+def _col_planes(values: np.ndarray, dtype_name: str) -> list:
+    """Encode one fixed-width column into int32 bit-planes (lossless)."""
+    v = np.ascontiguousarray(values)
+    if dtype_name in _WIDE:
+        b = v.view(np.int64)
+        hi = (b >> 32).astype(np.int32)
+        lo = (b & np.int64(0xFFFFFFFF)).astype(np.uint32).view(np.int32)
+        return [hi, lo]
+    if dtype_name == "float16":
+        return [v.view(np.uint16).astype(np.int32)]
+    if dtype_name in _NARROW_INT:
+        return [v.astype(np.int32)]
+    return [v.view(np.int32)]  # float32 / int32 / uint32
+
+
+def _planes_to_values(planes: np.ndarray, dtype) -> np.ndarray:
+    """Decode (n, planes) int32 back into the column's numpy dtype."""
+    name = dtype.name
+    if name in _WIDE:
+        hi = planes[:, 0].astype(np.int64)
+        lo = np.ascontiguousarray(planes[:, 1]).view(np.uint32).astype(np.int64)
+        return ((hi << 32) | lo).view(dtype.np_dtype)
+    if name == "float16":
+        return planes[:, 0].astype(np.uint16).view(np.float16)
+    if name in _NARROW_INT:
+        return planes[:, 0].astype(dtype.np_dtype)
+    return np.ascontiguousarray(planes[:, 0]).view(dtype.np_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -127,7 +207,7 @@ class PallasBackend(ComputeBackend):
         self._kernel_mod = None
         self._disabled = False
         self._lock = threading.Lock()
-        self.kernel_calls = 0  # observability: fused-kernel dispatch count
+        self.kernel_calls = 0  # observability: kernel dispatch count
 
     def _ops(self):
         """Import the jit'd kernel wrappers once; a failed import (no jax)
@@ -146,35 +226,98 @@ class PallasBackend(ComputeBackend):
         return self._kernel_mod
 
 
+# -- fused filter+select ----------------------------------------------------
+_CMP_OPS = {"lt", "le", "gt", "ge", "eq", "ne"}
+_PRED_KINDS = {"float32": "f32", "int32": "i32", "int64": "i64"}
+_INT32_SIGN = 0x80000000
+
+
+def _normalize_threshold(t, dtype_name: str, op: str):
+    """Map a predicate literal onto kernel-comparable form for a column
+    dtype.  Returns ``(kind, op, t_hi, t_lo)`` or ``None`` when the f32/int
+    kernel comparison could not reproduce numpy's promotion semantics
+    (e.g. a strong float64 scalar against a float32 column that is not
+    exactly representable, or a float literal against an int64 column).
+    Non-integer float literals against int32 columns rewrite to the
+    equivalent integer comparison (``v > 2.5  ⇔  v > 2``)."""
+    if isinstance(t, (bool, np.bool_)):
+        return None
+    if dtype_name == "float32":
+        if isinstance(t, (int, float)) or (isinstance(t, np.floating) and t.dtype.itemsize <= 4):
+            # weak python scalars (and <=32-bit float scalars) compare in
+            # float32 under numpy-2 promotion — the kernel's native compare
+            try:
+                return ("f32", op, float(np.float32(t)), 0)
+            except (OverflowError, ValueError):
+                return None
+        if isinstance(t, (np.integer, np.floating)):
+            # strong 64-bit scalars promote the reference comparison to
+            # float64; parity holds only for exactly-representable values
+            thr = float(np.float32(t))
+            return ("f32", op, thr, 0) if thr == t else None
+        return None
+    if dtype_name in ("int32", "int64"):
+        if isinstance(t, np.uint64):
+            return None  # numpy promotes int64 vs uint64 to float64
+        if isinstance(t, (int, np.integer)):
+            ti = int(t)
+        elif isinstance(t, (float, np.floating)) and dtype_name == "int32":
+            tf = float(t)
+            if not np.isfinite(tf):
+                return None
+            if not tf.is_integer():
+                if op in ("eq", "ne"):
+                    return None  # constant mask; let numpy broadcast it
+                # v <cmp> 2.5 is an integer comparison against floor(2.5)
+                op = {"gt": "gt", "ge": "gt", "lt": "le", "le": "le"}[op]
+                ti = int(np.floor(tf))
+            else:
+                ti = int(tf)
+        else:
+            return None  # float literals vs int64 compare in lossy float64
+        lo, hi = (-(2**31), 2**31 - 1) if dtype_name == "int32" else (-(2**63), 2**63 - 1)
+        if not (lo <= ti <= hi):
+            return None  # reference raises (weak) or promotes (strong)
+        if dtype_name == "int32":
+            return ("i32", op, ti, 0)
+        t_hi = ti >> 32
+        t_lo = (ti & 0xFFFFFFFF) ^ _INT32_SIGN  # sign-flipped low word
+        if t_lo >= 2**31:
+            t_lo -= 2**32
+        return ("i64", op, t_hi, t_lo)
+    return None
+
+
 def _fused_plan(batch: RecordBatch, predicate: Expr, columns: list):
     """Eligibility check for the Pallas fused kernel.  Returns
-    ``(pred_name, threshold, table_cols)`` or ``None`` (→ numpy fallback)."""
+    ``(op, kind, t_hi, t_lo, pred_name)`` or ``None`` (→ numpy fallback)."""
     if not (
         isinstance(predicate, Expr)
-        and predicate.op == "gt"
+        and predicate.op in _CMP_OPS
         and isinstance(predicate.args[0], Expr)
         and predicate.args[0].op == "col"
         and isinstance(predicate.args[1], Expr)
         and predicate.args[1].op == "lit"
     ):
         return None
-    threshold = predicate.args[1].args[0]
-    if isinstance(threshold, bool) or not isinstance(threshold, (int, float)):
-        return None
-    if float(np.float32(threshold)) != float(threshold):
-        return None  # f32 kernel compare would differ from the f64 reference
     pred_name = predicate.args[0].args[0]
-    needed = [pred_name] + [c for c in columns if c != pred_name]
     schema = batch.schema
-    for name in needed:
+    if pred_name not in schema:
+        return None
+    pf = schema.field(pred_name)
+    if pf.dtype.name not in _PRED_KINDS or batch.column(pred_name).validity is not None:
+        return None
+    norm = _normalize_threshold(predicate.args[1].args[0], pf.dtype.name, predicate.op)
+    if norm is None:
+        return None
+    kind, op, t_hi, t_lo = norm
+    for name in columns:
         if name not in schema:
             return None
         f = schema.field(name)
-        if f.dtype.name != "float32":
+        if f.dtype.is_varwidth or batch.column(name).validity is not None:
             return None
-        if batch.column(name).validity is not None:
-            return None
-    return pred_name, float(threshold), needed
+    return op, kind, t_hi, t_lo, pred_name
 
 
 @register_kernel("pallas", "filter_select")
@@ -183,35 +326,249 @@ def _pl_filter_select(bk: PallasBackend, batch: RecordBatch, predicate: Expr, co
     plan = _fused_plan(batch, predicate, columns) if kernel_ops is not None else None
     if plan is None or batch.num_rows == 0:
         return _np_filter_select(bk, batch, predicate, columns)
-    pred_name, threshold, needed = plan
+    op, kind, t_hi, t_lo, pred_name = plan
     tile = bk.tile
     n = batch.num_rows
     n_pad = -(-n // tile) * tile
-    table = np.full((n_pad, len(needed)), threshold, dtype=np.float32)
-    for j, name in enumerate(needed):
-        table[:n, j] = batch.column(name).values
-    if not np.isfinite(table).all():
-        return _np_filter_select(bk, batch, predicate, columns)
-    sel_idx = tuple(needed.index(c) for c in columns)
+    out_schema = batch.schema.select(columns)
+    pred_planes = _col_planes(batch.column(pred_name).values, batch.schema.field(pred_name).dtype.name)
+    pred_arr = np.zeros((n_pad, len(pred_planes)), np.int32)
+    for j, p in enumerate(pred_planes):
+        pred_arr[:n, j] = p
+    spans = []  # (plane start, plane count) per output column
+    pos = 0
+    for f in out_schema:
+        k = _plane_count(f.dtype.name)
+        spans.append((pos, k))
+        pos += k
+    table = np.zeros((n_pad, pos), np.int32)
+    for f, (start, _k) in zip(out_schema, spans):
+        for j, p in enumerate(_col_planes(batch.column(f.name).values, f.dtype.name)):
+            table[:n, start + j] = p
+    t_hi_bits = int(np.array([t_hi], np.float32).view(np.int32)[0]) if kind == "f32" else int(t_hi)
+    scalars = np.asarray([n, t_hi_bits, int(t_lo)], np.int32)
     try:
-        compacted, n_sel = kernel_ops.filter_select(table, 0, threshold, sel_idx, tile=tile)
+        out, counts = kernel_ops.filter_select_planes(pred_arr, table, scalars, op, kind, tile=tile)
     except Exception:
         return _np_filter_select(bk, batch, predicate, columns)
     bk.kernel_calls += 1
+    counts = np.asarray(counts)
+    n_sel = int(counts.sum())
     if n_sel == 0:
         return None
-    out_schema = batch.schema.select(columns)
+    out = np.asarray(out)
+    compact = np.concatenate([out[i * tile : i * tile + int(c)] for i, c in enumerate(counts) if c])
     cols = [
-        Column(f.dtype, values=np.ascontiguousarray(compacted[:, j]))
-        for j, f in enumerate(out_schema)
+        Column(f.dtype, values=_planes_to_values(compact[:, start : start + k], f.dtype))
+        for f, (start, k) in zip(out_schema, spans)
     ]
     return RecordBatch(out_schema, cols)
 
 
 @register_kernel("pallas", "filter")
 def _pl_filter(bk: PallasBackend, batch: RecordBatch, predicate: Expr):
-    # the unfused form is only kernel-eligible when EVERY column is float32
+    # the unfused form projects every column through the plane kernel
     return _pl_filter_select(bk, batch, predicate, list(batch.schema.names))
+
+
+# -- fused project arithmetic ----------------------------------------------
+_ARITH_F32 = {"add", "sub", "mul", "div"}
+_ARITH_I32 = {"add", "sub", "mul"}  # int div/mod promote to float64 in numpy
+
+
+def _arith_descr(e, batch: RecordBatch, group: str, col_idx: dict):
+    """Lower an Expr subtree to a kernel descriptor, interning column
+    indices into ``col_idx``.  Returns None when any node falls outside the
+    kernel envelope for ``group`` ("float32" | "int32")."""
+    if not isinstance(e, Expr):
+        return None
+    if e.op == "col":
+        name = e.args[0]
+        if name not in batch.schema:
+            return None
+        f = batch.schema.field(name)
+        if f.dtype.name != group or batch.column(name).validity is not None:
+            return None
+        if name not in col_idx:
+            col_idx[name] = len(col_idx)
+        return ("col", col_idx[name])
+    if e.op == "lit":
+        v = e.args[0]
+        if isinstance(v, (bool, np.bool_)):
+            return None
+        if group == "float32":
+            # weak scalars (and <=32-bit float scalars) keep f32 arithmetic
+            if isinstance(v, (int, float)) or (isinstance(v, np.floating) and v.dtype.itemsize <= 4):
+                return ("lit", float(v))
+            return None
+        if isinstance(v, (int, np.integer)) and not isinstance(v, np.uint64):
+            vi = int(v)
+            if isinstance(v, np.int64) or not (-(2**31) <= vi <= 2**31 - 1):
+                return None  # would promote to int64 (or raise) in numpy
+            return ("lit", vi)
+        return None
+    allowed = _ARITH_F32 if group == "float32" else _ARITH_I32
+    if e.op not in allowed or len(e.args) != 2:
+        return None
+    a = _arith_descr(e.args[0], batch, group, col_idx)
+    if a is None:
+        return None
+    b = _arith_descr(e.args[1], batch, group, col_idx)
+    if b is None:
+        return None
+    return (e.op, a, b)
+
+
+@register_kernel("pallas", "project")
+def _pl_project(bk: PallasBackend, batch: RecordBatch, exprs: dict, out_schema):
+    from repro.core.operators import project_morsel
+
+    kernel_ops = bk._ops()
+    if kernel_ops is None or batch.num_rows == 0:
+        return project_morsel(batch, exprs, out_schema)
+    # plan each expression independently (per-column eligibility)
+    groups: dict = {}  # group dtype -> (col_idx, [(out name, descr)])
+    for name, e in exprs.items():
+        f = out_schema.field(name)
+        if f.dtype.name not in ("float32", "int32"):
+            continue
+        group = f.dtype.name
+        col_idx = groups.setdefault(group, ({}, []))[0]
+        snapshot = dict(col_idx)
+        descr = _arith_descr(e, batch, group, col_idx)
+        if descr is None or descr[0] in ("col", "lit"):
+            col_idx.clear()
+            col_idx.update(snapshot)  # drop columns interned by the failed plan
+            continue
+        groups[group][1].append((name, descr))
+    planned = {name: None for g in groups.values() for name, _ in g[1]}
+    if not planned:
+        return project_morsel(batch, exprs, out_schema)
+    n = batch.num_rows
+    tile = bk.tile
+    n_pad = -(-n // tile) * tile
+    try:
+        for group, (col_idx, outs) in groups.items():
+            if not outs:
+                continue
+            np_dt = np.dtype(group)
+            table = np.zeros((n_pad, max(1, len(col_idx))), np_dt)
+            for cname, j in col_idx.items():
+                table[:n, j] = batch.column(cname).values
+            res = np.asarray(kernel_ops.project_tiles(table, tuple(d for _, d in outs), tile=tile))
+            for j, (name, _d) in enumerate(outs):
+                planned[name] = np.ascontiguousarray(res[:n, j])
+    except Exception:
+        return project_morsel(batch, exprs, out_schema)
+    bk.kernel_calls += 1
+    # assemble exactly like the reference evaluator: kernel outputs for the
+    # planned exprs, numpy evaluation (+dtype coercion) for the rest
+    new_cols = {}
+    for name, e in exprs.items():
+        f = out_schema.field(name)
+        vals = planned.get(name)
+        if vals is None:
+            vals = np.asarray(e.evaluate(batch))
+            if vals.ndim == 0:
+                vals = np.full(batch.num_rows, vals[()])
+            if not f.dtype.is_varwidth and vals.dtype != f.dtype.np_dtype:
+                vals = vals.astype(f.dtype.np_dtype)
+        new_cols[name] = Column.from_values(f.dtype, vals)
+    cols = [new_cols[f.name] if f.name in new_cols else batch.column(f.name) for f in out_schema]
+    return RecordBatch(out_schema, cols)
+
+
+# -- segment reductions (partial aggregation) -------------------------------
+_SEG_GROUP_CAP = 256
+_SUM_LIMBS = 8  # 8-bit limbs, int64 coverage
+
+
+def _sum_limbs(values: np.ndarray) -> list:
+    v = values.astype(np.int64)
+    limbs = [((v >> (8 * k)) & np.int64(0xFF)).astype(np.int32) for k in range(_SUM_LIMBS - 1)]
+    limbs.append((v >> (8 * (_SUM_LIMBS - 1))).astype(np.int32))  # signed top limb
+    return limbs
+
+
+def _limbs_to_int64(sums: np.ndarray) -> np.ndarray:
+    """(G, 8) int32 limb sums -> (G,) int64 (wraparound-identical to numpy)."""
+    with np.errstate(over="ignore"):
+        total = np.zeros(sums.shape[0], np.int64)
+        for k in range(_SUM_LIMBS):
+            total += sums[:, k].astype(np.int64) << np.int64(8 * k)
+    return total
+
+
+def _mm_eligible(values: np.ndarray, kind: str):
+    """Kernel-ready min/max column or None.  float32 must be finite (XLA
+    reduce NaN semantics are not IEEE-reliable); integers must fit int32."""
+    dt = values.dtype
+    if dt == np.float32:
+        return values if np.isfinite(values).all() else None
+    if dt.kind == "b" or (dt.kind == "i" and dt.itemsize <= 4) or (dt.kind == "u" and dt.itemsize <= 2):
+        return values.astype(np.int32)
+    return None
+
+
+@register_kernel("pallas", "segment_reduce")
+def _pl_segment_reduce(bk: PallasBackend, gidx, ngroups, specs, n_rows) -> dict:
+    kernel_ops = bk._ops()
+    if (
+        kernel_ops is None
+        or ngroups == 0
+        or ngroups > _SEG_GROUP_CAP
+        or n_rows > kernel_ops.SUM_ROW_CAP
+        or n_rows == 0
+    ):
+        return {}
+    sums: list = []  # (state name, values)
+    mms: dict = {"f32": [], "i32": []}  # kind -> [(state name, fn, col)]
+    count_names: list = []
+    for name, fn, values in specs:
+        if fn == "count":
+            count_names.append(name)
+        elif fn == "sum":
+            if values is not None and values.dtype.kind in "iub":
+                sums.append((name, values))
+        elif fn in ("min", "max") and values is not None:
+            col = _mm_eligible(values, fn)
+            if col is not None:
+                mms["f32" if col.dtype == np.float32 else "i32"].append((name, fn, col))
+    if not (sums or count_names or mms["f32"] or mms["i32"]):
+        return {}
+    tile = bk.tile
+    n_pad = -(-n_rows // tile) * tile
+    g_pad = -(-ngroups // 8) * 8
+    g32 = np.zeros(n_pad, np.int32)
+    g32[:n_rows] = np.asarray(gidx, np.int64)[:n_rows]
+    out: dict = {}
+    try:
+        if sums or count_names:
+            limb_tbl = np.zeros((n_pad, max(1, _SUM_LIMBS * len(sums))), np.int32)
+            for i, (_name, values) in enumerate(sums):
+                for k, limb in enumerate(_sum_limbs(values)):
+                    limb_tbl[:n_rows, _SUM_LIMBS * i + k] = limb
+            s_res, c_res = kernel_ops.segment_sum_tiles(g32, limb_tbl, n_rows, g_pad, tile=tile)
+            s_res, c_res = np.asarray(s_res), np.asarray(c_res)
+            for i, (name, _values) in enumerate(sums):
+                out[name] = _limbs_to_int64(s_res[:ngroups, _SUM_LIMBS * i : _SUM_LIMBS * (i + 1)])
+            for name in count_names:
+                out[name] = c_res[:ngroups].astype(np.int64)
+        for kind, entries in mms.items():
+            if not entries:
+                continue
+            np_dt = np.float32 if kind == "f32" else np.int32
+            tbl = np.zeros((n_pad, len(entries)), np_dt)
+            for j, (_name, _fn, col) in enumerate(entries):
+                tbl[:n_rows, j] = col
+            fns = tuple(fn for _n, fn, _c in entries)
+            res = np.asarray(kernel_ops.segment_minmax_tiles(g32, tbl, n_rows, g_pad, fns, tile=tile))
+            for j, (name, _fn, _c) in enumerate(entries):
+                out[name] = np.ascontiguousarray(res[:ngroups, j])
+    except Exception:
+        return {}
+    bk.kernel_calls += 1
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -34,8 +34,19 @@ serially (the scheduler's network/compute overlap).
 
 Compute is delegated to a pluggable backend (``repro.core.backend``):
 adjacent Filter→Select pairs are peephole-fused into the backend's
-``filter_select`` kernel, which the pallas backend dispatches to the
-TPU kernels in ``repro.kernels`` when the morsel is eligible.
+``filter_select`` kernel, projection arithmetic runs through the backend's
+``project`` kernel, and aggregate folds hand factorized morsels to the
+backend's ``segment_reduce`` kernel — the pallas backend dispatches each to
+the TPU kernels in ``repro.kernels`` when the morsel is eligible.
+
+Morsel sizing is either static (``morsel_rows=N``: byte-deterministic
+output for a given N regardless of worker count) or adaptive
+(``morsel_rows="auto"``: each pipeline tunes its slice size from an EWMA of
+observed morsel latency toward ~1 ms/morsel, clamped to [4096, 262144];
+row *order* is still deterministic, but float aggregation partial sums may
+group differently run-to-run as boundaries move).  Each run's
+``ExecutorStats`` (``get_last_stats()``) reports per-pipeline morsel counts
+and the tuned size.
 
 Laziness contract: building the executor does no work; worker threads spin
 up on the first pull of the output SDF and wind down when it is exhausted
@@ -47,6 +58,8 @@ from __future__ import annotations
 import os
 import queue
 import threading
+import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Iterator
 
@@ -64,24 +77,58 @@ from repro.core.operators import (
     join_probe_morsel,
     join_schema,
     map_morsel,
-    project_morsel,
     project_schema,
     select_morsel,
 )
 from repro.core.schema import Schema
 from repro.core.sdf import StreamingDataFrame
 
-__all__ = ["ExecutorConfig", "execute_parallel", "prefetch_sdf", "default_workers"]
+__all__ = [
+    "ExecutorConfig",
+    "ExecutorStats",
+    "execute_parallel",
+    "prefetch_sdf",
+    "default_workers",
+    "get_last_stats",
+]
 
 DEFAULT_MORSEL_ROWS = 65536
+# adaptive ("auto") morsel sizing envelope: EWMA of observed per-morsel
+# latency steers the size toward AUTO_TARGET_S per morsel, clamped.
+AUTO_MORSEL_MIN = 4096
+AUTO_MORSEL_MAX = 262144
+AUTO_MORSEL_INIT = 16384
+AUTO_TARGET_S = 1e-3
 _STREAMING_OPS = ("filter", "select", "project", "map")
 
 
+def _env_int(name: str, default: int, minimum: int) -> int:
+    """Validated integer env override: a garbage or out-of-range value logs
+    a warning and falls back to ``default`` instead of raising deep inside
+    engine construction."""
+    raw = os.environ.get(name)
+    if raw is None or raw == "":
+        return default
+    try:
+        v = int(raw)
+    except ValueError:
+        warnings.warn(f"{name}={raw!r} is not an integer; using {default}", stacklevel=2)
+        return default
+    if v < minimum:
+        warnings.warn(f"{name}={v} is below the minimum {minimum}; using {default}", stacklevel=2)
+        return default
+    return v
+
+
+def _env_morsel_rows():
+    raw = os.environ.get("DACP_MORSEL_ROWS")
+    if raw is not None and raw.strip().lower() == "auto":
+        return "auto"
+    return _env_int("DACP_MORSEL_ROWS", DEFAULT_MORSEL_ROWS, 1)
+
+
 def default_workers() -> int:
-    env = os.environ.get("DACP_EXECUTOR_WORKERS")
-    if env:
-        return max(0, int(env))
-    return min(4, os.cpu_count() or 1)
+    return _env_int("DACP_EXECUTOR_WORKERS", min(4, os.cpu_count() or 1), 0)
 
 
 @dataclass
@@ -91,7 +138,11 @@ class ExecutorConfig:
     num_workers   morsel worker threads per pipeline stage; 1 = sequential
                   in-line execution (no threads), 0 = delegate to the
                   reference pull chain (``operators.execute``).
-    morsel_rows   rows per morsel (source batches are sliced to this).
+    morsel_rows   rows per morsel (source batches are sliced to this), or
+                  ``"auto"``: each pipeline tunes its own size from an EWMA
+                  of observed morsel latency (target ~1 ms/morsel, clamped
+                  to [4096, 262144]); the chosen size lands in the run's
+                  ``ExecutorStats``.
     backend       compute backend name ("numpy" | "pallas" | "auto").
     window        reorder/backpressure window in morsels (0 → 4×workers).
     prefetch_batches  per-source prefetch queue depth (0 disables).
@@ -101,15 +152,141 @@ class ExecutorConfig:
     """
 
     num_workers: int = field(default_factory=default_workers)
-    morsel_rows: int = field(default_factory=lambda: int(os.environ.get("DACP_MORSEL_ROWS", DEFAULT_MORSEL_ROWS)))
+    morsel_rows: int | str = field(default_factory=_env_morsel_rows)
     backend: str = field(default_factory=lambda: os.environ.get("DACP_BACKEND", "auto"))
     window: int = 0
     prefetch_batches: int = 4
     stream_depth: int = 4
-    scan_workers: int = field(default_factory=lambda: int(os.environ.get("DACP_SCAN_WORKERS", "4")))
+    scan_workers: int = field(default_factory=lambda: _env_int("DACP_SCAN_WORKERS", 4, 1))
+
+    def __post_init__(self) -> None:
+        mr = self.morsel_rows
+        if isinstance(mr, str):
+            if mr.strip().lower() != "auto":
+                raise ValueError(f"morsel_rows must be a positive int or 'auto', got {mr!r}")
+            self.morsel_rows = "auto"
+        elif mr < 1:
+            raise ValueError(f"morsel_rows must be >= 1, got {mr}")
+
+    @property
+    def auto_morsels(self) -> bool:
+        return self.morsel_rows == "auto"
+
+    def initial_morsel_rows(self) -> int:
+        return AUTO_MORSEL_INIT if self.auto_morsels else max(1, int(self.morsel_rows))
 
     def effective_window(self) -> int:
         return self.window if self.window > 0 else 4 * max(1, self.num_workers)
+
+
+# ---------------------------------------------------------------------------
+# adaptive morsel sizing + run stats
+# ---------------------------------------------------------------------------
+class _MorselSizer:
+    """Per-pipeline morsel-size controller.  Workers report each morsel's
+    (rows, seconds); an EWMA least-squares fit of the latency model
+    ``t(rows) = a + b·rows`` steers the next slice size toward ``target_s``
+    per morsel — with a floor that keeps the fixed per-morsel overhead ``a``
+    (python dispatch, per-morsel GroupState churn, lock traffic) under
+    ~1/(1+_OVERHEAD_K) of each morsel's latency, so a host where overhead
+    rivals the 1 ms target (GIL-bound CPUs) doesn't get starved into
+    tiny, throughput-losing morsels.  Where overhead is negligible
+    (vectorized/TPU compute), the floor vanishes and the controller is a
+    pure ~1 ms latency target.  Clamped, in 4096-row steps.  Thread-safe;
+    reads are a single attribute load."""
+
+    _ALPHA = 0.15  # EWMA weight for the regression moments
+    _OVERHEAD_K = 8  # morsel must be >= K× the fixed overhead
+
+    def __init__(
+        self,
+        initial: int,
+        adaptive: bool,
+        target_s: float = AUTO_TARGET_S,
+        lo: int = AUTO_MORSEL_MIN,
+        hi: int = AUTO_MORSEL_MAX,
+    ):
+        self.size = initial
+        self.adaptive = adaptive
+        self.target_s = target_s
+        self.lo = lo
+        self.hi = hi
+        self.morsels = 0
+        self.rows = 0
+        self._m = None  # EWMA moments (E[r], E[t], E[r²], E[r·t])
+        self._lock = threading.Lock()
+
+    def current(self) -> int:
+        return self.size
+
+    def observe(self, rows: int, seconds: float) -> None:
+        if rows <= 0:
+            return
+        with self._lock:
+            self.morsels += 1
+            self.rows += rows
+            if not self.adaptive or seconds <= 0.0:
+                return
+            r, t = float(rows), float(seconds)
+            if self._m is None:
+                self._m = [r, t, r * r, r * t]
+            else:
+                al = self._ALPHA
+                m = self._m
+                m[0] += al * (r - m[0])
+                m[1] += al * (t - m[1])
+                m[2] += al * (r * r - m[2])
+                m[3] += al * (r * t - m[3])
+            mr, mt, mrr, mrt = self._m
+            var = mrr - mr * mr
+            if var > (0.05 * mr) ** 2:  # enough size variety to fit the intercept
+                b = (mrt - mr * mt) / var
+                a = mt - b * mr
+                a = max(a, 0.0)
+                b = max(b, mt / mr * 1e-3, 1e-12)
+            else:
+                a, b = 0.0, mt / mr  # single operating point: pure latency model
+            want = max(self.target_s / b, self._OVERHEAD_K * a / b)
+            size = int(min(self.hi, max(self.lo, want)))
+            self.size = max(self.lo, min(self.hi, size - size % 4096))
+
+
+@dataclass
+class ExecutorStats:
+    """Per-run executor observability.  One entry per pipeline stage drive:
+    ``{"morsel_rows": final size, "auto": bool, "morsels": n, "rows": n}``.
+    Filled in as each stage finishes (the output SDF is lazy)."""
+
+    pipelines: list = field(default_factory=list)
+
+    def record(self, sizer: _MorselSizer) -> None:
+        self.pipelines.append(
+            {
+                "morsel_rows": sizer.size,
+                "auto": sizer.adaptive,
+                "morsels": sizer.morsels,
+                "rows": sizer.rows,
+            }
+        )
+
+    def chosen_morsel_rows(self) -> int | None:
+        """The (last pipeline's) tuned morsel size, or None before any
+        pipeline completed."""
+        return self.pipelines[-1]["morsel_rows"] if self.pipelines else None
+
+    def to_dict(self) -> dict:
+        return {"pipelines": list(self.pipelines)}
+
+
+_last_stats: ExecutorStats | None = None
+_last_stats_lock = threading.Lock()
+
+
+def get_last_stats() -> ExecutorStats | None:
+    """Stats of the most recently *created* parallel execution (its entries
+    appear as the lazy output is consumed)."""
+    with _last_stats_lock:
+        return _last_stats
 
 
 # ---------------------------------------------------------------------------
@@ -209,29 +386,46 @@ def _apply_ops(ops: list, batch: RecordBatch) -> RecordBatch | None:
     return batch
 
 
-def _morsel_slices(batch: RecordBatch, morsel_rows: int):
-    if batch.num_rows <= morsel_rows:
+def _morsel_slices(batch: RecordBatch, sizer: _MorselSizer):
+    n = batch.num_rows
+    if n <= sizer.current():
         yield batch
         return
-    for s in range(0, batch.num_rows, morsel_rows):
-        yield batch.slice(s, s + morsel_rows)
+    s = 0
+    while s < n:
+        rows = max(1, sizer.current())  # re-read: "auto" retunes mid-batch
+        yield batch.slice(s, s + rows)
+        s += rows
 
 
-def _run_ordered(branches: list, cfg: ExecutorConfig, backend: ComputeBackend, make_item: Callable):
+def _run_ordered(
+    branches: list,
+    cfg: ExecutorConfig,
+    backend: ComputeBackend,
+    make_item: Callable,
+    stats: ExecutorStats | None = None,
+):
     """Drive branches' morsels through a worker pool; yield non-None
     ``make_item(ops, morsel)`` results in strict input order.
 
     With ``num_workers <= 1`` this degrades to a fully synchronous loop —
     no threads, reference pull-chain behavior."""
     compiled = [(br, _finalize_ops(br.specs, backend)) for br in branches]
+    sizer = _MorselSizer(cfg.initial_morsel_rows(), cfg.auto_morsels)
 
     if cfg.num_workers <= 1:
-        for br, ops in compiled:
-            for batch in br.sdf.iter_batches():
-                for m in _morsel_slices(batch, cfg.morsel_rows):
-                    out = make_item(ops, m)
-                    if out is not None:
-                        yield out
+        try:
+            for br, ops in compiled:
+                for batch in br.sdf.iter_batches():
+                    for m in _morsel_slices(batch, sizer):
+                        t0 = time.perf_counter()
+                        out = make_item(ops, m)
+                        sizer.observe(m.num_rows, time.perf_counter() - t0)
+                        if out is not None:
+                            yield out
+        finally:
+            if stats is not None:
+                stats.record(sizer)
         return
 
     window = cfg.effective_window()
@@ -242,7 +436,7 @@ def _run_ordered(branches: list, cfg: ExecutorConfig, backend: ComputeBackend, m
     def morsels():
         for (_, ops), pf in zip(compiled, prefetchers):
             for batch in pf:
-                for m in _morsel_slices(batch, cfg.morsel_rows):
+                for m in _morsel_slices(batch, sizer):
                     yield ops, m
 
     it = morsels()
@@ -281,7 +475,9 @@ def _run_ordered(branches: list, cfg: ExecutorConfig, backend: ComputeBackend, m
                 seq = state["assigned"]
                 state["assigned"] = seq + 1
             try:
+                t0 = time.perf_counter()
                 out = make_item(ops, m)
+                sizer.observe(m.num_rows, time.perf_counter() - t0)
             except BaseException as e:  # noqa: BLE001 - surfaced to consumer
                 with cond:
                     if state["error"] is None:
@@ -319,6 +515,8 @@ def _run_ordered(branches: list, cfg: ExecutorConfig, backend: ComputeBackend, m
             cond.notify_all()
         for pf in prefetchers:
             pf.close()
+        if stats is not None:
+            stats.record(sizer)
 
 
 # ---------------------------------------------------------------------------
@@ -344,7 +542,7 @@ def _finalize_ops(specs: list, backend: ComputeBackend) -> list:
             ops.append(lambda b, _c=cols: select_morsel(b, _c))
         elif kind == "project":
             exprs, out_schema = args
-            ops.append(lambda b, _e=exprs, _s=out_schema: project_morsel(b, _e, _s))
+            ops.append(lambda b, _e=exprs, _s=out_schema: backend.project(b, _e, _s))
         elif kind == "map":
             mf, fn_params = args
             ops.append(lambda b, _m=mf, _p=fn_params: map_morsel(b, _m, _p))
@@ -383,11 +581,19 @@ class _Once:
 # DAG → pipeline compiler
 # ---------------------------------------------------------------------------
 class _Compiler:
-    def __init__(self, dag: Dag, resolver: Callable[[Node], StreamingDataFrame], cfg: ExecutorConfig, backend: ComputeBackend):
+    def __init__(
+        self,
+        dag: Dag,
+        resolver: Callable[[Node], StreamingDataFrame],
+        cfg: ExecutorConfig,
+        backend: ComputeBackend,
+        stats: ExecutorStats | None = None,
+    ):
         self.dag = dag
         self.resolver = resolver
         self.cfg = cfg
         self.backend = backend
+        self.stats = stats
         self._memo: dict = {}  # node id -> (branches, schema)
 
     def compile(self) -> StreamingDataFrame:
@@ -400,12 +606,12 @@ class _Compiler:
             return branches[0].sdf  # nothing to compute: pass the source through
 
         def gen():
-            yield from _run_ordered(branches, self.cfg, self.backend, _apply_ops)
+            yield from _run_ordered(branches, self.cfg, self.backend, _apply_ops, self.stats)
 
         return StreamingDataFrame(schema, gen)
 
     def _collect_stage(self, branches: list, schema: Schema) -> RecordBatch:
-        got = list(_run_ordered(branches, self.cfg, self.backend, _apply_ops))
+        got = list(_run_ordered(branches, self.cfg, self.backend, _apply_ops, self.stats))
         return concat_batches(got) if got else RecordBatch.empty(schema)
 
     # -- recursive compilation ---------------------------------------------
@@ -476,13 +682,16 @@ class _Compiler:
         if missing:
             raise SchemaError(f"aggregate keys missing from input: {missing}")
         out_schema = Schema(agg_out_fields(in_schema, keys, aggs, mode))
-        cfg, backend = self.cfg, self.backend
+        cfg, backend, stats = self.cfg, self.backend, self.stats
 
         def fold(ops, morsel):
             b = _apply_ops(ops, morsel)
             if b is None or b.num_rows == 0:
                 return None
-            st = GroupState(keys, aggs, mode, in_schema, vectorized=True)
+            # backend-aware fold: eligible aggregates run on the
+            # segment-reduce kernel once keys are factorized (pushdown R9
+            # partials on the accelerator)
+            st = GroupState(keys, aggs, mode, in_schema, vectorized=True, backend=backend)
             st.update(b)
             return st
 
@@ -490,7 +699,7 @@ class _Compiler:
             # breaker: fold morsels into per-morsel partial states in
             # parallel, merge them in morsel order (deterministic output)
             total = GroupState(keys, aggs, mode, in_schema, vectorized=True)
-            for st in _run_ordered(branches, cfg, backend, fold):
+            for st in _run_ordered(branches, cfg, backend, fold, stats):
                 total.merge(st)
             yield total.result(out_schema)
 
@@ -516,11 +725,19 @@ def execute_parallel(
     dag: Dag,
     source_resolver: Callable[[Node], StreamingDataFrame],
     config: ExecutorConfig | None = None,
+    stats: ExecutorStats | None = None,
 ) -> StreamingDataFrame:
     """Wire the DAG into morsel-parallel pipelines and return the output SDF.
 
     Semantics match ``operators.execute`` (same rows, same order for a given
-    morsel size); execution is lazy — workers start on the first pull."""
+    morsel size); execution is lazy — workers start on the first pull.
+    ``stats`` (or ``get_last_stats()``) collects per-pipeline morsel counts
+    and the tuned morsel size as the output is consumed."""
+    global _last_stats
     cfg = config or ExecutorConfig()
     backend = get_backend(cfg.backend)
-    return _Compiler(dag, source_resolver, cfg, backend).compile()
+    if stats is None:
+        stats = ExecutorStats()
+    with _last_stats_lock:
+        _last_stats = stats
+    return _Compiler(dag, source_resolver, cfg, backend, stats).compile()

@@ -367,13 +367,28 @@ class GroupState:
     Partial states combine with ``merge`` — the morsel driver builds one
     state per morsel and merges them in morsel order, so the grouped output
     is deterministic regardless of worker count.
+
+    ``backend`` (a ``ComputeBackend``) lets the per-batch fold dispatch to
+    the backend's ``segment_reduce`` kernel once the keys are factorized:
+    eligible aggregates (counts, integer sums, int32/finite-f32 min/max)
+    fold on the accelerator, the rest scatter with numpy — bit-identical
+    either way, so a ``None`` backend is the reference semantics.
     """
 
-    def __init__(self, keys: list, aggs: dict, mode: str, in_schema: Schema, vectorized: bool = False):
+    def __init__(
+        self,
+        keys: list,
+        aggs: dict,
+        mode: str,
+        in_schema: Schema,
+        vectorized: bool = False,
+        backend=None,
+    ):
         self.keys = keys
         self.aggs = aggs
         self.mode = mode
         self.in_schema = in_schema
+        self.backend = backend
         self.vectorized = vectorized and all(not in_schema.field(k).dtype.is_varwidth for k in keys)
         self.gids: dict = {}  # key tuple -> group id
         self.key_rows: list = []  # representative key values per group
@@ -417,6 +432,36 @@ class GroupState:
             out[i] = g
         return out
 
+    def _factorize_dense(self, a: np.ndarray):
+        """Sort-free factorization for a single integer key over a small
+        value range: one scatter builds a first-occurrence LUT instead of
+        ``np.unique``'s full-array argsort (the hot path of the aggregate
+        fold).  Returns per-row group ids, or None when ineligible."""
+        if a.dtype.kind not in "iu" or len(a) == 0:
+            return None
+        mn, mx = int(a.min()), int(a.max())
+        span = mx - mn + 1
+        if span > max(1024, 4 * len(a)):
+            return None  # LUT would dwarf the batch; np.unique wins
+        if a.dtype.kind == "u":
+            # native unsigned subtract is exact (every value >= mn) and keeps
+            # uint64 keys above 2^63 out of lossy int64 territory
+            off = (a - mn).astype(np.int64) if mn else a.astype(np.int64)
+        else:
+            # widen BEFORE subtracting: narrow signed dtypes (int8 keys
+            # spanning -100..100) would wrap in native arithmetic
+            off = a.astype(np.int64) - mn
+        first = np.full(span, -1, np.int64)
+        first[off[::-1]] = np.arange(len(a) - 1, -1, -1, dtype=np.int64)
+        vals_off = np.flatnonzero(first >= 0)
+        order = np.argsort(first[vals_off], kind="stable")  # first-seen rank
+        rank = np.empty(len(order), np.int64)
+        rank[order] = np.arange(len(order))
+        lut = np.empty(span, np.int64)
+        lut[vals_off] = rank
+        uniq_keys = [(int(v) + mn,) for v in vals_off[order].tolist()]
+        return self._intern_groups(uniq_keys)[lut[off]]
+
     def _factorize(self, batch: RecordBatch) -> np.ndarray:
         """Per-row group ids for one batch.  The vectorized path matches the
         reference row loop exactly: new groups intern in first-seen row
@@ -426,6 +471,9 @@ class GroupState:
         if self.vectorized and all(c.validity is None for c in key_cols):
             arrs = [np.ascontiguousarray(c.values) for c in key_cols]
             if len(arrs) == 1:
+                dense = self._factorize_dense(arrs[0])
+                if dense is not None:
+                    return dense
                 uniq, first_idx, inv = np.unique(arrs[0], return_index=True, return_inverse=True)
             else:
                 comb = np.empty(batch.num_rows, dtype=[(f"k{i}", a.dtype) for i, a in enumerate(arrs)])
@@ -452,6 +500,30 @@ class GroupState:
             if len(cur) < ngroups:
                 self.acc[name] = np.concatenate([cur, np.full(ngroups - len(cur), init, dt)])
 
+    def _kernel_specs(self, batch: RecordBatch) -> list:
+        """(state name, fn, values) triples for ``backend.segment_reduce``.
+        The backend accelerates the subset it can reproduce bit-exactly and
+        ``update`` scatters the remainder with numpy."""
+        specs = []
+        for out, spec in self.aggs.items():
+            fn = spec["fn"]
+            if fn == "count":
+                if self.mode == "final":
+                    specs.append((out, "sum", np.asarray(batch.column(out).values)))
+                else:
+                    specs.append((out, "count", None))
+            elif fn == "mean":
+                # psum folds in float64 (never kernel-eligible); pcnt is a
+                # plain count (final mode: a sum of the partial counts)
+                if self.mode == "final":
+                    specs.append((f"{out}__pcnt", "sum", np.asarray(batch.column(f"{out}__pcnt").values)))
+                else:
+                    specs.append((f"{out}__pcnt", "count", None))
+            else:
+                vals = np.asarray(batch.column(_agg_src(out, spec, self.mode)).to_numpy())
+                specs.append((out, fn, vals))
+        return specs
+
     def update(self, batch: RecordBatch) -> None:
         n = batch.num_rows
         if n == 0:
@@ -459,29 +531,56 @@ class GroupState:
         gidx = self._factorize(batch)
         self._grow()
         ngroups = len(self.gids)
-        counts = np.bincount(gidx, minlength=ngroups)
-        # scatter each batch's values straight into the (dtype-exact) accumulators
+        kres: dict = {}
+        if self.backend is not None:
+            kres = self.backend.segment_reduce(gidx, ngroups, self._kernel_specs(batch), n) or {}
+        counts = None
+
+        def _counts():
+            nonlocal counts
+            if counts is None:
+                counts = np.bincount(gidx, minlength=ngroups)
+            return counts
+
+        # scatter each batch's values straight into the (dtype-exact)
+        # accumulators; kernel-folded states combine vectorized instead
         for out, spec in self.aggs.items():
             fn = spec["fn"]
             if fn == "count":
-                if self.mode == "final":
+                if out in kres:
+                    self.acc[out][:ngroups] += kres[out]
+                elif self.mode == "final":
                     vals = np.asarray(batch.column(out).values, dtype=np.int64)
                     np.add.at(self.acc[out], gidx, vals)
                 else:
-                    self.acc[out] += counts
+                    self.acc[out] += _counts()
             elif fn == "mean":
+                pc = f"{out}__pcnt"
                 if self.mode == "final":
                     np.add.at(self.acc[f"{out}__psum"], gidx, np.asarray(batch.column(f"{out}__psum").values, np.float64))
-                    np.add.at(self.acc[f"{out}__pcnt"], gidx, np.asarray(batch.column(f"{out}__pcnt").values, np.int64))
+                    if pc in kres:
+                        self.acc[pc][:ngroups] += kres[pc]
+                    else:
+                        np.add.at(self.acc[pc], gidx, np.asarray(batch.column(pc).values, np.int64))
                 else:
                     vals = np.asarray(batch.column(spec["column"]).to_numpy(), dtype=np.float64)
                     np.add.at(self.acc[f"{out}__psum"], gidx, vals)
-                    self.acc[f"{out}__pcnt"] += counts
+                    if pc in kres:
+                        self.acc[pc][:ngroups] += kres[pc]
+                    else:
+                        self.acc[pc] += _counts()
             else:  # sum / min / max
                 cur = self.acc[out]
-                vals = np.asarray(batch.column(_agg_src(out, spec, self.mode)).to_numpy()).astype(cur.dtype)
-                op = {"sum": np.add, "min": np.minimum, "max": np.maximum}[fn]
-                op.at(cur, gidx, vals)
+                if out in kres:
+                    if fn == "sum":
+                        cur[:ngroups] += kres[out]
+                    else:
+                        op = np.minimum if fn == "min" else np.maximum
+                        cur[:ngroups] = op(cur[:ngroups], kres[out].astype(cur.dtype))
+                else:
+                    vals = np.asarray(batch.column(_agg_src(out, spec, self.mode)).to_numpy()).astype(cur.dtype)
+                    op = {"sum": np.add, "min": np.minimum, "max": np.maximum}[fn]
+                    op.at(cur, gidx, vals)
 
     def merge(self, other: "GroupState") -> "GroupState":
         """Combine another partial state into this one (same keys/aggs/mode).
@@ -502,6 +601,17 @@ class GroupState:
                 cur = self.acc[out]
                 cur[idx] = op(cur[idx], other.acc[out][:m])
         return self
+
+    def _key_column(self, f, vals: list) -> Column:
+        """Key output column; null keys (masked input rows) materialize as a
+        validity-masked column rather than crashing ``from_values``."""
+        null = [v is None for v in vals]
+        if not any(null):
+            return Column.from_values(f.dtype, vals)
+        fill = "" if f.dtype.name == "string" else (b"" if f.dtype.name == "binary" else 0)
+        c = Column.from_values(f.dtype, [fill if m else v for v, m in zip(vals, null)])
+        c.validity = np.asarray([not m for m in null], dtype=bool)
+        return c
 
     def result(self, out_schema: Schema) -> RecordBatch:
         ngroups = len(self.key_rows)
@@ -525,7 +635,10 @@ class GroupState:
         cols = []
         for f in out_schema:
             vals = data[f.name]
-            cols.append(Column.from_values(f.dtype, vals if not isinstance(vals, np.ndarray) else np.asarray(vals, f.dtype.np_dtype)))
+            if f.name in self.keys and not isinstance(vals, np.ndarray):
+                cols.append(self._key_column(f, vals))
+            else:
+                cols.append(Column.from_values(f.dtype, vals if not isinstance(vals, np.ndarray) else np.asarray(vals, f.dtype.np_dtype)))
         return RecordBatch(out_schema, cols)
 
 

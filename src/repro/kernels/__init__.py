@@ -1,6 +1,10 @@
 """Pallas TPU kernels (validated in interpret mode on CPU; Mosaic on TPU).
 
-    filter_select     — the paper's fused columnar Filter+Select (§IV-B)
+    filter_select     — the paper's fused columnar Filter+Select (§IV-B);
+                        ``filter_select_planes`` is the bit-exact multi-dtype
+                        form the compute backend dispatches to
+    project_arith     — fused project-arithmetic chains compiled from Exprs
+    segment_reduce    — per-group sum/min/max/count partial aggregation
     flash_attention   — causal GQA prefill attention
     decode_attention  — split-K single-token decode (seq-shardable)
     ssd_scan          — Mamba2 SSD chunk scan
@@ -11,9 +15,13 @@ from repro.kernels import ops, ref
 from repro.kernels.ops import (
     decode_attention,
     filter_select,
+    filter_select_planes,
     filter_select_tiles,
     flash_attention,
     mlstm_chunk,
+    project_tiles,
+    segment_minmax_tiles,
+    segment_sum_tiles,
     ssd_scan,
 )
 
@@ -23,6 +31,10 @@ __all__ = [
     "decode_attention",
     "filter_select",
     "filter_select_tiles",
+    "filter_select_planes",
+    "project_tiles",
+    "segment_sum_tiles",
+    "segment_minmax_tiles",
     "flash_attention",
     "mlstm_chunk",
     "ssd_scan",

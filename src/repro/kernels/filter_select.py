@@ -7,17 +7,32 @@ back are ``selected_rows × selected_columns`` only.  Per row-tile:
 
   1. DMA one (TILE, D) block of the columnar table into VMEM,
   2. evaluate the predicate on the predicate column (VPU),
-  3. **column projection as a matmul**: ``rows_sel = block @ S`` where S is
-     a static (D, D_sel) one-hot selection matrix (MXU),
-  4. **compaction as a matmul**: ``out = Pᵀ @ rows_sel`` where
+  3. **compaction as a matmul**: ``out = Pᵀ @ block`` where
      P[i, j] = (cumsum(mask)_i - 1 == j) ∧ mask_i (MXU) — selected rows land
      at the front of the tile, a per-tile count goes to a second output.
 
 Scatter-free compaction through the systolic array is the hardware
 adaptation: TPUs have no efficient in-kernel scatter, but a (TILE, TILE)
-one-hot matmul at TILE=256 is ~2% of the projection cost and keeps the
-whole operator on the MXU.  A cheap jnp epilogue (``ops.filter_select``)
+one-hot matmul at TILE=256 is ~2% of the per-row cost and keeps the whole
+operator on the MXU.  A cheap jnp epilogue (``ops.filter_select``)
 concatenates tile fronts into the final compacted table.
+
+Two kernels live here:
+
+  * ``filter_select_tiles``  — the original all-float32 ``col > lit`` form
+    (f32 one-hot matmul); kept for the micro-benchmarks and kernel sweeps.
+  * ``filter_select_planes`` — the production form used by the compute
+    backend.  Columns arrive as **int32 bit-planes** (one plane per 4 bytes
+    of column width; ``repro.core.backend`` encodes/decodes) and compaction
+    is an *integer* one-hot matmul, which moves bit patterns verbatim: the
+    kernel is bit-exact for every fixed-width dtype including ``-0.0``,
+    NaN payloads, Inf, and full-range int64.  The predicate evaluates in
+    the column's native ordering: float32 via bitcast (IEEE compare, NaN
+    semantics preserved), int32 directly, int64 as a two-word hi/lo
+    compare (sign-flipped unsigned low word) — no 64-bit lanes needed.
+    All six comparisons (``lt le gt ge eq ne``) are supported, and a row
+    validity bound masks the ragged tail tile, so ``eq``-style predicates
+    never match padding.
 """
 
 from __future__ import annotations
@@ -29,9 +44,108 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-__all__ = ["filter_select_tiles"]
+__all__ = ["filter_select_tiles", "filter_select_planes"]
+
+_INT32_SIGN = -(2**31)  # xor flips the sign bit: signed cmp == unsigned cmp
+
+_CMP = {
+    "lt": lambda a, b: a < b,
+    "le": lambda a, b: a <= b,
+    "gt": lambda a, b: a > b,
+    "ge": lambda a, b: a >= b,
+    "eq": lambda a, b: a == b,
+    "ne": lambda a, b: a != b,
+}
 
 
+def _cmp64(op: str, hi, lo, t_hi, t_lo):
+    """Two-word int64 comparison on int32 planes.  ``lo``/``t_lo`` carry the
+    low word with the sign bit pre-flipped, so signed int32 comparison
+    implements the unsigned low-word comparison."""
+    if op == "eq":
+        return (hi == t_hi) & (lo == t_lo)
+    if op == "ne":
+        return (hi != t_hi) | (lo != t_lo)
+    lt = (hi < t_hi) | ((hi == t_hi) & (lo < t_lo))
+    if op == "lt":
+        return lt
+    if op == "ge":
+        return ~lt
+    gt = (hi > t_hi) | ((hi == t_hi) & (lo > t_lo))
+    return gt if op == "gt" else ~gt  # "le"
+
+
+def _pred_mask(pred, t_hi, t_lo, *, op: str, kind: str):
+    """(tile,) bool mask from the predicate column's int32 plane(s).
+    ``t_hi``/``t_lo`` are traced int32 scalars carrying the threshold's bit
+    pattern (so changing the literal does not retrace the kernel)."""
+    if kind == "f32":
+        x = jax.lax.bitcast_convert_type(pred[:, 0], jnp.float32)
+        return _CMP[op](x, jax.lax.bitcast_convert_type(t_hi, jnp.float32))
+    if kind == "i32":
+        return _CMP[op](pred[:, 0], t_hi)
+    # i64: plane 0 = high word (signed), plane 1 = low word (raw bits)
+    lo = pred[:, 1] ^ jnp.int32(_INT32_SIGN)
+    return _cmp64(op, pred[:, 0], lo, t_hi, t_lo)
+
+
+def _planes_kernel(sc_ref, pred_ref, tbl_ref, out_ref, cnt_ref, *, op, kind, tile):
+    block = tbl_ref[...]  # (tile, D) int32 bit-planes
+    rows = pl.program_id(0) * tile + jax.lax.broadcasted_iota(jnp.int32, (tile,), 0)
+    mask = _pred_mask(pred_ref[...], sc_ref[1], sc_ref[2], op=op, kind=kind)
+    mask = mask & (rows < sc_ref[0])  # padding never matches (eq-safe)
+    # compaction matrix P[i, j] = (pos_i == j) & mask_i; integer matmul moves
+    # bit patterns exactly (one product is v*1, the rest 0 — no rounding)
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    cols_iota = jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 1)
+    p_mat = ((pos[:, None] == cols_iota) & mask[:, None]).astype(jnp.int32)
+    out_ref[...] = jax.lax.dot_general(
+        p_mat, block, (((0,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    cnt_ref[0] = mask.sum(dtype=jnp.int32)
+
+
+def filter_select_planes(
+    pred_planes,
+    table,
+    scalars,
+    op: str = "gt",
+    kind: str = "f32",
+    tile: int = 256,
+    interpret: bool = False,
+):
+    """pred_planes: (N, P) int32; table: (N, D) int32 bit-planes of the
+    output columns; scalars: (3,) int32 ``[n_rows, t_hi bits, t_lo bits]``
+    (rows >= n_rows are padding; thresholds travel as traced data, so a new
+    literal reuses the compiled kernel).  Returns (per-tile-compacted
+    (N, D) int32 planes, counts (N//tile,) int32)."""
+    n, d = table.shape
+    assert n % tile == 0, (n, tile)
+    p = pred_planes.shape[1]
+    kernel = functools.partial(_planes_kernel, op=op, kind=kind, tile=tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec((tile, p), lambda i: (i, 0)),
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.int32),
+            jax.ShapeDtypeStruct((n // tile,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(scalars, jnp.int32), pred_planes, table)
+
+
+# ---------------------------------------------------------------------------
+# legacy all-float32 col>lit kernel (micro-benchmarks / kernel sweeps)
+# ---------------------------------------------------------------------------
 def _kernel(tbl_ref, sel_ref, out_ref, cnt_ref, *, pred_col, threshold, tile):
     block = tbl_ref[...]  # (tile, D)
     sel_mat = sel_ref[...]  # (D, D_sel) one-hot selection

@@ -15,12 +15,30 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as ref_mod
 from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.filter_select import filter_select_planes as _filter_select_planes
 from repro.kernels.filter_select import filter_select_tiles as _filter_select_tiles
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.mlstm_chunk import mlstm_chunk as _mlstm_chunk
+from repro.kernels.project_arith import project_tiles as _project_tiles
+from repro.kernels.segment_reduce import SUM_ROW_CAP
+from repro.kernels.segment_reduce import segment_minmax_tiles as _segment_minmax_tiles
+from repro.kernels.segment_reduce import segment_sum_tiles as _segment_sum_tiles
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
-__all__ = ["auto_interpret", "flash_attention", "decode_attention", "ssd_scan", "mlstm_chunk", "filter_select", "filter_select_tiles"]
+__all__ = [
+    "auto_interpret",
+    "flash_attention",
+    "decode_attention",
+    "ssd_scan",
+    "mlstm_chunk",
+    "filter_select",
+    "filter_select_tiles",
+    "filter_select_planes",
+    "project_tiles",
+    "segment_sum_tiles",
+    "segment_minmax_tiles",
+    "SUM_ROW_CAP",
+]
 
 
 def auto_interpret() -> bool:
@@ -50,6 +68,29 @@ def mlstm_chunk(q, k, v, log_i, log_f, chunk: int = 256):
 @functools.partial(jax.jit, static_argnames=("pred_col", "threshold", "sel_cols", "tile"))
 def filter_select_tiles(table, pred_col: int, threshold: float, sel_cols: tuple, tile: int = 256):
     return _filter_select_tiles(table, pred_col, threshold, list(sel_cols), tile=tile, interpret=auto_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("op", "kind", "tile"))
+def filter_select_planes(pred_planes, table, scalars, op: str, kind: str, tile: int = 256):
+    # scalars = [n_rows, t_hi bits, t_lo bits] rides as traced data: a new
+    # predicate literal (or morsel row count) reuses the compiled kernel
+    return _filter_select_planes(
+        pred_planes, table, scalars, op=op, kind=kind, tile=tile, interpret=auto_interpret()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("ngroups", "tile"))
+def segment_sum_tiles(gidx, limbs, n_rows, ngroups: int, tile: int = 256):
+    return _segment_sum_tiles(gidx, limbs, n_rows, ngroups, tile=tile, interpret=auto_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("ngroups", "fns", "tile"))
+def segment_minmax_tiles(gidx, vals, n_rows, ngroups: int, fns: tuple, tile: int = 256):
+    return _segment_minmax_tiles(gidx, vals, n_rows, ngroups, fns, tile=tile, interpret=auto_interpret())
+
+
+def project_tiles(table, descrs, tile: int = 256):
+    return _project_tiles(table, descrs, tile=tile, interpret=auto_interpret())
 
 
 def filter_select(table, pred_col: int, threshold: float, sel_cols: tuple, tile: int = 256):

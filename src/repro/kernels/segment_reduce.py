@@ -1,0 +1,140 @@
+"""Segment reductions for per-morsel partial aggregation (pushdown R9 on
+the accelerator).
+
+``GroupState`` factorizes a morsel's key columns into dense group ids; these
+kernels then fold the morsel's value columns into per-group accumulators on
+the TPU, using the same one-hot MXU pattern as ``filter_select``:
+
+  * **segment_sum_tiles** — per-tile one-hot matmul ``onehot(G, T) @ limbs
+    (T, S)`` accumulated across the grid.  Value columns arrive decomposed
+    into **8-bit limbs widened to int32** (8 limbs for int64, 4 for int32;
+    ``repro.core.backend`` encodes): each limb sum over a whole 262144-row
+    morsel stays below 2^26, so int32 accumulation is exact and the host
+    recombines ``Σ limb_sum_k << 8k`` into the int64 accumulator — the
+    result is bit-identical to numpy's sequential ``np.add.at`` including
+    int64 wraparound.  Group **counts** (a row-sum of the one-hot matrix)
+    ride along in the same pass.
+  * **segment_minmax_tiles** — per-group min/max via a masked broadcast
+    reduce (VPU): ``where(onehot, vals, sentinel)`` reduced over the tile
+    axis, accumulated across tiles with ``minimum``/``maximum``.  Exact for
+    float32 (comparisons only, no arithmetic) and int32.
+
+Group ids ≥ the padded group count never occur (the backend caps
+eligibility at ``ngroups <= G``); padding **rows** are masked with the
+``n_rows`` bound, so they contribute zero / sentinel to every group.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["segment_sum_tiles", "segment_minmax_tiles", "SUM_ROW_CAP"]
+
+# 8-bit limbs: |limb| <= 255 (top limb signed, in [-128, 127]), so a sum over
+# SUM_ROW_CAP rows is < 2^26 — comfortably exact in the int32 accumulator.
+SUM_ROW_CAP = 262144
+
+
+def _onehot(gidx_ref, nvalid_ref, ngroups: int, tile: int):
+    rows = pl.program_id(0) * tile + jax.lax.broadcasted_iota(jnp.int32, (tile,), 0)
+    valid = rows < nvalid_ref[0]
+    giota = jax.lax.broadcasted_iota(jnp.int32, (ngroups, tile), 0)
+    return (gidx_ref[...][None, :] == giota) & valid[None, :]
+
+
+def _sum_kernel(nvalid_ref, gidx_ref, limb_ref, sum_ref, cnt_ref, *, ngroups, tile):
+    onehot = _onehot(gidx_ref, nvalid_ref, ngroups, tile).astype(jnp.int32)
+    tile_sums = jax.lax.dot_general(
+        onehot, limb_ref[...], (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    tile_cnt = onehot.sum(axis=1)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    sum_ref[...] += tile_sums
+    cnt_ref[...] += tile_cnt
+
+
+def segment_sum_tiles(gidx, limbs, n_rows, ngroups: int, tile: int = 256, interpret: bool = False):
+    """gidx: (N,) int32 in [0, ngroups); limbs: (N, S) int32 8-bit limb
+    planes; rows >= n_rows are padding.  Returns (limb sums (ngroups, S)
+    int32, counts (ngroups,) int32)."""
+    n, s = limbs.shape
+    assert n % tile == 0, (n, tile)
+    kernel = functools.partial(_sum_kernel, ngroups=ngroups, tile=tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile, s), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ngroups, s), lambda i: (0, 0)),
+            pl.BlockSpec((ngroups,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ngroups, s), jnp.int32),
+            jax.ShapeDtypeStruct((ngroups,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(n_rows, jnp.int32).reshape(1), gidx, limbs)
+
+
+def _minmax_kernel(nvalid_ref, gidx_ref, val_ref, out_ref, *, fns, ngroups, tile, sentinels):
+    onehot = _onehot(gidx_ref, nvalid_ref, ngroups, tile)
+    vals = val_ref[...]  # (tile, M)
+    cols = []
+    for j, fn in enumerate(fns):
+        sent = sentinels[j]
+        masked = jnp.where(onehot, vals[:, j][None, :], sent)  # (G, tile)
+        cols.append(masked.min(axis=1) if fn == "min" else masked.max(axis=1))
+    tile_red = jnp.stack(cols, axis=1)  # (G, M)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        out_ref[...] = jnp.stack(
+            [jnp.full((out_ref.shape[0],), sentinels[j], out_ref.dtype) for j in range(len(fns))], axis=1
+        )
+
+    cur = out_ref[...]
+    combined = []
+    for j, fn in enumerate(fns):
+        op = jnp.minimum if fn == "min" else jnp.maximum
+        combined.append(op(cur[:, j], tile_red[:, j]))
+    out_ref[...] = jnp.stack(combined, axis=1)
+
+
+def segment_minmax_tiles(gidx, vals, n_rows, ngroups: int, fns, tile: int = 256, interpret: bool = False):
+    """gidx: (N,) int32; vals: (N, M) float32 or int32; ``fns[j]`` is "min"
+    or "max" for column j.  Returns per-group reductions (ngroups, M); groups
+    with no rows hold the identity sentinel (+inf / -inf / int32 extremes)."""
+    n, m = vals.shape
+    assert n % tile == 0, (n, tile)
+    fns = tuple(fns)
+    if vals.dtype == jnp.int32:
+        lo, hi = -(2**31), 2**31 - 1
+    else:
+        lo, hi = -jnp.inf, jnp.inf
+    sentinels = tuple(hi if fn == "min" else lo for fn in fns)
+    kernel = functools.partial(_minmax_kernel, fns=fns, ngroups=ngroups, tile=tile, sentinels=sentinels)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ngroups, m), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ngroups, m), vals.dtype),
+        interpret=interpret,
+    )(jnp.asarray(n_rows, jnp.int32).reshape(1), gidx, vals)

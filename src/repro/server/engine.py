@@ -19,7 +19,7 @@ import time
 
 from repro.core.dag import Dag, Node
 from repro.core.errors import ResourceNotFound, TokenError
-from repro.core.executor import ExecutorConfig, execute_parallel
+from repro.core.executor import ExecutorConfig, ExecutorStats, execute_parallel
 from repro.core.operators import execute
 from repro.core.pushdown import optimize
 from repro.core.sdf import StreamingDataFrame
@@ -65,6 +65,9 @@ class SDFEngine:
         # morsel-executor configuration (worker count, morsel rows, compute
         # backend); num_workers=0 falls back to the reference pull chain.
         self.executor = executor if executor is not None else ExecutorConfig()
+        # stats of the most recent parallel COOK (tuned morsel size etc.);
+        # entries land as the lazy result stream is consumed
+        self.last_executor_stats: ExecutorStats | None = None
         self._flows: dict = {}
         self._lock = threading.Lock()
 
@@ -120,7 +123,9 @@ class SDFEngine:
 
         if self.executor.num_workers <= 0:
             return execute(dag, resolver)  # reference single-threaded pull chain
-        return execute_parallel(dag, resolver, self.executor)
+        stats = ExecutorStats()
+        self.last_executor_stats = stats
+        return execute_parallel(dag, resolver, self.executor, stats=stats)
 
     def _remote(self, node: Node) -> StreamingDataFrame:
         if self.remote_pull is None:
@@ -176,6 +181,12 @@ class SDFEngine:
                 fid: {"pulls": f.pulls, "rows_out": f.rows_out, "expires_at": f.expires_at}
                 for fid, f in self._flows.items()
             }
+
+    def executor_stats(self) -> dict:
+        """Morsel-executor observability for the most recent parallel COOK:
+        per-pipeline morsel counts and the (auto-)tuned morsel size."""
+        st = self.last_executor_stats
+        return st.to_dict() if st is not None else {"pipelines": []}
 
     # -- DESCRIBE path ------------------------------------------------------------
     def describe_uri(self, uri_str: str, subject: str | None = None) -> dict:

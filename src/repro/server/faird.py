@@ -209,7 +209,15 @@ class FairdServer:
             channel.send(framing.OK, self._hello(header))
             return False
         if verb == "PING":
-            channel.send(framing.OK, {"authority": self.authority, "uptime": time.time() - self.started_at, "stats": self.stats})
+            channel.send(
+                framing.OK,
+                {
+                    "authority": self.authority,
+                    "uptime": time.time() - self.started_at,
+                    "stats": self.stats,
+                    "executor": self.engine.executor_stats(),
+                },
+            )
             return False
         if verb == "GET":
             self._authorize(header, "GET")

@@ -1,8 +1,11 @@
 """numpy ↔ pallas backend parity: the two compute backends must produce
-**byte-identical** RecordBatches for filter / select / aggregate pipelines
-over randomized schemas.  Skipped cleanly when jax is absent (the pallas
-backend then falls back to numpy everywhere, making the comparison vacuous).
-"""
+**byte-identical** RecordBatches — filter/select over every supported
+predicate dtype (float32/int32/int64) and comparison (< <= > >= == !=),
+multi-dtype projections (f64/i64/u8/f16/bool ride through the bit-plane
+kernel), project arithmetic, and segment-reduce aggregation — including
+``-0.0``, NaN payloads, and full-range int64.  Skipped cleanly when jax is
+absent (the pallas backend then falls back to numpy everywhere, making the
+comparison vacuous)."""
 
 import numpy as np
 import pytest
@@ -10,23 +13,30 @@ import pytest
 jax = pytest.importorskip("jax")
 
 from repro.core.backend import get_backend  # noqa: E402
-from repro.core.batch import RecordBatch  # noqa: E402
+from repro.core.batch import Column, RecordBatch  # noqa: E402
 from repro.core.dag import Dag  # noqa: E402
 from repro.core.executor import ExecutorConfig, execute_parallel  # noqa: E402
 from repro.core.expr import col  # noqa: E402
+from repro.core.operators import GroupState, project_schema  # noqa: E402
 from repro.core.sdf import StreamingDataFrame  # noqa: E402
 
 N_ROWS = 700  # spans multiple kernel tiles (256) incl. a ragged tail
 
 
 def _random_batch(rng, n=N_ROWS):
-    """Random schema: a shuffled mix of fixed-width dtypes + a string key."""
+    """Random schema: a shuffled mix of fixed-width dtypes + a string key.
+    The float32 column carries -0.0; int64 spans the full 64-bit range."""
+    f32 = rng.standard_normal(n).astype(np.float32)
+    f32[::97] = -0.0
     data = {
-        "f32_a": rng.standard_normal(n).astype(np.float32),
+        "f32_a": f32,
         "f32_b": (rng.standard_normal(n) * 3).astype(np.float32),
         "f64_c": rng.standard_normal(n),
-        "i64_d": rng.integers(-50, 50, n),
+        "i64_d": rng.integers(-(2**62), 2**62, n),
         "i32_e": rng.integers(0, 9, n).astype(np.int32),
+        "u8_f": rng.integers(0, 255, n).astype(np.uint8),
+        "f16_g": rng.standard_normal(n).astype(np.float16),
+        "bool_h": rng.integers(0, 2, n).astype(bool),
         "tag": np.asarray([f"g{i}" for i in rng.integers(0, 6, n)]),
     }
     names = list(data)
@@ -53,6 +63,9 @@ def _column_bytes(batch):
 
 
 def _assert_byte_identical(a: RecordBatch, b: RecordBatch):
+    if a is None or b is None:
+        assert a is b
+        return
     assert a.schema.to_json() == b.schema.to_json()
     assert a.num_rows == b.num_rows
     ab, bb = _column_bytes(a), _column_bytes(b)
@@ -65,13 +78,18 @@ def _run(dag, batch, backend):
     return execute_parallel(dag, lambda n: _sdf(batch), cfg).collect()
 
 
+# ---------------------------------------------------------------------------
+# fused filter+select
+# ---------------------------------------------------------------------------
 @pytest.mark.parametrize("seed", [0, 1, 2])
 @pytest.mark.parametrize(
     "pred_col,sel_cols",
     [
-        ("f32_a", ["f32_a", "f32_b"]),  # all-f32: pallas fused kernel eligible
+        ("f32_a", ["f32_a", "f32_b"]),  # all-f32 fused kernel
         ("f64_c", ["f64_c", "i64_d"]),  # f64 predicate: numpy fallback
         ("i64_d", ["f32_a", "tag"]),  # string in projection: numpy fallback
+        ("i64_d", ["i64_d", "f64_c", "u8_f"]),  # i64 predicate, mixed planes
+        ("i32_e", ["i32_e", "f16_g", "bool_h"]),  # i32 predicate, narrow cols
     ],
 )
 def test_filter_select_parity(seed, pred_col, sel_cols):
@@ -84,28 +102,96 @@ def test_filter_select_parity(seed, pred_col, sel_cols):
     _assert_byte_identical(_run(dag, batch, "numpy"), _run(dag, batch, "pallas"))
 
 
-@pytest.mark.parametrize("seed", [3, 4])
-@pytest.mark.parametrize("key", ["i32_e", "tag"])
-def test_filter_aggregate_parity(seed, key):
-    batch = _random_batch(np.random.default_rng(seed))
-    bld = Dag.build()
-    s = bld.source("dacp://h:1/d")
-    f = bld.add("filter", {"predicate": col("f32_a") > -0.5}, [s])
-    a = bld.add(
-        "aggregate",
-        {
-            "keys": [key],
-            "aggs": {
-                "n": {"fn": "count"},
-                "s64": {"fn": "sum", "column": "i64_d"},
-                "m": {"fn": "mean", "column": "f64_c"},
-                "lo": {"fn": "min", "column": "f32_b"},
-            },
-        },
-        [f],
+@pytest.mark.parametrize("op", ["lt", "le", "gt", "ge", "eq", "ne"])
+@pytest.mark.parametrize("pred_col,threshold", [("f32_a", 0.25), ("i32_e", 4), ("i64_d", 0)])
+def test_comparison_set_parity(op, pred_col, threshold):
+    """Every comparison × predicate dtype must dispatch AND stay
+    byte-identical (eq/ne exercise the padded-tail row masking)."""
+    batch = _random_batch(np.random.default_rng(3))
+    backend = get_backend("pallas")
+    pred = getattr(col(pred_col), f"__{op}__")(threshold)
+    before = backend.kernel_calls
+    got = backend.filter_select(batch, pred, [pred_col, "f32_b"])
+    assert backend.kernel_calls == before + 1, f"{op} on {pred_col} did not dispatch"
+    ref = get_backend("numpy").filter_select(batch, pred, [pred_col, "f32_b"])
+    _assert_byte_identical(got, ref)
+
+
+def test_eq_matches_exact_int64_value():
+    batch = _random_batch(np.random.default_rng(11))
+    target = int(batch.column("i64_d").values[123])
+    backend = get_backend("pallas")
+    before = backend.kernel_calls
+    got = backend.filter_select(batch, col("i64_d") == target, ["i64_d"])
+    assert backend.kernel_calls == before + 1
+    ref = get_backend("numpy").filter_select(batch, col("i64_d") == target, ["i64_d"])
+    _assert_byte_identical(got, ref)
+    assert got.num_rows >= 1
+
+
+def test_negative_zero_is_bit_exact():
+    """-0.0 must survive the kernel with its sign bit (parity means parity —
+    the old MXU float path normalized it to +0.0)."""
+    data = np.asarray([-0.0, 1.0, -0.0, -1.0, 0.0] * 60, np.float32)
+    batch = RecordBatch.from_pydict({"a": data, "b": data[::-1].copy()})
+    backend = get_backend("pallas")
+    before = backend.kernel_calls
+    out = backend.filter_select(batch, col("a") <= 0.0, ["a", "b"])
+    assert backend.kernel_calls == before + 1
+    ref = get_backend("numpy").filter_select(batch, col("a") <= 0.0, ["a", "b"])
+    _assert_byte_identical(out, ref)
+    assert np.signbit(out.column("a").values).any()
+
+
+def test_nonfinite_dispatches_bit_exact():
+    """NaN/Inf no longer force a fallback: integer bit-plane compaction
+    moves payloads verbatim and float compares keep IEEE NaN semantics."""
+    backend = get_backend("pallas")
+    data = np.asarray([1.0, np.inf, -1.0, np.nan, 2.0] * 60, np.float32)
+    batch = RecordBatch.from_pydict({"a": data, "b": data[::-1].copy()})
+    before = backend.kernel_calls
+    for pred in (col("a") > 0.5, col("a") != 1.0, col("a") <= 0.5):
+        out = backend.filter_select(batch, pred, ["a", "b"])
+        ref = get_backend("numpy").filter_select(batch, pred, ["a", "b"])
+        _assert_byte_identical(out, ref)
+    assert backend.kernel_calls == before + 3
+
+
+@pytest.mark.parametrize(
+    "threshold",
+    [5, np.int64(5), np.float32(0.5), np.float16(0.5), np.float64(0.25)],
+)
+def test_numpy_typed_literals_dispatch(threshold):
+    """Literal dtype is normalized before the representability test: an
+    integer-typed or numpy-scalar literal against a float32 column must not
+    be rejected when exactly representable (regression: ``col > 5``)."""
+    batch = _random_batch(np.random.default_rng(5))
+    backend = get_backend("pallas")
+    before = backend.kernel_calls
+    got = backend.filter_select(batch, col("f32_a") > threshold, ["f32_a"])
+    assert backend.kernel_calls == before + 1, f"literal {threshold!r} did not dispatch"
+    ref = get_backend("numpy").filter_select(batch, col("f32_a") > threshold, ["f32_a"])
+    _assert_byte_identical(got, ref)
+
+
+def test_float_literal_on_int_column_rewrites():
+    """``i32 > 2.5`` rewrites to the equivalent integer comparison and
+    dispatches; ``i32 == 2.5`` (a constant mask) falls back."""
+    batch = _random_batch(np.random.default_rng(6))
+    backend = get_backend("pallas")
+    nref = get_backend("numpy")
+    before = backend.kernel_calls
+    for pred in (col("i32_e") > 2.5, col("i32_e") <= 2.5, col("i32_e") < 4.5, col("i32_e") >= 4.5):
+        _assert_byte_identical(
+            backend.filter_select(batch, pred, ["i32_e"]), nref.filter_select(batch, pred, ["i32_e"])
+        )
+    assert backend.kernel_calls == before + 4
+    before = backend.kernel_calls
+    _assert_byte_identical(
+        backend.filter_select(batch, col("i32_e") == 2.5, ["i32_e"]),
+        nref.filter_select(batch, col("i32_e") == 2.5, ["i32_e"]),
     )
-    dag = bld.finish(a)
-    _assert_byte_identical(_run(dag, batch, "numpy"), _run(dag, batch, "pallas"))
+    assert backend.kernel_calls == before  # constant mask → numpy
 
 
 def test_pallas_kernel_actually_dispatches():
@@ -123,22 +209,183 @@ def test_pallas_kernel_actually_dispatches():
     assert backend.kernel_calls > before
 
 
-def test_pallas_falls_back_on_unsupported_dtype():
+def test_pallas_falls_back_on_unsupported_shapes():
+    """f64 predicates, masked columns, and var-width projections stay on the
+    (bit-identical) numpy path."""
     backend = get_backend("pallas")
     batch = _random_batch(np.random.default_rng(8))
     before = backend.kernel_calls
-    out = backend.filter_select(batch, col("i64_d") > 0, ["i64_d", "f64_c"])
-    assert backend.kernel_calls == before  # int64 predicate → numpy fallback
-    ref = get_backend("numpy").filter_select(batch, col("i64_d") > 0, ["i64_d", "f64_c"])
+    out = backend.filter_select(batch, col("f64_c") > 0, ["i64_d", "f64_c"])
+    assert backend.kernel_calls == before  # f64 predicate → numpy fallback
+    ref = get_backend("numpy").filter_select(batch, col("f64_c") > 0, ["i64_d", "f64_c"])
     _assert_byte_identical(out, ref)
 
+    out = backend.filter_select(batch, col("i64_d") > 0, ["tag"])
+    assert backend.kernel_calls == before  # string projection → fallback
+    _assert_byte_identical(out, get_backend("numpy").filter_select(batch, col("i64_d") > 0, ["tag"]))
 
-def test_pallas_nonfinite_falls_back():
+    masked = Column.from_values(batch.schema.field("f32_a").dtype, batch.column("f32_a").values)
+    masked.validity = np.ones(batch.num_rows, bool)
+    vb = batch.with_column(batch.schema.field("f32_a"), masked)
+    out = backend.filter_select(vb, col("f32_a") > 0.0, ["f32_a"])
+    assert backend.kernel_calls == before  # validity mask → fallback
+
+
+# ---------------------------------------------------------------------------
+# project arithmetic
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 4])
+@pytest.mark.parametrize(
+    "exprs,keep",
+    [
+        ({"y": col("f32_a") * 2.0 + 1.1}, True),
+        ({"y": col("f32_a") / col("f32_b"), "z": col("f32_a") - col("f32_b") * 0.5}, True),
+        ({"w": col("i32_e") * 3 - 7}, False),
+        ({"y": (col("f32_a") + col("f32_b")) * (col("f32_a") - 2.0)}, True),
+        ({"y": col("f32_a") * 2.5, "d": col("f64_c") + 1.0}, True),  # f64 expr → per-expr fallback
+    ],
+)
+def test_project_parity(seed, exprs, keep):
+    batch = _random_batch(np.random.default_rng(seed))
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    p = bld.add("project", {"exprs": exprs, "keep": keep}, [s])
+    dag = bld.finish(p)
+    _assert_byte_identical(_run(dag, batch, "numpy"), _run(dag, batch, "pallas"))
+
+
+def test_project_kernel_dispatches():
+    batch = _random_batch(np.random.default_rng(9))
     backend = get_backend("pallas")
-    data = np.asarray([1.0, np.inf, -1.0, np.nan, 2.0] * 60, np.float32)
-    batch = RecordBatch.from_pydict({"a": data, "b": data[::-1].copy()})
+    exprs = {"y": col("f32_a") * 2.0 + 1.0}
+    out_schema = project_schema(batch.schema, exprs, True)
     before = backend.kernel_calls
-    out = backend.filter_select(batch, col("a") > 0.5, ["a", "b"])
-    assert backend.kernel_calls == before  # Inf/NaN would corrupt the MXU path
-    ref = get_backend("numpy").filter_select(batch, col("a") > 0.5, ["a", "b"])
-    _assert_byte_identical(out, ref)
+    got = backend.project(batch, exprs, out_schema)
+    assert backend.kernel_calls == before + 1
+    ref = get_backend("numpy").project(batch, exprs, out_schema)
+    _assert_byte_identical(got, ref)
+
+
+def test_project_division_by_zero_parity():
+    a = np.asarray([1.0, -1.0, 0.0, 2.0] * 70, np.float32)
+    b = np.asarray([0.0, 0.0, 0.0, 1.0] * 70, np.float32)
+    batch = RecordBatch.from_pydict({"a": a, "b": b})
+    exprs = {"q": col("a") / col("b")}
+    out_schema = project_schema(batch.schema, exprs, True)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        got = get_backend("pallas").project(batch, exprs, out_schema)
+        ref = get_backend("numpy").project(batch, exprs, out_schema)
+    _assert_byte_identical(got, ref)  # inf and nan bit patterns included
+
+
+# ---------------------------------------------------------------------------
+# aggregation (segment-reduce kernel)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [3, 4])
+@pytest.mark.parametrize("key", ["i32_e", "tag"])
+def test_filter_aggregate_parity(seed, key):
+    batch = _random_batch(np.random.default_rng(seed))
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    f = bld.add("filter", {"predicate": col("f32_a") > -0.5}, [s])
+    a = bld.add(
+        "aggregate",
+        {
+            "keys": [key],
+            "aggs": {
+                "n": {"fn": "count"},
+                "s64": {"fn": "sum", "column": "i64_d"},
+                "m": {"fn": "mean", "column": "f64_c"},
+                "lo": {"fn": "min", "column": "f32_b"},
+                "hi": {"fn": "max", "column": "i32_e"},
+                "s8": {"fn": "sum", "column": "u8_f"},
+            },
+        },
+        [f],
+    )
+    dag = bld.finish(a)
+    _assert_byte_identical(_run(dag, batch, "numpy"), _run(dag, batch, "pallas"))
+
+
+def test_segment_reduce_kernel_dispatches():
+    batch = _random_batch(np.random.default_rng(10))
+    backend = get_backend("pallas")
+    st = GroupState(
+        ["i32_e"],
+        {"n": {"fn": "count"}, "s": {"fn": "sum", "column": "i64_d"}, "hi": {"fn": "max", "column": "i32_e"}},
+        "full",
+        batch.schema,
+        vectorized=True,
+        backend=backend,
+    )
+    before = backend.kernel_calls
+    st.update(batch)
+    assert backend.kernel_calls == before + 1
+    ref = GroupState(
+        ["i32_e"],
+        {"n": {"fn": "count"}, "s": {"fn": "sum", "column": "i64_d"}, "hi": {"fn": "max", "column": "i32_e"}},
+        "full",
+        batch.schema,
+        vectorized=True,
+    )
+    ref.update(batch)
+    assert st.key_rows == ref.key_rows
+    for name in st.acc:
+        assert np.array_equal(st.acc[name], ref.acc[name]), name
+
+
+def test_segment_reduce_int64_wraparound_parity():
+    """Limb recombination must reproduce numpy's int64 wraparound exactly
+    when a group's sum overflows."""
+    big = np.asarray([2**62, 2**62, 2**62, -(2**61)] * 64, np.int64)
+    keys = np.asarray([0, 1, 0, 1] * 64, np.int32)
+    batch = RecordBatch.from_pydict({"k": keys, "v": big})
+    aggs = {"s": {"fn": "sum", "column": "v"}}
+    backend = get_backend("pallas")
+    st = GroupState(["k"], aggs, "full", batch.schema, vectorized=True, backend=backend)
+    ref = GroupState(["k"], aggs, "full", batch.schema, vectorized=True)
+    before = backend.kernel_calls
+    with np.errstate(over="ignore"):
+        st.update(batch)
+        ref.update(batch)
+    assert backend.kernel_calls == before + 1
+    assert np.array_equal(st.acc["s"], ref.acc["s"])
+
+
+def test_segment_reduce_nan_minmax_falls_back():
+    """min/max over a float column containing NaN must not use the kernel
+    (XLA reduce NaN semantics are not trusted) — and still match numpy."""
+    vals = np.asarray([1.0, np.nan, -2.0, 3.0] * 64, np.float32)
+    keys = np.asarray([0, 0, 1, 1] * 64, np.int32)
+    batch = RecordBatch.from_pydict({"k": keys, "v": vals})
+    aggs = {"lo": {"fn": "min", "column": "v"}}
+    backend = get_backend("pallas")
+    st = GroupState(["k"], aggs, "full", batch.schema, vectorized=True, backend=backend)
+    ref = GroupState(["k"], aggs, "full", batch.schema, vectorized=True)
+    st.update(batch)
+    ref.update(batch)
+    assert np.array_equal(st.acc["lo"], ref.acc["lo"], equal_nan=True)
+
+
+def test_masked_keys_still_use_value_kernel():
+    """A validity mask on the key column forces the row-loop factorization,
+    but the segment-reduce kernel still folds the values."""
+    from repro.core import dtypes
+    from repro.core.schema import Field, Schema
+
+    schema = Schema([Field("k", dtypes.INT64), Field("v", dtypes.INT64)])
+    kc = Column.from_values(dtypes.INT64, [1, 1, 2, 2] * 64)
+    kc.validity = np.asarray([True, False, True, True] * 64)
+    vc = Column.from_values(dtypes.INT64, list(range(256)))
+    batch = RecordBatch(schema, [kc, vc])
+    backend = get_backend("pallas")
+    aggs = {"s": {"fn": "sum", "column": "v"}, "n": {"fn": "count"}}
+    st = GroupState(["k"], aggs, "full", schema, vectorized=True, backend=backend)
+    ref = GroupState(["k"], aggs, "full", schema, vectorized=True)
+    before = backend.kernel_calls
+    st.update(batch)
+    ref.update(batch)
+    assert backend.kernel_calls == before + 1
+    assert st.key_rows == ref.key_rows  # null key stays a distinct group
+    assert np.array_equal(st.acc["s"], ref.acc["s"])
+    assert np.array_equal(st.acc["n"], ref.acc["n"])

@@ -315,3 +315,166 @@ def test_vectorized_groupstate_matches_reference_factorization():
     st.update(bn)
     assert st.key_rows == [(7,), (None,), (5,)]
     assert st.acc["n"].tolist() == [1, 1, 1]
+
+
+# ---------------------------------------------------------------------------
+# masked-key aggregation (row-loop fallback path) and merge
+# ---------------------------------------------------------------------------
+def _masked_batch(keys, mask, vals):
+    from repro.core import dtypes
+    from repro.core.batch import Column
+    from repro.core.schema import Field, Schema
+
+    schema = Schema([Field("k", dtypes.INT64), Field("v", dtypes.INT64)])
+    kc = Column.from_values(dtypes.INT64, keys)
+    if mask is not None:
+        kc.validity = np.asarray(mask, dtype=bool)
+    return RecordBatch(schema, [kc, Column.from_values(dtypes.INT64, vals)])
+
+
+def _agg_state(schema, vectorized=True):
+    from repro.core.operators import GroupState
+
+    return GroupState(
+        ["k"],
+        {"n": {"fn": "count"}, "s": {"fn": "sum", "column": "v"}, "hi": {"fn": "max", "column": "v"}},
+        "full",
+        schema,
+        vectorized=vectorized,
+    )
+
+
+def test_masked_key_aggregate_matches_row_loop():
+    """Validity-masked keys take the row-loop factorization; null keys stay
+    distinct from the same-valued sentinel and from each other's groups."""
+    b = _masked_batch([7, 7, 5, 7], [True, False, True, True], [1, 2, 3, 4])
+    for vec in (False, True):
+        st = _agg_state(b.schema, vectorized=vec)
+        st.update(b)
+        assert st.key_rows == [(7,), (None,), (5,)]
+        assert st.acc["n"].tolist() == [2, 1, 1]
+        assert st.acc["s"].tolist() == [5, 2, 3]
+        assert st.acc["hi"].tolist() == [4, 2, 3]
+
+
+def test_all_masked_morsel_aggregate():
+    """A morsel whose key column is entirely masked folds into a single
+    null-key group (and survives the merge path)."""
+    b = _masked_batch([1, 2, 3], [False, False, False], [10, 20, 30])
+    st = _agg_state(b.schema)
+    st.update(b)
+    assert st.key_rows == [(None,)]
+    assert st.acc["n"].tolist() == [3]
+    assert st.acc["s"].tolist() == [60]
+
+    # merge an all-masked partial into a state that has never seen nulls
+    other = _agg_state(b.schema)
+    other.update(_masked_batch([1, 2], None, [5, 6]))
+    other.merge(st)
+    assert other.key_rows == [(1,), (2,), (None,)]
+    assert other.acc["s"].tolist() == [5, 6, 60]
+    assert other.acc["hi"].tolist() == [5, 6, 30]
+
+
+def test_mask_appearing_only_in_later_morsel():
+    """A validity mask that first appears mid-stream must merge into the
+    vectorized groups built from earlier (unmasked) morsels — end-to-end
+    through the parallel executor's fold/merge breaker."""
+    from repro.core.batch import concat_batches as _cat
+
+    b1 = _masked_batch([1, 2, 1, 2] * 100, None, list(range(400)))
+    b2 = _masked_batch([1, 9, 9, 1] * 50, [True, False, True, True] * 50, list(range(400, 600)))
+    full = _cat([b1, b2])
+
+    def gen():
+        yield b1
+        yield b2
+
+    sdf = StreamingDataFrame(b1.schema, gen)
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    a = bld.add(
+        "aggregate",
+        {"keys": ["k"], "aggs": {"n": {"fn": "count"}, "s": {"fn": "sum", "column": "v"}}},
+        [s],
+    )
+    dag = bld.finish(a)
+    ref = execute(dag, lambda n: sdf).collect().to_pydict()
+    for workers in (1, 4):
+        got = execute_parallel(dag, lambda n: sdf, _cfg(workers, morsel_rows=128)).collect().to_pydict()
+        assert got["k"] == ref["k"]  # first-seen order, null group included
+        assert got["n"] == ref["n"]
+        assert got["s"] == ref["s"]
+    assert None in ref["k"] and full.num_rows == 600
+
+
+# ---------------------------------------------------------------------------
+# adaptive morsel sizing
+# ---------------------------------------------------------------------------
+def test_auto_morsel_rows_results_and_stats():
+    from repro.core.executor import (
+        AUTO_MORSEL_MAX,
+        AUTO_MORSEL_MIN,
+        ExecutorStats,
+        get_last_stats,
+    )
+
+    full = _table(60_000)
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    f = bld.add("filter", {"predicate": col("x") > 0.0}, [s])
+    a = bld.add("aggregate", {"keys": ["k"], "aggs": {"n": {"fn": "count"}, "sx": {"fn": "sum", "column": "x"}}}, [f])
+    dag = bld.finish(a)
+    ref = execute(dag, lambda n: _sdf(full)).collect().to_pydict()
+
+    stats = ExecutorStats()
+    cfg = ExecutorConfig(num_workers=4, morsel_rows="auto", backend="numpy")
+    got = execute_parallel(dag, lambda n: _sdf(full), cfg, stats=stats).collect().to_pydict()
+    assert got["k"] == ref["k"]
+    assert got["n"] == ref["n"]
+    for g, r in zip(got["sx"], ref["sx"]):
+        assert g == pytest.approx(r)
+    assert stats.pipelines, "stats must record the aggregate pipeline"
+    for p in stats.pipelines:
+        assert p["auto"] is True
+        assert AUTO_MORSEL_MIN <= p["morsel_rows"] <= AUTO_MORSEL_MAX
+        assert p["morsel_rows"] % 4096 == 0
+        assert p["rows"] > 0
+    assert get_last_stats() is stats
+
+
+def test_morsel_rows_env_validation(monkeypatch):
+    from repro.core.executor import DEFAULT_MORSEL_ROWS
+
+    for bad in ("garbage", "0", "-5"):
+        monkeypatch.setenv("DACP_MORSEL_ROWS", bad)
+        with pytest.warns(UserWarning):
+            cfg = ExecutorConfig(num_workers=1)
+        assert cfg.morsel_rows == DEFAULT_MORSEL_ROWS
+    monkeypatch.setenv("DACP_MORSEL_ROWS", "auto")
+    assert ExecutorConfig(num_workers=1).morsel_rows == "auto"
+    monkeypatch.setenv("DACP_MORSEL_ROWS", "8192")
+    assert ExecutorConfig(num_workers=1).morsel_rows == 8192
+    monkeypatch.delenv("DACP_MORSEL_ROWS")
+    with pytest.raises(ValueError):
+        ExecutorConfig(num_workers=1, morsel_rows=0)
+    with pytest.raises(ValueError):
+        ExecutorConfig(num_workers=1, morsel_rows="sometimes")
+
+
+def test_dense_factorization_narrow_signed_keys():
+    """int8 keys spanning beyond the dtype's positive range must not wrap in
+    the sort-free dense factorization (regression: -100..100 span 201)."""
+    from repro.core import dtypes
+    from repro.core.batch import Column
+    from repro.core.operators import GroupState
+    from repro.core.schema import Field, Schema
+
+    schema = Schema([Field("k", dtypes.INT8)])
+    vals = [-100, 100, 50, -100, 100]
+    b = RecordBatch(schema, [Column.from_values(dtypes.INT8, vals)])
+    for vec in (False, True):
+        st = GroupState(["k"], {"n": {"fn": "count"}}, "full", schema, vectorized=vec)
+        st.update(b)
+        assert st.key_rows == [(-100,), (100,), (50,)], (vec, st.key_rows)
+        assert st.acc["n"].tolist() == [2, 2, 1]
