@@ -1,0 +1,134 @@
+"""Bench regression gate: compare a fresh ``benchmarks.json`` against the
+committed baseline and fail on >threshold regressions.
+
+    PYTHONPATH=src python benchmarks/compare.py \
+        [--baseline benchmarks/results/baseline.json] \
+        [--current benchmarks/results/benchmarks.json] \
+        [--threshold 0.25] [--update-baseline]
+
+What gates and what merely reports:
+
+  * **Gated** — within-run *ratio* metrics (``speedup_*``,
+    ``amplification``, ``byte_reduction``): both sides of each ratio are
+    measured in the same process on the same host, so they transfer between
+    the dev box that committed the baseline and the CI runner.  A gated
+    metric whose current value drops more than its threshold below baseline
+    fails the job.  Deterministic byte-count ratios (``amplification``,
+    ``byte_reduction``) gate at the strict ``threshold``; timing-derived
+    ratios (``speedup_*`` — quotients of sub-second one-shot measurements,
+    noisy on shared runners) gate at **2×** the threshold so a noisy
+    neighbor doesn't turn main red without a code change.
+  * **Reported only** — absolute throughput/latency (``rows_per_s_*``,
+    ``*_mbps``, ``*_s`` / ``*_us``): those track the runner's hardware at
+    least as much as the code, so they print in the delta table (regression
+    trajectory stays visible in the job log + artifact) without failing CI.
+
+New metrics (absent from baseline) and removed ones are listed, never
+fatal — ``--update-baseline`` refreshes the committed file after a
+deliberate change.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+_RESULTS = os.path.join(os.path.dirname(__file__), "results")
+_GATED_PREFIXES = ("speedup_",)
+_GATED_EXACT = {"amplification", "byte_reduction"}
+
+
+def _flatten(d: dict, prefix: str = "") -> dict:
+    out = {}
+    for k, v in d.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_flatten(v, prefix=f"{key}."))
+        elif isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[key] = float(v)
+    return out
+
+
+def _gated(key: str) -> bool:
+    leaf = key.rsplit(".", 1)[-1]
+    return leaf in _GATED_EXACT or any(leaf.startswith(p) for p in _GATED_PREFIXES)
+
+
+def _reported(key: str) -> bool:
+    leaf = key.rsplit(".", 1)[-1]
+    return "rows_per_s" in leaf or leaf.endswith(("_mbps", "_s", "_us"))
+
+
+def _metric_threshold(key: str, threshold: float) -> float:
+    """Deterministic byte-count ratios gate strictly; timing-derived
+    speedups get 2x slack (capped below 100%) against runner noise."""
+    leaf = key.rsplit(".", 1)[-1]
+    if leaf in _GATED_EXACT:
+        return threshold
+    return min(0.95, 2.0 * threshold)
+
+
+def compare(baseline: dict, current: dict, threshold: float) -> tuple:
+    """Returns (regressions, table rows, new keys, missing keys)."""
+    base, cur = _flatten(baseline), _flatten(current)
+    regressions, rows = [], []
+    for key in sorted(base):
+        if key not in cur:
+            continue
+        b, c = base[key], cur[key]
+        if not (_gated(key) or _reported(key)):
+            continue
+        delta = (c - b) / b if b else 0.0
+        gated = _gated(key)
+        # every gated metric is higher-better; *_s/_us timings are
+        # lower-better but report-only, so direction only matters here
+        regressed = gated and b > 0 and c < b * (1.0 - _metric_threshold(key, threshold))
+        rows.append((key, b, c, delta, "GATE" if gated else "info", "REGRESSED" if regressed else ""))
+        if regressed:
+            regressions.append(key)
+    new = sorted(set(cur) - set(base))
+    missing = sorted(k for k in set(base) - set(cur) if _gated(k))
+    return regressions, rows, new, missing
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--baseline", default=os.path.join(_RESULTS, "baseline.json"))
+    ap.add_argument("--current", default=os.path.join(_RESULTS, "benchmarks.json"))
+    ap.add_argument("--threshold", type=float, default=0.25, help="max fractional regression for gated metrics")
+    ap.add_argument("--update-baseline", action="store_true", help="copy current over the baseline and exit")
+    args = ap.parse_args(argv)
+
+    if args.update_baseline:
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline updated from {args.current}")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+
+    regressions, rows, new, missing = compare(baseline, current, args.threshold)
+
+    width = max((len(r[0]) for r in rows), default=10)
+    print(f"{'metric'.ljust(width)}  {'baseline':>14}  {'current':>14}  {'delta':>8}  kind")
+    for key, b, c, delta, kind, flag in rows:
+        print(f"{key.ljust(width)}  {b:14.4g}  {c:14.4g}  {delta:+7.1%}  {kind} {flag}")
+    if new:
+        print(f"\n# new metrics (not in baseline): {', '.join(new)}")
+    if missing:
+        print(f"# gated metrics missing from current run: {', '.join(missing)}")
+
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} gated metric(s) regressed >{args.threshold:.0%}: {', '.join(regressions)}")
+        return 1
+    print(f"\nOK: no gated metric regressed >{args.threshold:.0%} vs baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

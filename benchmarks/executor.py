@@ -12,6 +12,9 @@ executed by:
   * ``pallas4w`` — 4 workers with the pallas compute backend (only timed on
     a real TPU, or when DACP_BENCH_PALLAS=1 forces interpret mode; interpret
     numbers are correctness-indicative, not speed)
+  * ``spill4w``  — 4 workers with a deliberately tiny ``memory_budget`` so
+    the aggregate breaker grace-hash spills to disk: the overhead of the
+    memory-bounded mode (results stay byte-identical to in-memory)
 
 The acceptance bar for the executor refactor: ``4w`` ≥ 2x ``seed`` rows/s.
 On few-core GIL-bound CPU boxes the win comes mostly from the executor's
@@ -107,6 +110,11 @@ def run(rows: int = 400_000, verbose: bool = True) -> dict:
         "2w": ExecutorConfig(num_workers=2, morsel_rows=morsel, backend="numpy"),
         "4w": ExecutorConfig(num_workers=4, morsel_rows=morsel, backend="numpy"),
         "auto4w": ExecutorConfig(num_workers=4, morsel_rows="auto", backend="numpy"),
+        # grace-hash spill: a budget far below the ~100-group build state
+        # forces the aggregate through partitioned spill files — the cost of
+        # the memory-bounded mode relative to in-memory (same results,
+        # byte-identical)
+        "spill4w": ExecutorConfig(num_workers=4, morsel_rows=morsel, backend="numpy", memory_budget=4096),
     }
     if _pallas_timing_enabled():
         configs["pallas4w"] = ExecutorConfig(num_workers=4, morsel_rows=morsel, backend="pallas")
@@ -118,12 +126,18 @@ def run(rows: int = 400_000, verbose: bool = True) -> dict:
             sizes = [p["morsel_rows"] for p in exec_stats["pipelines"]]
             results["morsel_rows_auto"] = max(sizes) if sizes else None
             note += f",auto_morsel={results['morsel_rows_auto']}"
+        if cfg.memory_budget:
+            sp = exec_stats.get("spill", {})
+            results["spill_partitions"] = sp.get("partitions_written", 0)
+            results["spill_bytes"] = sp.get("bytes_spilled", 0)
+            note += f",spilled={sp.get('bytes_spilled', 0) / 1e6:.1f}MB/{sp.get('partitions_written', 0)}parts"
         emit(f"executor_{name}", 1e6 * rows / rps, note)
     if "rows_per_s_pallas4w" not in results:
         emit("executor_pallas4w", 0.0, "skipped (no TPU; set DACP_BENCH_PALLAS=1 to force interpret)")
     results["speedup_4w_vs_seed"] = results["rows_per_s_4w"] / results["rows_per_s_seed"]
     results["speedup_4w_vs_1w"] = results["rows_per_s_4w"] / results["rows_per_s_1w"]
     results["speedup_auto_vs_4w"] = results["rows_per_s_auto4w"] / results["rows_per_s_4w"]
+    results["speedup_spill_vs_4w"] = results["rows_per_s_spill4w"] / results["rows_per_s_4w"]
     return results
 
 
@@ -135,3 +149,4 @@ if __name__ == "__main__":
     print(f"# 4 workers vs seed path: {out['speedup_4w_vs_seed']:.2f}x rows/s")
     print(f"# 4 workers vs 1 worker : {out['speedup_4w_vs_1w']:.2f}x rows/s")
     print(f"# auto morsels vs static: {out['speedup_auto_vs_4w']:.2f}x rows/s (chose {out.get('morsel_rows_auto')})")
+    print(f"# spill (tiny budget) vs in-memory: {out['speedup_spill_vs_4w']:.2f}x rows/s")

@@ -33,8 +33,14 @@ Dispatchable ops:
                     + - * over int32 columns, python-scalar literals)
     segment_reduce  per-group partial folds: count always, sum for integer
                     columns (8-bit-limb exact, wraparound-identical to
-                    numpy), min/max for finite float32 and int32-safe
-                    integer columns; ≤ 256 groups per morsel
+                    numpy), min/max for finite float32, int32-safe integer,
+                    and int64/uint32 columns (the latter via a two-word
+                    hi/lo compare — two masked-reduce kernel passes, exact
+                    over the full 64-bit range); float sums and mean partial
+                    sums fold through an explicit **f64-accumulating
+                    reference path** (host-side — kernel lanes are 32-bit —
+                    counted in ``PallasBackend.f64_folds``) instead of
+                    silently falling back; ≤ 256 groups per morsel
 
 ``get_backend("auto")`` selects pallas only when jax reports a real TPU;
 interpret-mode Pallas on CPU is for correctness tests, not speed.
@@ -109,10 +115,12 @@ class ComputeBackend:
         """Per-group partial reductions for one factorized morsel.
 
         ``specs`` is ``[(state_name, fn, values), ...]`` with ``fn`` in
-        {count, sum, min, max} (``values`` is None for count).  Returns a
-        dict mapping the state names the backend accelerated to per-group
-        arrays of length ``ngroups``; callers scatter the rest with numpy.
-        The numpy backend accelerates nothing (``{}``)."""
+        {count, sum, fsum, min, max} (``values`` is None for count; ``fsum``
+        marks a float sum from a fresh state, foldable in the backend's
+        f64-accumulating reference path).  Returns a dict mapping the state
+        names the backend accelerated to per-group arrays of length
+        ``ngroups``; callers scatter the rest with numpy.  The numpy
+        backend accelerates nothing (``{}``)."""
         return self.kernel("segment_reduce")(self, gidx, ngroups, specs, n_rows)
 
 
@@ -208,6 +216,10 @@ class PallasBackend(ComputeBackend):
         self._disabled = False
         self._lock = threading.Lock()
         self.kernel_calls = 0  # observability: kernel dispatch count
+        # float sums folded through the f64-accumulating reference path
+        # (host-side; the kernels' 32-bit lanes cannot hold f64) — the
+        # explicit, counted successor of the old silent fallback
+        self.f64_folds = 0
 
     def _ops(self):
         """Import the jit'd kernel wrappers once; a failed import (no jax)
@@ -510,6 +522,36 @@ def _mm_eligible(values: np.ndarray, kind: str):
     return None
 
 
+def _mm_wide_eligible(values: np.ndarray):
+    """int64 column for the two-word min/max path, or None.  int64 passes
+    through; uint32 lifts exactly.  (uint64 stays on numpy — GroupState
+    accumulates it in uint64, and the signed two-word order would be wrong
+    past 2^63.)"""
+    dt = values.dtype
+    if dt.kind == "i" and dt.itemsize == 8:
+        return values
+    if dt.kind == "u" and dt.itemsize == 4:
+        return values.astype(np.int64)
+    return None
+
+
+_LO_SIGN = np.uint32(0x80000000)
+
+
+def _wide_words(v64: np.ndarray):
+    """(hi, lo') int32 words of an int64 column whose lexicographic
+    (signed hi, signed lo') order equals the int64 order: hi is the signed
+    top word, lo' the sign-flipped low word."""
+    hi = (v64 >> np.int64(32)).astype(np.int32)
+    lo = ((v64 & np.int64(0xFFFFFFFF)).astype(np.uint32) ^ _LO_SIGN).view(np.int32)
+    return hi, lo
+
+
+def _wide_decode(hi: np.ndarray, lo_s: np.ndarray) -> np.ndarray:
+    lo_u = (lo_s.view(np.uint32) ^ _LO_SIGN).astype(np.int64)
+    return (hi.astype(np.int64) << np.int64(32)) | lo_u
+
+
 @register_kernel("pallas", "segment_reduce")
 def _pl_segment_reduce(bk: PallasBackend, gidx, ngroups, specs, n_rows) -> dict:
     kernel_ops = bk._ops()
@@ -522,11 +564,15 @@ def _pl_segment_reduce(bk: PallasBackend, gidx, ngroups, specs, n_rows) -> dict:
     ):
         return {}
     sums: list = []  # (state name, values)
+    fsums: list = []  # (state name, f64 values) — host f64 reference path
     mms: dict = {"f32": [], "i32": []}  # kind -> [(state name, fn, col)]
+    wides: list = []  # (state name, fn, int64 col) — two-word min/max
     count_names: list = []
     for name, fn, values in specs:
         if fn == "count":
             count_names.append(name)
+        elif fn == "fsum":
+            fsums.append((name, values))
         elif fn == "sum":
             if values is not None and values.dtype.kind in "iub":
                 sums.append((name, values))
@@ -534,7 +580,11 @@ def _pl_segment_reduce(bk: PallasBackend, gidx, ngroups, specs, n_rows) -> dict:
             col = _mm_eligible(values, fn)
             if col is not None:
                 mms["f32" if col.dtype == np.float32 else "i32"].append((name, fn, col))
-    if not (sums or count_names or mms["f32"] or mms["i32"]):
+            else:
+                wide = _mm_wide_eligible(values)
+                if wide is not None:
+                    wides.append((name, fn, wide))
+    if not (sums or count_names or mms["f32"] or mms["i32"] or wides or fsums):
         return {}
     tile = bk.tile
     n_pad = -(-n_rows // tile) * tile
@@ -542,6 +592,7 @@ def _pl_segment_reduce(bk: PallasBackend, gidx, ngroups, specs, n_rows) -> dict:
     g32 = np.zeros(n_pad, np.int32)
     g32[:n_rows] = np.asarray(gidx, np.int64)[:n_rows]
     out: dict = {}
+    kernel_used = False
     try:
         if sums or count_names:
             limb_tbl = np.zeros((n_pad, max(1, _SUM_LIMBS * len(sums))), np.int32)
@@ -554,6 +605,7 @@ def _pl_segment_reduce(bk: PallasBackend, gidx, ngroups, specs, n_rows) -> dict:
                 out[name] = _limbs_to_int64(s_res[:ngroups, _SUM_LIMBS * i : _SUM_LIMBS * (i + 1)])
             for name in count_names:
                 out[name] = c_res[:ngroups].astype(np.int64)
+            kernel_used = True
         for kind, entries in mms.items():
             if not entries:
                 continue
@@ -565,9 +617,45 @@ def _pl_segment_reduce(bk: PallasBackend, gidx, ngroups, specs, n_rows) -> dict:
             res = np.asarray(kernel_ops.segment_minmax_tiles(g32, tbl, n_rows, g_pad, fns, tile=tile))
             for j, (name, _fn, _c) in enumerate(entries):
                 out[name] = np.ascontiguousarray(res[:ngroups, j])
+            kernel_used = True
+        if wides:
+            # two-word compare: pass 1 reduces the signed hi words; pass 2
+            # reduces the sign-flipped lo words among only the rows whose hi
+            # word equals their group's extreme (others masked to the
+            # identity sentinel).  Lexicographic (hi, lo') == int64 order,
+            # and the empty-group sentinels decode to the int64 identities.
+            fns = tuple(fn for _n, fn, _c in wides)
+            hi_tbl = np.zeros((n_pad, len(wides)), np.int32)
+            lo_cols = []
+            for j, (_name, _fn, col) in enumerate(wides):
+                hi, lo = _wide_words(col)
+                hi_tbl[:n_rows, j] = hi
+                lo_cols.append((hi, lo))
+            h_res = np.asarray(kernel_ops.segment_minmax_tiles(g32, hi_tbl, n_rows, g_pad, fns, tile=tile))
+            lo_tbl = np.empty((n_pad, len(wides)), np.int32)
+            for j, (_name, fn, _col) in enumerate(wides):
+                sent = np.int32(2**31 - 1) if fn == "min" else np.int32(-(2**31))
+                lo_tbl[:, j] = sent
+                hi, lo = lo_cols[j]
+                at_extreme = hi == h_res[:, j][g32[:n_rows]]
+                lo_tbl[:n_rows, j] = np.where(at_extreme, lo, sent)
+            l_res = np.asarray(kernel_ops.segment_minmax_tiles(g32, lo_tbl, n_rows, g_pad, fns, tile=tile))
+            for j, (name, _fn, _col) in enumerate(wides):
+                out[name] = _wide_decode(h_res[:ngroups, j], np.ascontiguousarray(l_res[:ngroups, j]))
+            kernel_used = True
+        for name, values in fsums:
+            # f64-accumulating reference path: bit-identical to the numpy
+            # scatter because a fresh state's accumulators start at +0.0 and
+            # np.add.at adds this morsel's values in the same row order
+            acc = np.zeros(ngroups, np.float64)
+            np.add.at(acc, np.asarray(gidx, np.int64), np.asarray(values, np.float64))
+            out[name] = acc
     except Exception:
         return {}
-    bk.kernel_calls += 1
+    if kernel_used:
+        bk.kernel_calls += 1
+    if fsums:
+        bk.f64_folds += len(fsums)
     return out
 
 

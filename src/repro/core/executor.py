@@ -48,6 +48,18 @@ group differently run-to-run as boundaries move).  Each run's
 ``ExecutorStats`` (``get_last_stats()``) reports per-pipeline morsel counts
 and the tuned size.
 
+Memory budget: ``ExecutorConfig.memory_budget`` (env ``DACP_MEMORY_BUDGET``)
+bounds the combined bytes of all breaker build states in a run through a
+shared ``MemoryAccountant``.  When an aggregate's merged ``GroupState`` or
+a join's collected build side crosses the budget, the breaker switches to
+**grace-hash spill** (``repro.core.spill``): state/build batches partition
+to wire-framed temp files by key hash and partitions are processed one at a
+time (recursively re-partitioned while still over budget) — the morsel
+driver, reorder window, and deterministic merge order are untouched, and
+results stay byte-identical to in-memory execution.  Spill counters
+(partitions/batches/bytes written, recursion depth) ride on
+``ExecutorStats`` and the server PING response.
+
 Laziness contract: building the executor does no work; worker threads spin
 up on the first pull of the output SDF and wind down when it is exhausted
 or closed.
@@ -82,6 +94,13 @@ from repro.core.operators import (
 )
 from repro.core.schema import Schema
 from repro.core.sdf import StreamingDataFrame
+from repro.core.spill import (
+    ROWID_COL,
+    GraceHashAggregate,
+    MemoryAccountant,
+    collect_build,
+    spilled_join_stream,
+)
 
 __all__ = [
     "ExecutorConfig",
@@ -120,6 +139,50 @@ def _env_int(name: str, default: int, minimum: int) -> int:
     return v
 
 
+_BYTE_SUFFIX = {"k": 1 << 10, "m": 1 << 20, "g": 1 << 30}
+
+
+def _env_bytes(name: str, default: int) -> int:
+    """Validated byte-size env override: plain integers or ``256k`` /
+    ``256KB`` / ``0.5m`` / ``1g`` style suffixes.  Garbage or negative
+    values warn and fall back to ``default`` (the PR-3 env-knob pattern)."""
+    raw = os.environ.get(name)
+    if raw is None or raw.strip() == "":
+        return default
+    s = raw.strip().lower()
+    if s.endswith("b"):
+        s = s[:-1]
+    mult = 1
+    if s and s[-1] in _BYTE_SUFFIX:
+        mult = _BYTE_SUFFIX[s[-1]]
+        s = s[:-1]
+    try:
+        v = float(s) if "." in s else int(s)
+    except ValueError:
+        warnings.warn(f"{name}={raw!r} is not a byte size; using {default}", stacklevel=2)
+        return default
+    if v < 0:
+        warnings.warn(f"{name}={raw!r} is negative; using {default}", stacklevel=2)
+        return default
+    return int(v * mult)
+
+
+def _env_spill_dir() -> str | None:
+    """Validated spill-dir env override: a missing or unwritable directory
+    warns at config construction and falls back to the system temp dir
+    (None) instead of failing the first over-budget query mid-flight."""
+    raw = os.environ.get("DACP_SPILL_DIR")
+    if not raw:
+        return None
+    if not os.path.isdir(raw) or not os.access(raw, os.W_OK):
+        warnings.warn(
+            f"DACP_SPILL_DIR={raw!r} is not a writable directory; using the system temp dir",
+            stacklevel=2,
+        )
+        return None
+    return raw
+
+
 def _env_morsel_rows():
     raw = os.environ.get("DACP_MORSEL_ROWS")
     if raw is not None and raw.strip().lower() == "auto":
@@ -149,6 +212,14 @@ class ExecutorConfig:
     stream_depth  producer-queue depth used by the server when streaming
                   result frames (faird GET/COOK overlap; 0 disables).
     scan_workers  parallel file readers inside datasource scans.
+    memory_budget combined byte budget for breaker build states (aggregate
+                  GroupStates + join build sides) per run; crossing it
+                  switches the breaker to grace-hash spill-to-disk.  0 =
+                  unbounded (no spilling).  Env ``DACP_MEMORY_BUDGET``
+                  accepts ``262144`` / ``256KB`` / ``16m`` forms.
+    spill_dir     directory for spill partition files (None = the system
+                  temp dir; env ``DACP_SPILL_DIR``).
+    spill_fanout  partitions per grace-hash level (≥ 2).
     """
 
     num_workers: int = field(default_factory=default_workers)
@@ -158,6 +229,9 @@ class ExecutorConfig:
     prefetch_batches: int = 4
     stream_depth: int = 4
     scan_workers: int = field(default_factory=lambda: _env_int("DACP_SCAN_WORKERS", 4, 1))
+    memory_budget: int = field(default_factory=lambda: _env_bytes("DACP_MEMORY_BUDGET", 0))
+    spill_dir: str | None = field(default_factory=_env_spill_dir)
+    spill_fanout: int = 8
 
     def __post_init__(self) -> None:
         mr = self.morsel_rows
@@ -167,6 +241,10 @@ class ExecutorConfig:
             self.morsel_rows = "auto"
         elif mr < 1:
             raise ValueError(f"morsel_rows must be >= 1, got {mr}")
+        if self.memory_budget < 0:
+            raise ValueError(f"memory_budget must be >= 0 (0 = unbounded), got {self.memory_budget}")
+        if self.spill_fanout < 2:
+            raise ValueError(f"spill_fanout must be >= 2, got {self.spill_fanout}")
 
     @property
     def auto_morsels(self) -> bool:
@@ -255,9 +333,13 @@ class _MorselSizer:
 class ExecutorStats:
     """Per-run executor observability.  One entry per pipeline stage drive:
     ``{"morsel_rows": final size, "auto": bool, "morsels": n, "rows": n}``.
-    Filled in as each stage finishes (the output SDF is lazy)."""
+    Filled in as each stage finishes (the output SDF is lazy).  When the run
+    has a memory budget, ``to_dict()`` additionally carries the shared
+    accountant's ``"spill"`` counters (budget, bytes/partitions/batches
+    spilled, grace-hash recursion depth)."""
 
     pipelines: list = field(default_factory=list)
+    accountant: MemoryAccountant | None = None
 
     def record(self, sizer: _MorselSizer) -> None:
         self.pipelines.append(
@@ -275,7 +357,10 @@ class ExecutorStats:
         return self.pipelines[-1]["morsel_rows"] if self.pipelines else None
 
     def to_dict(self) -> dict:
-        return {"pipelines": list(self.pipelines)}
+        d = {"pipelines": list(self.pipelines)}
+        if self.accountant is not None:
+            d["spill"] = self.accountant.to_dict()
+        return d
 
 
 _last_stats: ExecutorStats | None = None
@@ -588,12 +673,15 @@ class _Compiler:
         cfg: ExecutorConfig,
         backend: ComputeBackend,
         stats: ExecutorStats | None = None,
+        acct: MemoryAccountant | None = None,
     ):
         self.dag = dag
         self.resolver = resolver
         self.cfg = cfg
         self.backend = backend
         self.stats = stats
+        # one accountant per run, shared by every breaker in the plan
+        self.acct = acct if acct is not None else MemoryAccountant(cfg.memory_budget)
         self._memo: dict = {}  # node id -> (branches, schema)
 
     def compile(self) -> StreamingDataFrame:
@@ -682,7 +770,17 @@ class _Compiler:
         if missing:
             raise SchemaError(f"aggregate keys missing from input: {missing}")
         out_schema = Schema(agg_out_fields(in_schema, keys, aggs, mode))
-        cfg, backend, stats = self.cfg, self.backend, self.stats
+        cfg, backend, stats, acct = self.cfg, self.backend, self.stats, self.acct
+        spillable = acct.enabled and GraceHashAggregate.supported(keys, aggs, mode, in_schema)
+        if acct.enabled and keys and not spillable:
+            # a keyless aggregate is a single bounded group — but a name
+            # collision with the reserved spill columns means this breaker
+            # runs UNBOUNDED despite the budget; never silently
+            warnings.warn(
+                f"aggregate on keys {keys} cannot grace-hash spill (reserved spill-column "
+                f"name collision); its state is NOT memory-budgeted",
+                stacklevel=2,
+            )
 
         def fold(ops, morsel):
             b = _apply_ops(ops, morsel)
@@ -697,11 +795,49 @@ class _Compiler:
 
         def agg_gen():
             # breaker: fold morsels into per-morsel partial states in
-            # parallel, merge them in morsel order (deterministic output)
+            # parallel, merge them in morsel order (deterministic output).
+            # Under a memory budget the merged state's accounted bytes are
+            # tracked; crossing the budget switches to grace-hash spill —
+            # the partial states (prefix first, then per-morsel) scatter to
+            # disk by key hash and re-merge per partition, byte-identically.
             total = GroupState(keys, aggs, mode, in_schema, vectorized=True)
-            for st in _run_ordered(branches, cfg, backend, fold, stats):
-                total.merge(st)
-            yield total.result(out_schema)
+            spiller = None
+            reserved = 0
+            try:
+                for st in _run_ordered(branches, cfg, backend, fold, stats):
+                    if spiller is not None:
+                        spiller.spill_state(st)
+                        continue
+                    total.merge(st)
+                    if spillable:
+                        nb = total.approx_nbytes()
+                        acct.adjust(nb - reserved)
+                        reserved = nb
+                        if acct.over():
+                            spiller = GraceHashAggregate(
+                                keys,
+                                aggs,
+                                mode,
+                                in_schema,
+                                out_schema,
+                                acct,
+                                backend=backend,
+                                morsel_rows=cfg.initial_morsel_rows(),
+                                fanout=cfg.spill_fanout,
+                                spill_dir=cfg.spill_dir,
+                            )
+                            spiller.spill_state(total)
+                            total = None
+                            acct.adjust(-reserved)
+                            reserved = 0
+                if spiller is None:
+                    yield total.result(out_schema)
+                else:
+                    yield spiller.result()
+            finally:
+                acct.adjust(-reserved)
+                if spiller is not None:
+                    spiller.close()
 
         return [_Branch(StreamingDataFrame(out_schema, agg_gen))], out_schema
 
@@ -711,6 +847,15 @@ class _Compiler:
         right_branches, rs = self._stream(node.inputs[1])
         schema, payload, _rename = join_schema(ls, rs, on)
 
+        if self.acct.enabled:
+            if ROWID_COL not in ls:
+                return self._compile_join_budgeted(left_branches, ls, right_branches, rs, on, payload, schema)
+            warnings.warn(
+                f"join probe schema contains the reserved column {ROWID_COL!r}; "
+                f"its build side is NOT memory-budgeted",
+                stacklevel=2,
+            )
+
         def build():
             rb = self._collect_stage(right_branches, rs)
             return rb, build_join_table(rb, on)
@@ -719,6 +864,62 @@ class _Compiler:
         for br in left_branches:
             br.specs.append(("probe", (once, on, payload, schema)))
         return left_branches, schema
+
+    def _compile_join_budgeted(self, left_branches, ls, right_branches, rs, on, payload, schema) -> tuple:
+        """Memory-budgeted join: the build side collects under the shared
+        accountant and grace-hash spills past the budget.  When the build
+        fits, probing stays **morsel-parallel** — a probe-spec stage over
+        the left stage's output (one extra stage hop vs the unbudgeted
+        fused path, the price of not knowing spill-vs-mem until the build
+        runs; left sources may be one-shot exchange pulls, so the decision
+        cannot be retried).  Only a spilled build degrades to the serial
+        partition-paired drive.  Collected results are byte-identical to
+        the fused in-memory probe either way."""
+        cfg, backend, stats, acct = self.cfg, self.backend, self.stats, self.acct
+
+        def build():
+            batches = _run_ordered(right_branches, cfg, backend, _apply_ops, stats)
+            return collect_build(
+                batches,
+                rs,
+                on,
+                acct,
+                fanout=cfg.spill_fanout,
+                spill_dir=cfg.spill_dir,
+            )
+
+        once = _Once(build)
+
+        class _MemTable:
+            """probe-spec adapter: .get() -> (build batch, table)."""
+
+            def get(self):
+                res = once.get()
+                assert res[0] == "mem"  # only consulted on the in-memory path
+                return res[1], res[2]
+
+        left_sdf = self._stage_sdf(left_branches, ls)
+
+        def join_gen():
+            res = once.get()
+            if res[0] == "mem":
+                probe_branches = [_Branch(left_sdf, [("probe", (_MemTable(), on, payload, schema))])]
+                yield from _run_ordered(probe_branches, cfg, backend, _apply_ops, stats)
+            else:
+                yield from spilled_join_stream(
+                    res[1],
+                    left_sdf.iter_batches(),
+                    on,
+                    payload,
+                    schema,
+                    ls,
+                    acct,
+                    morsel_rows=cfg.initial_morsel_rows(),
+                    fanout=cfg.spill_fanout,
+                    spill_dir=cfg.spill_dir,
+                )
+
+        return [_Branch(StreamingDataFrame(schema, join_gen))], schema
 
 
 def execute_parallel(
@@ -738,6 +939,8 @@ def execute_parallel(
     backend = get_backend(cfg.backend)
     if stats is None:
         stats = ExecutorStats()
+    acct = MemoryAccountant(cfg.memory_budget)
+    stats.accountant = acct
     with _last_stats_lock:
         _last_stats = stats
-    return _Compiler(dag, source_resolver, cfg, backend, stats).compile()
+    return _Compiler(dag, source_resolver, cfg, backend, stats, acct).compile()

@@ -50,6 +50,7 @@ __all__ = [
     "map_morsel",
     "join_schema",
     "build_join_table",
+    "join_probe_indices",
     "join_probe_morsel",
     "GroupState",
     "agg_out_fields",
@@ -412,8 +413,15 @@ class GroupState:
             else:
                 src_dt = self.in_schema.field(_agg_src(out, spec, self.mode)).dtype
                 if src_dt.is_integer:
-                    init = {"sum": 0, "min": np.iinfo(np.int64).max, "max": np.iinfo(np.int64).min}[fn]
-                    specs[out] = (init, np.int64)
+                    if fn in ("min", "max") and src_dt.name == "uint64":
+                        # int64 accumulation would wrap values past 2^63 and
+                        # compare them under signed order — min over
+                        # [1, 2^63+5] must be 1, not the wrapped negative
+                        init = {"min": np.iinfo(np.uint64).max, "max": 0}[fn]
+                        specs[out] = (init, np.uint64)
+                    else:
+                        init = {"sum": 0, "min": np.iinfo(np.int64).max, "max": np.iinfo(np.int64).min}[fn]
+                        specs[out] = (init, np.int64)
                 else:
                     init = {"sum": 0.0, "min": np.inf, "max": -np.inf}[fn]
                     specs[out] = (init, np.float64)
@@ -500,10 +508,18 @@ class GroupState:
             if len(cur) < ngroups:
                 self.acc[name] = np.concatenate([cur, np.full(ngroups - len(cur), init, dt)])
 
-    def _kernel_specs(self, batch: RecordBatch) -> list:
+    def _kernel_specs(self, batch: RecordBatch, fresh: bool = False) -> list:
         """(state name, fn, values) triples for ``backend.segment_reduce``.
         The backend accelerates the subset it can reproduce bit-exactly and
-        ``update`` scatters the remainder with numpy."""
+        ``update`` scatters the remainder with numpy.
+
+        Float sums (and mean partial sums) are tagged ``fsum`` when the
+        state is ``fresh`` (no groups yet — the executor's per-morsel fold):
+        starting from +0.0 accumulators, a backend may fold them in its
+        f64-accumulating reference path bit-identically.  A reused state
+        keeps the plain ``sum`` tag (sequential ``np.add.at`` into non-zero
+        accumulators has no order-free equivalent), which backends ignore.
+        """
         specs = []
         for out, spec in self.aggs.items():
             fn = spec["fn"]
@@ -513,27 +529,35 @@ class GroupState:
                 else:
                     specs.append((out, "count", None))
             elif fn == "mean":
-                # psum folds in float64 (never kernel-eligible); pcnt is a
-                # plain count (final mode: a sum of the partial counts)
+                # psum folds in float64 — fresh states expose it as an
+                # ``fsum``; pcnt is a plain count (final mode: a sum of the
+                # partial counts)
+                if fresh:
+                    psrc = f"{out}__psum" if self.mode == "final" else spec["column"]
+                    specs.append((f"{out}__psum", "fsum", np.asarray(batch.column(psrc).to_numpy(), np.float64)))
                 if self.mode == "final":
                     specs.append((f"{out}__pcnt", "sum", np.asarray(batch.column(f"{out}__pcnt").values)))
                 else:
                     specs.append((f"{out}__pcnt", "count", None))
             else:
                 vals = np.asarray(batch.column(_agg_src(out, spec, self.mode)).to_numpy())
-                specs.append((out, fn, vals))
+                if fn == "sum" and fresh and vals.dtype.kind == "f":
+                    specs.append((out, "fsum", np.asarray(vals, np.float64)))
+                else:
+                    specs.append((out, fn, vals))
         return specs
 
     def update(self, batch: RecordBatch) -> None:
         n = batch.num_rows
         if n == 0:
             return
+        fresh = not self.gids
         gidx = self._factorize(batch)
         self._grow()
         ngroups = len(self.gids)
         kres: dict = {}
         if self.backend is not None:
-            kres = self.backend.segment_reduce(gidx, ngroups, self._kernel_specs(batch), n) or {}
+            kres = self.backend.segment_reduce(gidx, ngroups, self._kernel_specs(batch, fresh), n) or {}
         counts = None
 
         def _counts():
@@ -555,16 +579,22 @@ class GroupState:
                 else:
                     self.acc[out] += _counts()
             elif fn == "mean":
-                pc = f"{out}__pcnt"
+                pc, ps = f"{out}__pcnt", f"{out}__psum"
                 if self.mode == "final":
-                    np.add.at(self.acc[f"{out}__psum"], gidx, np.asarray(batch.column(f"{out}__psum").values, np.float64))
+                    if ps in kres:
+                        self.acc[ps][:ngroups] += kres[ps]
+                    else:
+                        np.add.at(self.acc[ps], gidx, np.asarray(batch.column(ps).values, np.float64))
                     if pc in kres:
                         self.acc[pc][:ngroups] += kres[pc]
                     else:
                         np.add.at(self.acc[pc], gidx, np.asarray(batch.column(pc).values, np.int64))
                 else:
-                    vals = np.asarray(batch.column(spec["column"]).to_numpy(), dtype=np.float64)
-                    np.add.at(self.acc[f"{out}__psum"], gidx, vals)
+                    if ps in kres:
+                        self.acc[ps][:ngroups] += kres[ps]
+                    else:
+                        vals = np.asarray(batch.column(spec["column"]).to_numpy(), dtype=np.float64)
+                        np.add.at(self.acc[ps], gidx, vals)
                     if pc in kres:
                         self.acc[pc][:ngroups] += kres[pc]
                     else:
@@ -586,9 +616,15 @@ class GroupState:
         """Combine another partial state into this one (same keys/aggs/mode).
         Each of ``other``'s groups maps to a distinct group here, so the
         combine is a plain fancy-indexed binary op per accumulator."""
+        self.merge_indexed(other)
+        return self
+
+    def merge_indexed(self, other: "GroupState") -> np.ndarray:
+        """``merge``, returning the group index of each of ``other``'s groups
+        in this state (the spill path maps per-group metadata through it)."""
         m = len(other.key_rows)
         if m == 0:
-            return self
+            return np.zeros(0, np.int64)
         idx = self._intern_groups(other.key_rows)
         self._grow()
         for out, spec in self.aggs.items():
@@ -600,7 +636,19 @@ class GroupState:
                 op = {"sum": np.add, "count": np.add, "min": np.minimum, "max": np.maximum}[fn]
                 cur = self.acc[out]
                 cur[idx] = op(cur[idx], other.acc[out][:m])
-        return self
+        return idx
+
+    def approx_nbytes(self) -> int:
+        """Accounted size of this state: accumulator buffers plus an
+        estimate of the python-side group directory (dict slot + key tuple
+        + interned key values).  Used by the executor's memory budget — an
+        estimate is fine, the budget is a spill trigger, not an allocator."""
+        acc = sum(a.nbytes for a in self.acc.values())
+        per_group = 56  # dict entry + tuple header
+        for k in self.keys:
+            dt = self.in_schema.field(k).dtype
+            per_group += 24 if dt.is_varwidth else dt.width + 8
+        return acc + len(self.key_rows) * per_group
 
     def _key_column(self, f, vals: list) -> Column:
         """Key output column; null keys (masked input rows) materialize as a
@@ -681,22 +729,29 @@ def build_join_table(build: RecordBatch, on: list) -> dict:
     return table
 
 
-def join_probe_morsel(
-    batch: RecordBatch, build: RecordBatch, table: dict, on: list, payload: list, schema: Schema
-) -> RecordBatch | None:
-    """Probe one morsel against a prebuilt hash table; None when no matches."""
-    if batch.num_rows == 0:
-        return None
+def join_probe_indices(batch: RecordBatch, table: dict, on: list) -> tuple:
+    """(probe row indices, build row indices) of the matches of one morsel —
+    probe-major, build rows in build order within each probe row."""
     probe_keys = list(zip(*[batch.column(k).to_pylist() for k in on]))
     lidx, ridx = [], []
     for i, kt in enumerate(probe_keys):
         for j in table.get(kt, ()):
             lidx.append(i)
             ridx.append(j)
-    if not lidx:
+    return np.asarray(lidx, np.int64), np.asarray(ridx, np.int64)
+
+
+def join_probe_morsel(
+    batch: RecordBatch, build: RecordBatch, table: dict, on: list, payload: list, schema: Schema
+) -> RecordBatch | None:
+    """Probe one morsel against a prebuilt hash table; None when no matches."""
+    if batch.num_rows == 0:
         return None
-    lpart = batch.take(np.asarray(lidx, np.int64))
-    rpart = build.take(np.asarray(ridx, np.int64))
+    lidx, ridx = join_probe_indices(batch, table, on)
+    if len(lidx) == 0:
+        return None
+    lpart = batch.take(lidx)
+    rpart = build.take(ridx)
     cols = list(lpart.columns)
     for name in payload:
         cols.append(rpart.column(name))

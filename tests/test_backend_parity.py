@@ -389,3 +389,99 @@ def test_masked_keys_still_use_value_kernel():
     assert st.key_rows == ref.key_rows  # null key stays a distinct group
     assert np.array_equal(st.acc["s"], ref.acc["s"])
     assert np.array_equal(st.acc["n"], ref.acc["n"])
+
+
+# ---------------------------------------------------------------------------
+# PR 4: int64 min/max (two-word compare) + f64-accumulating float sums
+# ---------------------------------------------------------------------------
+def test_segment_reduce_int64_minmax_two_word_parity():
+    """Full-range int64 min/max dispatch through the two-pass hi/lo compare
+    and match numpy's scatter exactly (the old path fell back silently)."""
+    rng = np.random.default_rng(17)
+    vals = rng.integers(-(2**63), 2**63 - 1, 512, dtype=np.int64)
+    # force hi-word ties so the lo-word pass actually decides winners
+    vals[1::4] = vals[::4] | np.int64(1)
+    keys = rng.integers(0, 9, 512).astype(np.int32)
+    batch = RecordBatch.from_pydict({"k": keys, "v": vals})
+    aggs = {"lo": {"fn": "min", "column": "v"}, "hi": {"fn": "max", "column": "v"}}
+    backend = get_backend("pallas")
+    st = GroupState(["k"], aggs, "full", batch.schema, vectorized=True, backend=backend)
+    ref = GroupState(["k"], aggs, "full", batch.schema, vectorized=True)
+    before = backend.kernel_calls
+    st.update(batch)
+    ref.update(batch)
+    assert backend.kernel_calls == before + 1, "int64 min/max did not dispatch"
+    assert np.array_equal(st.acc["lo"], ref.acc["lo"])
+    assert np.array_equal(st.acc["hi"], ref.acc["hi"])
+
+
+def test_segment_reduce_uint32_minmax_parity():
+    """uint32 lifts exactly onto the two-word path (it never fit int32)."""
+    rng = np.random.default_rng(18)
+    vals = rng.integers(0, 2**32 - 1, 512, dtype=np.uint32)
+    keys = rng.integers(0, 5, 512).astype(np.int32)
+    batch = RecordBatch.from_pydict({"k": keys, "v": vals})
+    aggs = {"hi": {"fn": "max", "column": "v"}}
+    backend = get_backend("pallas")
+    st = GroupState(["k"], aggs, "full", batch.schema, vectorized=True, backend=backend)
+    ref = GroupState(["k"], aggs, "full", batch.schema, vectorized=True)
+    before = backend.kernel_calls
+    st.update(batch)
+    ref.update(batch)
+    assert backend.kernel_calls == before + 1
+    assert np.array_equal(st.acc["hi"], ref.acc["hi"])
+
+
+def test_float_sums_take_f64_reference_path():
+    """Float sums (and mean partial sums) from a fresh state no longer fall
+    back silently: the backend folds them in its f64-accumulating reference
+    path (counted in ``f64_folds``) bit-identically to the numpy scatter."""
+    batch = _random_batch(np.random.default_rng(19))
+    aggs = {
+        "sf": {"fn": "sum", "column": "f32_a"},
+        "sd": {"fn": "sum", "column": "f64_c"},
+        "m": {"fn": "mean", "column": "f64_c"},
+    }
+    backend = get_backend("pallas")
+    st = GroupState(["i32_e"], aggs, "full", batch.schema, vectorized=True, backend=backend)
+    ref = GroupState(["i32_e"], aggs, "full", batch.schema, vectorized=True)
+    before = backend.f64_folds
+    st.update(batch)
+    ref.update(batch)
+    assert backend.f64_folds == before + 3, "float sums fell back silently"
+    for name in st.acc:
+        assert np.array_equal(st.acc[name], ref.acc[name]), name
+
+
+def test_spill_composes_with_pallas_backend():
+    """Grace-hash spilling must not disable kernel acceleration: the
+    per-morsel folds still dispatch, and the spilled result stays
+    byte-identical to the numpy in-memory run."""
+    from repro.core.executor import ExecutorStats
+
+    batch = _random_batch(np.random.default_rng(20), n=2000)
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    a = bld.add(
+        "aggregate",
+        {
+            "keys": ["tag"],
+            "aggs": {
+                "n": {"fn": "count"},
+                "s64": {"fn": "sum", "column": "i64_d"},
+                "sf": {"fn": "sum", "column": "f32_a"},
+                "lo64": {"fn": "min", "column": "i64_d"},
+            },
+        },
+        [s],
+    )
+    dag = bld.finish(a)
+    ref = _run(dag, batch, "numpy")
+    backend = get_backend("pallas")
+    before = backend.kernel_calls
+    stats = ExecutorStats()
+    cfg = ExecutorConfig(num_workers=2, morsel_rows=200, backend="pallas", memory_budget=1)
+    got = execute_parallel(dag, lambda n: _sdf(batch), cfg, stats=stats).collect()
+    assert backend.kernel_calls > before, "spilling disabled kernel dispatch"
+    assert stats.to_dict()["spill"]["spills"] >= 1
+    _assert_byte_identical(got, ref)

@@ -1,0 +1,562 @@
+"""Memory-budgeted executor: grace-hash spill-to-disk breakers.
+
+The bar is **byte-identity**: for the same executor configuration, a run
+whose aggregate/join build state is forced to spill (and recursively
+re-partition) must produce bit-for-bit the same collected RecordBatch as
+the unbudgeted in-memory run — including float partial sums, first-seen
+group order, validity masks, and join output row order.  Plus: the spill
+files reuse the wire framing and clean themselves up on success, early
+close, and mid-stream errors; counters surface through ExecutorStats and
+the server PING."""
+
+import glob
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import dtypes
+from repro.core.batch import Column, RecordBatch
+from repro.core.dag import Dag
+from repro.core.errors import SchemaError
+from repro.core.executor import ExecutorConfig, ExecutorStats, execute_parallel
+from repro.core.expr import col
+from repro.core.schema import Field, Schema
+from repro.core.sdf import StreamingDataFrame
+from repro.core.spill import (
+    GraceHashAggregate,
+    MemoryAccountant,
+    SpillFile,
+    key_hashes,
+    partition_ids,
+)
+
+
+def _table(n=24_000, seed=0, keyspan=3000):
+    rng = np.random.default_rng(seed)
+    return RecordBatch.from_pydict(
+        {
+            "k": rng.integers(0, keyspan, n),
+            "x": rng.standard_normal(n),
+            "f": rng.standard_normal(n).astype(np.float32),
+            "i64": rng.integers(-(2**62), 2**62, n),
+            "tag": np.asarray([f"t{i % 53}" for i in range(n)]),
+        }
+    )
+
+
+def _sdf(batch, rows=2500):
+    def gen():
+        for s in range(0, batch.num_rows, rows):
+            yield batch.slice(s, s + rows)
+
+    return StreamingDataFrame(batch.schema, gen)
+
+
+def _column_bytes(batch):
+    out = {}
+    for f, c in zip(batch.schema, batch.columns):
+        if f.dtype.is_varwidth:
+            out[f.name] = (c.offsets.tobytes(), c.data.tobytes())
+        else:
+            out[f.name] = c.values.tobytes()
+        out[f.name + "#v"] = None if c.validity is None else c.validity.tobytes()
+    return out
+
+
+def _assert_byte_identical(a, b, ctx=""):
+    assert a.schema.to_json() == b.schema.to_json(), ctx
+    assert a.num_rows == b.num_rows, ctx
+    ab, bb = _column_bytes(a), _column_bytes(b)
+    for name in ab:
+        assert ab[name] == bb[name], f"{ctx}: column {name} differs"
+
+
+def _cfg(workers, budget=0, **kw):
+    kw.setdefault("morsel_rows", 1024)
+    kw.setdefault("backend", "numpy")
+    return ExecutorConfig(num_workers=workers, memory_budget=budget, **kw)
+
+
+def _agg_dag(keys=("k",), filter_pred=None):
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    up = s
+    if filter_pred is not None:
+        up = bld.add("filter", {"predicate": filter_pred}, [s])
+    a = bld.add(
+        "aggregate",
+        {
+            "keys": list(keys),
+            "aggs": {
+                "n": {"fn": "count"},
+                "sx": {"fn": "sum", "column": "x"},
+                "mf": {"fn": "mean", "column": "f"},
+                "lo64": {"fn": "min", "column": "i64"},
+                "hi64": {"fn": "max", "column": "i64"},
+            },
+        },
+        [up],
+    )
+    return bld.finish(a)
+
+
+# ---------------------------------------------------------------------------
+# accountant + env knob
+# ---------------------------------------------------------------------------
+def test_memory_accountant_arithmetic():
+    acct = MemoryAccountant(1000)
+    assert acct.enabled and not acct.over()
+    acct.adjust(800)
+    assert not acct.over()
+    acct.adjust(300)
+    assert acct.over()
+    acct.adjust(-2000)  # clamps at zero
+    assert acct.used() == 0 and not acct.over()
+    assert MemoryAccountant(0).enabled is False
+    d = acct.to_dict()
+    for key in ("memory_budget", "spills", "partitions_written", "batches_spilled", "bytes_spilled", "max_depth"):
+        assert key in d
+
+
+def test_memory_budget_env_forms(monkeypatch):
+    for raw, expect in [("262144", 262144), ("256KB", 262144), ("256k", 262144), ("16m", 16 << 20), ("1g", 1 << 30), ("0.5m", 524288)]:
+        monkeypatch.setenv("DACP_MEMORY_BUDGET", raw)
+        assert ExecutorConfig(num_workers=1).memory_budget == expect, raw
+    for bad in ("garbage", "-5", "12q"):
+        monkeypatch.setenv("DACP_MEMORY_BUDGET", bad)
+        with pytest.warns(UserWarning):
+            cfg = ExecutorConfig(num_workers=1)
+        assert cfg.memory_budget == 0
+    monkeypatch.delenv("DACP_MEMORY_BUDGET")
+    assert ExecutorConfig(num_workers=1).memory_budget == 0
+    with pytest.raises(ValueError):
+        ExecutorConfig(num_workers=1, memory_budget=-1)
+    with pytest.raises(ValueError):
+        ExecutorConfig(num_workers=1, spill_fanout=1)
+
+
+# ---------------------------------------------------------------------------
+# wire-framed spill files
+# ---------------------------------------------------------------------------
+def test_spill_file_roundtrip_morsel_sized(tmp_path):
+    full = _table(4000, seed=3)
+    masked = Column.from_values(dtypes.INT64, full.column("k").to_pylist())
+    masked.validity = np.arange(4000) % 7 != 0
+    full = full.with_column(Field("k", dtypes.INT64), masked)
+    f = SpillFile(full.schema, str(tmp_path))
+    for s in range(0, 4000, 1500):
+        f.write(full.slice(s, s + 1500))
+    got = list(f.read(morsel_rows=600))
+    assert all(b.num_rows <= 600 for b in got)
+    from repro.core.batch import concat_batches
+
+    _assert_byte_identical(concat_batches(got), full, "spill round-trip")
+    assert os.path.exists(f.path)
+    f.close()
+    assert not os.path.exists(f.path)  # close() deletes the temp file
+
+
+# ---------------------------------------------------------------------------
+# value-consistent partitioning
+# ---------------------------------------------------------------------------
+def test_key_hash_value_consistency():
+    n = 64
+    vals = np.arange(n)
+    variants = [
+        RecordBatch.from_pydict({"k": vals.astype(np.int64)}),
+        RecordBatch.from_pydict({"k": vals.astype(np.int32)}),
+        RecordBatch.from_pydict({"k": vals.astype(np.uint64)}),
+        RecordBatch.from_pydict({"k": vals.astype(np.float64)}),  # integral floats == ints
+        RecordBatch.from_pydict({"k": vals.astype(np.float32)}),
+    ]
+    ref = key_hashes(variants[0], ["k"], level=0)
+    for v in variants[1:]:
+        assert np.array_equal(key_hashes(v, ["k"], level=0), ref), v.schema
+    # -0.0 and 0.0 are one key class; every row lands in [0, nparts)
+    fz = RecordBatch.from_pydict({"k": np.asarray([0.0, -0.0, 1.0, -1.0])})
+    h = key_hashes(fz, ["k"], level=0)
+    assert h[0] == h[1]
+    pids = partition_ids(_table(1000), ["k", "tag"], 8, level=0)
+    assert pids.min() >= 0 and pids.max() < 8
+    # a different level re-salts (recursive re-partition actually splits)
+    p0 = partition_ids(_table(1000), ["k"], 8, level=0)
+    p1 = partition_ids(_table(1000), ["k"], 8, level=1)
+    assert not np.array_equal(p0, p1)
+    # masked rows are one null class regardless of the masked value
+    mk = Column.from_values(dtypes.INT64, [1, 2, 3, 4])
+    mk.validity = np.asarray([True, False, False, True])
+    mb = RecordBatch(Schema([Field("k", dtypes.INT64)]), [mk])
+    hm = key_hashes(mb, ["k"], level=0)
+    assert hm[1] == hm[2] and hm[0] != hm[1]
+
+
+def test_key_hash_integral_floats_beyond_int64():
+    """Integral float64 keys equal (under python equality) to uint64/int64
+    values at and past the ±2^63 boundary must hash with the integer class
+    (regression: 2.0**63 used to hash as float bits and split from 2**63)."""
+    fvals = np.asarray([2.0**63, 1e19, -(2.0**63), 3.0])
+    uvals = np.asarray([2**63, 10**19, 3, 3], dtype=np.uint64)
+    ivals = np.asarray([-(2**63), 3, 4, 5], dtype=np.int64)
+    hf = key_hashes(RecordBatch.from_pydict({"k": fvals}), ["k"], level=0)
+    hu = key_hashes(RecordBatch.from_pydict({"k": uvals}), ["k"], level=0)
+    hi = key_hashes(RecordBatch.from_pydict({"k": ivals}), ["k"], level=0)
+    assert hf[0] == hu[0]  # 2.0**63 == 2**63
+    assert hf[1] == hu[1]  # 1e19 == 10**19
+    assert hf[2] == hi[0]  # -(2.0**63) == -(2**63)
+    assert hf[3] == hu[2]  # plain small value sanity
+
+
+def test_join_spill_matches_across_float_and_uint64_keys():
+    """The reviewer repro: float64 probe keys vs uint64 build keys at the
+    2^63 boundary must join identically with and without a budget."""
+    probe = RecordBatch.from_pydict({"k": np.asarray([2.0**63, 1e19, 3.0] * 40), "x": np.arange(120.0)})
+    build = RecordBatch.from_pydict({"k": np.asarray([2**63, 10**19, 3], dtype=np.uint64), "tagv": np.asarray([7, 8, 9])})
+
+    def resolver(node):
+        return _sdf(probe, rows=30) if "left" in node.params["uri"] else _sdf(build, rows=30)
+
+    bld = Dag.build()
+    sl = bld.source("dacp://h:1/left")
+    sr = bld.source("dacp://h:1/right")
+    j = bld.add("join", {"on": ["k"]}, [sl, sr])
+    dag = bld.finish(j)
+    ref = execute_parallel(dag, resolver, _cfg(2)).collect()
+    got = execute_parallel(dag, resolver, _cfg(2, 1)).collect()
+    assert ref.num_rows == 120
+    _assert_byte_identical(got, ref, "float/uint64 boundary keys")
+
+
+# ---------------------------------------------------------------------------
+# aggregate spill determinism (the tentpole acceptance assertion)
+# ---------------------------------------------------------------------------
+# per key set: (budget that forces a plain spill, budget that also forces
+# recursive re-partitioning) — sized to each key set's state footprint
+_BUDGETS = {
+    ("k",): (150_000, 8_000),
+    ("tag",): (5_000, 1_000),
+    ("k", "tag"): (1_200_000, 120_000),
+}
+
+
+@pytest.mark.parametrize("workers", [1, 4])
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("keys", [("k",), ("tag",), ("k", "tag")])
+def test_aggregate_spill_byte_identical(workers, seed, keys):
+    full = _table(seed=seed)
+    dag = _agg_dag(keys=keys, filter_pred=col("x") > -1.0)
+    ref = execute_parallel(dag, lambda n: _sdf(full), _cfg(workers)).collect()
+    spill_budget, recurse_budget = _BUDGETS[keys]
+    for budget, want_depth in ((spill_budget, 0), (recurse_budget, 1)):
+        stats = ExecutorStats()
+        got = execute_parallel(dag, lambda n: _sdf(full), _cfg(workers, budget), stats=stats).collect()
+        _assert_byte_identical(got, ref, f"workers={workers} budget={budget} keys={keys}")
+        sp = stats.to_dict()["spill"]
+        assert sp["spills"] >= 1 and sp["partitions_written"] > 0 and sp["bytes_spilled"] > 0
+        assert sp["max_depth"] >= want_depth, sp
+
+
+def test_aggregate_spill_masked_keys_byte_identical():
+    """Null keys (validity-masked) survive the state-batch round trip and the
+    first-seen reorder."""
+    full = _table(12_000, seed=5, keyspan=400)
+    masked = Column.from_values(dtypes.INT64, full.column("k").to_pylist())
+    masked.validity = np.arange(12_000) % 11 != 0
+    full = full.with_column(Field("k", dtypes.INT64), masked)
+    dag = _agg_dag(keys=("k",))
+    for workers in (1, 4):
+        ref = execute_parallel(dag, lambda n: _sdf(full), _cfg(workers)).collect()
+        got = execute_parallel(dag, lambda n: _sdf(full), _cfg(workers, 20_000)).collect()
+        _assert_byte_identical(got, ref, f"masked keys workers={workers}")
+        assert got.column("k").validity is not None  # the null group is real
+
+
+def test_all_partitions_spilled():
+    """budget=1: the very first merged state crosses the budget, so every
+    partial state spills and the whole result is reassembled from disk."""
+    full = _table(6_000, seed=7, keyspan=400)
+    dag = _agg_dag()
+    ref = execute_parallel(dag, lambda n: _sdf(full), _cfg(2)).collect()
+    stats = ExecutorStats()
+    got = execute_parallel(dag, lambda n: _sdf(full), _cfg(2, 1), stats=stats).collect()
+    _assert_byte_identical(got, ref, "all-spilled")
+    sp = stats.to_dict()["spill"]
+    assert sp["spills"] >= 1 and sp["max_depth"] >= 1  # tiny budget recurses
+
+
+def test_keyless_aggregate_never_spills():
+    """A keyless (single-group) aggregate is bounded by construction; the
+    budget must not reroute it through the grace-hash path."""
+    full = _table(8_000, seed=2)
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    a = bld.add("aggregate", {"keys": [], "aggs": {"n": {"fn": "count"}}}, [s])
+    dag = bld.finish(a)
+    stats = ExecutorStats()
+    got = execute_parallel(dag, lambda n: _sdf(full), _cfg(2, 1), stats=stats).collect()
+    assert got.column("n").to_pylist() == [8_000]
+    assert stats.to_dict()["spill"]["spills"] == 0
+
+
+def test_grace_hash_aggregate_supported_guards():
+    schema = Schema([Field("k", dtypes.INT64), Field("__dacp_fs", dtypes.INT64)])
+    assert not GraceHashAggregate.supported([], {"n": {"fn": "count"}}, "full", schema)
+    assert not GraceHashAggregate.supported(["__dacp_fs"], {"n": {"fn": "count"}}, "full", schema)
+    assert GraceHashAggregate.supported(["k"], {"n": {"fn": "count"}}, "full", schema)
+
+
+# ---------------------------------------------------------------------------
+# join build spill + probe streaming
+# ---------------------------------------------------------------------------
+def _join_dag():
+    bld = Dag.build()
+    sl = bld.source("dacp://h:1/left")
+    sr = bld.source("dacp://h:1/right")
+    fl = bld.add("filter", {"predicate": col("x") > 0.0}, [sl])
+    ar = bld.add(
+        "aggregate",
+        {"keys": ["k"], "aggs": {"cnt": {"fn": "count"}, "hi": {"fn": "max", "column": "x"}}},
+        [sr],
+    )
+    j = bld.add("join", {"on": ["k"]}, [fl, ar])
+    p = bld.add("project", {"exprs": {"z": col("x") * 2.0}, "keep": True}, [j])
+    return bld.finish(p)
+
+
+@pytest.mark.parametrize("workers", [1, 4])
+def test_join_build_spill_byte_identical(workers):
+    full = _table(25_000, seed=9, keyspan=1500)
+    dag = _join_dag()
+    resolver = lambda n: _sdf(full)  # noqa: E731
+    ref = execute_parallel(dag, resolver, _cfg(workers)).collect()
+    for budget in (120_000, 6_000):  # spill / recursive re-partition
+        stats = ExecutorStats()
+        got = execute_parallel(dag, resolver, _cfg(workers, budget), stats=stats).collect()
+        _assert_byte_identical(got, ref, f"join workers={workers} budget={budget}")
+        sp = stats.to_dict()["spill"]
+        assert sp["spills"] >= 1 and sp["partitions_written"] > 0
+    assert ref.num_rows > 0
+
+
+def test_budgeted_join_streams_probe_when_build_fits():
+    """Under a budget that the build side fits in, the probe side still
+    streams: the first output batch arrives before the probe source is
+    exhausted (no accidental materialize-everything in the budgeted path)."""
+    full = _table(30_000, seed=4, keyspan=40)
+    consumed = []
+
+    def probe_gen():
+        for i in range(30):
+            consumed.append(i)
+            yield full.slice(i * 1000, (i + 1) * 1000)
+
+    probe = StreamingDataFrame(full.schema, probe_gen)
+
+    def resolver(node):
+        return probe if "left" in node.params["uri"] else _sdf(full.slice(0, 4000))
+
+    bld = Dag.build()
+    sl = bld.source("dacp://h:1/left")
+    sr = bld.source("dacp://h:1/right")
+    ar = bld.add("aggregate", {"keys": ["k"], "aggs": {"cnt": {"fn": "count"}}}, [sr])
+    j = bld.add("join", {"on": ["k"]}, [sl, ar])
+    dag = bld.finish(j)
+
+    out = execute_parallel(dag, resolver, _cfg(4, budget=50 << 20, morsel_rows=1000))
+    it = out.iter_batches()
+    first = next(it)
+    assert first.num_rows > 0
+    assert len(consumed) < 30  # streaming preserved
+    it.close()
+
+
+# ---------------------------------------------------------------------------
+# temp-file hygiene
+# ---------------------------------------------------------------------------
+def _spill_files(d):
+    return glob.glob(os.path.join(str(d), "dacp-*"))
+
+
+def test_spill_files_cleaned_after_collect(tmp_path):
+    full = _table(20_000, seed=11)
+    dag = _join_dag()
+    cfg = _cfg(2, 10_000, spill_dir=str(tmp_path))
+    out = execute_parallel(dag, lambda n: _sdf(full), cfg).collect()
+    assert out.num_rows > 0
+    assert _spill_files(tmp_path) == []
+
+
+def test_spill_files_cleaned_on_early_close(tmp_path):
+    full = _table(20_000, seed=12)
+    dag = _agg_dag()
+    cfg = _cfg(2, 20_000, spill_dir=str(tmp_path))
+    it = execute_parallel(dag, lambda n: _sdf(full), cfg).iter_batches()
+    next(it)  # the aggregate yields one batch; spilling already happened
+    it.close()
+    assert _spill_files(tmp_path) == []
+
+
+def test_join_build_source_error_cleans_spill_files(tmp_path):
+    """A build source that dies AFTER the build spilled must not strand
+    join-build partition files (the exchange-pull failure case)."""
+    full = _table(20_000, seed=21, keyspan=1500)
+
+    def build_gen():
+        for s in range(0, 16_000, 1000):
+            yield full.slice(s, s + 1000)
+        raise SchemaError("build-side exchange died")
+
+    def resolver(node):
+        if "right" in node.params["uri"]:
+            return StreamingDataFrame(full.schema, build_gen)
+        return _sdf(full)
+
+    bld = Dag.build()
+    sl = bld.source("dacp://h:1/left")
+    sr = bld.source("dacp://h:1/right")
+    j = bld.add("join", {"on": ["k"]}, [sl, sr])
+    dag = bld.finish(j)
+    cfg = _cfg(2, 10_000, spill_dir=str(tmp_path))
+    with pytest.raises(SchemaError):
+        execute_parallel(dag, resolver, cfg).collect()
+    assert _spill_files(tmp_path) == []
+
+
+def test_constant_key_join_spill_stops_rewriting(tmp_path):
+    """One dominant key class can never split: the progress guard must stop
+    the pair at one futile re-partition instead of rewriting the same bytes
+    to every level down to the depth cap."""
+    n = 6_000
+    probe = RecordBatch.from_pydict({"k": np.zeros(n, np.int64), "x": np.arange(float(n))})
+    build = RecordBatch.from_pydict({"k": np.zeros(20, np.int64), "v": np.arange(20.0)})
+
+    def resolver(node):
+        return _sdf(probe, rows=500) if "left" in node.params["uri"] else _sdf(build, rows=500)
+
+    bld = Dag.build()
+    sl = bld.source("dacp://h:1/left")
+    sr = bld.source("dacp://h:1/right")
+    j = bld.add("join", {"on": ["k"]}, [sl, sr])
+    dag = bld.finish(j)
+    ref = execute_parallel(dag, resolver, _cfg(2)).collect()
+    stats = ExecutorStats()
+    got = execute_parallel(dag, resolver, _cfg(2, 1, spill_dir=str(tmp_path)), stats=stats).collect()
+    _assert_byte_identical(got, ref, "constant-key join")
+    sp = stats.to_dict()["spill"]
+    assert sp["max_depth"] <= 2, sp  # one split attempt, then forced in-memory
+    assert _spill_files(tmp_path) == []
+
+
+def test_uint64_minmax_above_2_63():
+    """uint64 min/max accumulate in uint64 — values past 2^63 must not wrap
+    into signed order (min over [1, 2^63+5] is 1)."""
+    schema = Schema([Field("k", dtypes.INT64), Field("v", dtypes.resolve("uint64"))])
+    b = RecordBatch.from_pydict({"k": [0, 0, 1], "v": np.asarray([1, 2**63 + 5, 2**64 - 1], np.uint64)}, schema)
+    dag_b = Dag.build()
+    s = dag_b.source("dacp://h:1/d")
+    a = dag_b.add(
+        "aggregate",
+        {"keys": ["k"], "aggs": {"lo": {"fn": "min", "column": "v"}, "hi": {"fn": "max", "column": "v"}}},
+        [s],
+    )
+    dag = dag_b.finish(a)
+    for budget in (0, 1):
+        got = execute_parallel(dag, lambda n: _sdf(b), _cfg(2, budget)).collect().to_pydict()
+        assert got["lo"] == [1, 2**64 - 1]
+        assert got["hi"] == [2**63 + 5, 2**64 - 1]
+
+
+def test_spill_dir_env_validation(monkeypatch, tmp_path):
+    monkeypatch.setenv("DACP_SPILL_DIR", str(tmp_path / "does-not-exist"))
+    with pytest.warns(UserWarning):
+        cfg = ExecutorConfig(num_workers=1)
+    assert cfg.spill_dir is None  # falls back to the system temp dir
+    monkeypatch.setenv("DACP_SPILL_DIR", str(tmp_path))
+    assert ExecutorConfig(num_workers=1).spill_dir == str(tmp_path)
+    monkeypatch.delenv("DACP_SPILL_DIR")
+    assert ExecutorConfig(num_workers=1).spill_dir is None
+
+
+def test_spill_files_cleaned_on_source_error(tmp_path):
+    full = _table(20_000, seed=13)
+
+    def gen():
+        for s in range(0, 16_000, 1000):
+            yield full.slice(s, s + 1000)
+        raise SchemaError("mid-stream source failure")
+
+    sdf = StreamingDataFrame(full.schema, gen)
+    dag = _agg_dag()
+    cfg = _cfg(2, 5_000, spill_dir=str(tmp_path))
+    with pytest.raises(SchemaError):
+        execute_parallel(dag, lambda n: sdf, cfg).collect()
+    assert _spill_files(tmp_path) == []
+
+
+# ---------------------------------------------------------------------------
+# stats / engine / PING surface
+# ---------------------------------------------------------------------------
+def test_ping_exposes_spill_counters(tmp_tree):
+    from repro.client import LocalNetwork
+    from repro.server import FairdServer
+
+    results = {}
+    for name, budget in (("ref", 0), ("spill", 1)):
+        net = LocalNetwork()
+        srv = FairdServer(
+            "spill:3101",
+            executor=ExecutorConfig(num_workers=4, morsel_rows=128, backend="numpy", memory_budget=budget),
+        )
+        srv.catalog.register_path("structured", str(tmp_tree / "structured"))
+        net.register(srv)
+        c = net.client_for("spill:3101")
+        out = (
+            c.open("dacp://spill:3101/structured/table.csv")
+            .group_by("tag")
+            .agg(n="count", s=("sum", "score"))
+            .collect()
+        )
+        results[name] = out.to_pydict()
+        if budget:
+            ex = c.ping()["executor"]
+            assert ex["spill"]["spills"] >= 1
+            assert ex["spill"]["memory_budget"] == 1
+            assert ex["spill"]["bytes_spilled"] > 0
+    assert results["spill"] == results["ref"]
+
+
+def test_stats_spill_dict_shape():
+    full = _table(10_000, seed=14)
+    stats = ExecutorStats()
+    execute_parallel(_agg_dag(), lambda n: _sdf(full), _cfg(2, 4_000), stats=stats).collect()
+    sp = stats.to_dict()["spill"]
+    assert set(sp) == {
+        "memory_budget",
+        "used_bytes",
+        "spills",
+        "partitions_written",
+        "batches_spilled",
+        "bytes_spilled",
+        "max_depth",
+    }
+    assert sp["memory_budget"] == 4_000
+
+
+# ---------------------------------------------------------------------------
+# GroupState helpers added for the spill path
+# ---------------------------------------------------------------------------
+def test_merge_indexed_and_approx_nbytes():
+    from repro.core.operators import GroupState
+
+    schema = Schema([Field("k", dtypes.INT64), Field("v", dtypes.INT64)])
+    b1 = RecordBatch.from_pydict({"k": [1, 2, 1], "v": [10, 20, 30]}, schema)
+    b2 = RecordBatch.from_pydict({"k": [2, 3], "v": [5, 7]}, schema)
+    a = GroupState(["k"], {"s": {"fn": "sum", "column": "v"}}, "full", schema)
+    a.update(b1)
+    before = a.approx_nbytes()
+    other = GroupState(["k"], {"s": {"fn": "sum", "column": "v"}}, "full", schema)
+    other.update(b2)
+    idx = a.merge_indexed(other)
+    assert idx.tolist() == [1, 2]  # key 2 existed, key 3 interned after
+    assert a.acc["s"].tolist() == [40, 25, 7]
+    assert a.approx_nbytes() > before > 0
