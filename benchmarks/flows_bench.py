@@ -1,0 +1,103 @@
+"""Flow lifecycle — time-to-first-batch: START+FETCH vs blocking COOK.
+
+The flow redesign routes the blocking COOK verb through the same buffered
+producer as START+FETCH, so the interesting question is what the lifecycle
+machinery costs on the latency-critical path: how long from issuing the
+request until the first result batch is in the client's hands.
+
+  * ``ttfb_cook_s``         — blocking COOK verb (legacy surface)
+  * ``ttfb_start_fetch_s``  — START (returns a flow id) + first FETCH frame
+  * ``start_ack_s``         — START alone: how quickly the caller gets a
+    cancellable/observable handle while the plan runs in the background
+
+Absolute timings are report-only for the CI gate (host-dependent); the
+committed baseline tracks them for the human delta table.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import emit, timer
+from repro.client import LocalNetwork
+from repro.core import col
+from repro.core.executor import ExecutorConfig
+from repro.server import FairdServer, write_sdf_dataset
+
+
+def _make_dataset(root: str, rows: int) -> None:
+    from repro.core.sdf import StreamingDataFrame
+
+    rng = np.random.default_rng(3)
+    sdf = StreamingDataFrame.from_pydict(
+        {
+            "k": rng.integers(0, 64, rows),
+            "v": rng.integers(0, 1 << 30, rows),
+            "x": rng.standard_normal(rows).astype(np.float32),
+        },
+        batch_rows=1 << 14,
+    )
+    write_sdf_dataset(os.path.join(root, "ds", "tab"), sdf, rows_per_part=rows // 8 or rows)
+
+
+def _dag(client):
+    return client.open("dacp://bench:3101/ds/tab").filter(col("x") > 0.0).rebatch(4096).dag()
+
+
+def _first_batch_s(make_stream, repeats: int = 5) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        with timer() as t:
+            stream = make_stream()
+            next(iter(stream.iter_batches()))
+        best = min(best, t.s)
+    return best
+
+
+def run(rows: int = 200_000, verbose: bool = True) -> dict:
+    root = tempfile.mkdtemp(prefix="dacp_flows_")
+    _make_dataset(root, rows)
+    net = LocalNetwork()
+    server = FairdServer("bench:3101", executor=ExecutorConfig(num_workers=4, morsel_rows=1 << 14, backend="numpy"))
+    server.catalog.register_path("ds", os.path.join(root, "ds"))
+    net.register(server)
+    client = net.client_for("bench:3101")
+    dag = _dag(client)
+
+    results: dict = {"rows": rows}
+    results["ttfb_cook_s"] = _first_batch_s(lambda: client.cook(dag.copy()))
+    results["ttfb_start_fetch_s"] = _first_batch_s(lambda: client.start(dag.copy()).stream())
+
+    # START-ack latency: time until the caller holds a flow handle
+    best = float("inf")
+    handles = []
+    for _ in range(5):
+        with timer() as t:
+            handles.append(client.start(dag.copy()))
+        best = min(best, t.s)
+    results["start_ack_s"] = best
+    for h in handles:
+        h.cancel(deadline=2.0)
+
+    emit("flow_ttfb_cook", results["ttfb_cook_s"] * 1e6, f"{results['ttfb_cook_s']*1e3:.2f} ms to first batch")
+    emit(
+        "flow_ttfb_start_fetch",
+        results["ttfb_start_fetch_s"] * 1e6,
+        f"{results['ttfb_start_fetch_s']*1e3:.2f} ms to first batch",
+    )
+    emit("flow_start_ack", results["start_ack_s"] * 1e6, f"{results['start_ack_s']*1e3:.2f} ms to flow handle")
+    client.close()
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = run(rows=50_000 if "--quick" in sys.argv else 200_000)
+    print(f"# blocking COOK first batch : {out['ttfb_cook_s']*1e3:.2f} ms")
+    print(f"# START+FETCH first batch   : {out['ttfb_start_fetch_s']*1e3:.2f} ms")
+    print(f"# START ack (flow handle)   : {out['start_ack_s']*1e3:.2f} ms")

@@ -12,6 +12,8 @@ One section per paper figure/claim:
                     channel-per-request for N small GETs
     executor      — §III-D morsel-driven parallel executor: 1 vs N workers,
                     numpy vs pallas backend, rows/s on a COOK pipeline
+    flows         — flow lifecycle: time-to-first-batch for START+FETCH vs
+                    blocking COOK, and START-ack latency
     kernels       — §IV-B hot-spot kernels (interpret-mode indicative)
 
 Results additionally land in benchmarks/results/benchmarks.json.
@@ -25,7 +27,16 @@ import sys
 def main() -> None:
     quick = "--quick" in sys.argv
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-    from benchmarks import cook_insitu, executor, kernels_bench, pushdown, session_reuse, structured, unstructured
+    from benchmarks import (
+        cook_insitu,
+        executor,
+        flows_bench,
+        kernels_bench,
+        pushdown,
+        session_reuse,
+        structured,
+        unstructured,
+    )
 
     out = {}
     print("name,us_per_call,derived")
@@ -35,6 +46,7 @@ def main() -> None:
     out["cook_insitu"] = cook_insitu.run(rows=10_000 if quick else 100_000)
     out["session_reuse"] = session_reuse.run(n_gets=40 if quick else 200)
     out["executor"] = executor.run(rows=100_000 if quick else 400_000)
+    out["flows"] = flows_bench.run(rows=50_000 if quick else 200_000)
     out["kernels"] = kernels_bench.run()
 
     res_dir = os.path.join(os.path.dirname(__file__), "results")
@@ -64,6 +76,11 @@ def main() -> None:
     print(
         f"#  morsel executor: {ex['speedup_4w_vs_seed']:.2f}x rows/s at 4 workers vs the "
         f"single-threaded seed path ({ex['rows_per_s_4w'] / 1e6:.2f} Mrows/s)"
+    )
+    fb = out["flows"]
+    print(
+        f"#  flow lifecycle: first batch in {fb['ttfb_start_fetch_s']*1e3:.1f} ms via START+FETCH "
+        f"vs {fb['ttfb_cook_s']*1e3:.1f} ms blocking COOK; START acks in {fb['start_ack_s']*1e3:.1f} ms"
     )
 
 

@@ -9,23 +9,101 @@ channel-per-request discipline.
 
 The client does not execute computations: the chainable ``RemoteFrame`` API
 builds a logical DAG client-side; triggering consumption serializes the DAG
-and submits it as COOK.  ``group_by(...).agg(...)`` and ``join(...)`` lower to
-``aggregate`` / ``join`` operators that the optimizer pushes toward the data
-(cross-domain plans ship partial aggregates, not raw rows).  Structured
-results arrive as zero-copy columnar batches; Binary blob columns re-open
-("expand") as new SDFs via ``open_blob`` — parsed in memory, never spooled.
+and submits it as a **flow** (START + resumable FETCH) on v2 peers, falling
+back to the blocking COOK verb against legacy v1 peers.  ``group_by(...)
+.agg(...)`` and ``join(...)`` lower to ``aggregate`` / ``join`` operators
+that the optimizer pushes toward the data (cross-domain plans ship partial
+aggregates, not raw rows).  Structured results arrive as zero-copy columnar
+batches; Binary blob columns re-open ("expand") as new SDFs via
+``open_blob`` — parsed in memory, never spooled.
+
+``Flow`` is the client half of the flow lifecycle: a handle with
+``stream()/collect()`` (transparent reconnect-and-resume from the last
+consumed seq), ``status()`` (server-side progress) and ``cancel()``.
 """
 
 from __future__ import annotations
 
+import time
+
 from repro.core.dag import Dag, DagBuilder
+from repro.core.errors import DacpError, FlowCancelled, TransportError
 from repro.core.expr import Expr
 from repro.core.sdf import StreamingDataFrame
 from repro.client.session import DacpSession
 
-__all__ = ["DacpClient", "RemoteFrame", "GroupedFrame", "open_blob", "AGG_FNS"]
+__all__ = ["DacpClient", "Flow", "RemoteFrame", "GroupedFrame", "open_blob", "AGG_FNS"]
 
 AGG_FNS = ("sum", "mean", "min", "max", "count")
+
+
+class Flow:
+    """Client handle on a server-side flow (asynchronous COOK / SUBMIT).
+
+    ``stream()`` FETCHes the seq-numbered result frames and transparently
+    reconnects on channel death: the handle tracks the last consumed seq
+    and re-FETCHes from there, so the delivered batch sequence is exactly
+    the uninterrupted one — byte-identical, nothing replayed or lost.
+    Terminal flow states (CANCELLED/FAILED) are never retried."""
+
+    def __init__(self, client: "DacpClient", flow_id: str, token: str | None = None, max_attempts: int = 4, backoff_s: float = 0.05):
+        self._client = client
+        self.flow_id = flow_id
+        self._token = token  # scoped pull token for submit flows (scheduler)
+        self.max_attempts = max_attempts
+        self.backoff_s = backoff_s
+        self.next_seq = 0  # resume cursor: last consumed seq + 1
+
+    def status(self) -> dict:
+        return self._client.session.status(self.flow_id, token=self._token)
+
+    def cancel(self, deadline: float | None = None) -> dict:
+        return self._client.session.cancel(self.flow_id, token=self._token, deadline=deadline)
+
+    def stream(self) -> StreamingDataFrame:
+        """The flow's result SDF with transparent reconnect-and-resume."""
+        schema, frames = self._fetch()
+
+        def gen():
+            frs = frames
+            attempts = 0
+            while True:
+                try:
+                    for seq, batch in frs:
+                        self.next_seq = seq + 1
+                        attempts = 0  # progress resets the retry budget
+                        yield batch
+                    return
+                except FlowCancelled:
+                    raise  # terminal by contract
+                except (TransportError, OSError) as err:
+                    # channel died mid-stream (raw sockets surface OSError
+                    # straight from send/recv): re-FETCH from the cursor —
+                    # the server retained every unacked frame, so the
+                    # resumed stream continues byte-identically
+                    while True:
+                        attempts += 1
+                        if attempts >= self.max_attempts:
+                            raise err
+                        time.sleep(self.backoff_s * (2**attempts))
+                        try:
+                            _schema, frs = self._fetch()
+                            break
+                        except FlowCancelled:
+                            raise
+                        except (TransportError, OSError) as e2:
+                            err = e2
+
+        return StreamingDataFrame.one_shot(schema, gen())
+
+    def _fetch(self):
+        return self._client.session.fetch(self.flow_id, from_seq=self.next_seq, token=self._token)
+
+    def collect(self):
+        return self.stream().collect()
+
+    def iter_batches(self):
+        return self.stream().iter_batches()
 
 
 class DacpClient:
@@ -84,6 +162,24 @@ class DacpClient:
 
     def cook(self, dag: Dag) -> StreamingDataFrame:
         return self.session.cook(dag)
+
+    # -- flow lifecycle --------------------------------------------------------------
+    def start(self, dag: Dag) -> Flow:
+        """Asynchronous COOK: START the plan as a server-side flow and
+        return a ``Flow`` handle immediately (no result bytes move yet)."""
+        resp = self.session.start(dag)
+        return Flow(self, resp["flow_id"])
+
+    def flow(self, flow_id: str, token: str | None = None) -> Flow:
+        """Attach a handle to an existing flow (e.g. a registered SUBMIT
+        fragment, using its scoped pull token)."""
+        return Flow(self, flow_id, token=token)
+
+    def status(self, flow_id: str) -> dict:
+        return self.session.status(flow_id)
+
+    def cancel(self, flow_id: str, token: str | None = None, deadline: float | None = None) -> dict:
+        return self.session.cancel(flow_id, token=token, deadline=deadline)
 
     def submit(self, fragment: Dag, flow_id: str, exchange_tokens: dict) -> str:
         """Internal (scheduler): register a plan fragment; returns pull token."""
@@ -176,7 +272,24 @@ class RemoteFrame:
         return self._b.finish(self._head).copy()
 
     def stream(self) -> StreamingDataFrame:
-        return self._client.cook(self.dag())
+        """Consume the frame: on a v2 peer the DAG runs as a flow (START +
+        FETCH) so the stream survives channel drops via seq-based resume;
+        legacy v1 peers get the blocking COOK verb with identical rows."""
+        dag = self.dag()
+        sess = self._client.session
+        if sess.v2 is None:
+            try:
+                sess.connect()
+            except DacpError:
+                return self._client.cook(dag)  # surface errors the COOK way
+        if sess.v2:
+            return self._client.start(dag).stream()
+        return self._client.cook(dag)
+
+    def start(self) -> "Flow":
+        """START the DAG as a server-side flow; returns the ``Flow`` handle
+        (status/cancel/stream) without pulling any result bytes."""
+        return self._client.start(self.dag())
 
     def iter_batches(self):
         return self.stream().iter_batches()

@@ -15,9 +15,16 @@ multiplexes every verb over it:
     legacy v1 server: the session falls back to the channel-per-request
     discipline with identical semantics (and byte accounting);
   * a dead session channel is re-established lazily on the next request —
-    in-flight requests surface the transport error to their callers.
+    in-flight requests surface the transport error to their callers;
+  * flow verbs (START/FETCH/STATUS/CANCEL) expose the server's flow
+    lifecycle: ``start`` returns a flow id immediately, ``fetch`` streams
+    seq-numbered result frames from a cursor and acks them in-band (OK
+    frames on the rid) so the server can release delivered buffers — a
+    reconnecting ``fetch`` from the last consumed seq replays nothing and
+    loses nothing.
 
-The verb surface: GET, PUT, COOK, SUBMIT, LIST, DESCRIBE, PING, BYE.
+The verb surface: GET, PUT, COOK, START, FETCH, STATUS, CANCEL, SUBMIT,
+LIST, DESCRIBE, PING, BYE.
 """
 
 from __future__ import annotations
@@ -28,7 +35,9 @@ import threading
 import time
 import weakref
 
+from repro.core.batch import RecordBatch
 from repro.core.errors import DacpError, PermissionDenied, TokenError, TransportError
+from repro.core.schema import Schema
 from repro.core.sdf import StreamingDataFrame
 from repro.transport import framing
 from repro.transport.channel import INBOX_FRAMES
@@ -512,6 +521,114 @@ class DacpSession:
             self._retire(ch)
             raise
         return self._legacy_stream(sdf, ch)
+
+    # -- flow verbs -----------------------------------------------------------------
+    def start(self, dag) -> dict:
+        """Asynchronous COOK: returns ``{"flow_id", "state"}`` immediately;
+        consume with ``fetch`` / wrap in a client ``Flow`` handle."""
+        hdr = {"verb": "START"}
+        body = dag.to_bytes()
+        if self.v2 is None:
+            self.connect()
+        if self.v2:
+            return self._roundtrip(hdr, body)
+        return self._legacy_roundtrip(hdr, body)
+
+    def status(self, flow_id: str, token: str | None = None) -> dict:
+        hdr = {"verb": "STATUS", "flow_id": flow_id}
+        return self._flow_roundtrip(hdr, token)
+
+    def cancel(self, flow_id: str, token: str | None = None, deadline: float | None = None) -> dict:
+        hdr = {"verb": "CANCEL", "flow_id": flow_id}
+        if deadline is not None:
+            hdr["deadline"] = float(deadline)
+        return self._flow_roundtrip(hdr, token)
+
+    def _flow_roundtrip(self, hdr: dict, token: str | None) -> dict:
+        if self.v2 is None:
+            self.connect()
+        if token is not None:
+            # caller-scoped flow token (scheduler-held): not ours to renew
+            hdr = dict(hdr)
+            hdr["token"] = token
+            if self.v2:
+                return self._roundtrip(hdr, authenticated=False)
+            return self._legacy_roundtrip(hdr, authenticated=False)
+        if self.v2:
+            return self._roundtrip(hdr)
+        return self._legacy_roundtrip(hdr)
+
+    def fetch(self, flow_id: str, from_seq: int = 0, token: str | None = None):
+        """Open a flow's result stream at ``from_seq``.
+
+        Returns ``(schema, frames)`` where ``frames`` yields ``(seq, batch)``
+        tuples in seq order; over a v2 session each delivered frame is acked
+        in-band so the server can drop it from the flow buffer.  On channel
+        death the iterator raises ``TransportError`` — the caller re-fetches
+        from its last consumed seq + 1 and the replay is byte-identical."""
+        hdr = {"verb": "FETCH", "flow_id": flow_id, "from_seq": int(from_seq)}
+        if self.v2 is None:
+            self.connect()
+        if self.v2:
+            for attempt in (0, 1):
+                call = self._call_v2(hdr, token=token)
+                try:
+                    return self._fetch_frames(call)
+                except TokenError:
+                    call.release()
+                    if token is not None or attempt == 1:
+                        raise
+                    self._refresh_token(force=True)
+                except DacpError:
+                    call.release()
+                    raise
+        ch = self._legacy_channel()
+        try:
+            hdr["token"] = token or self._refresh_token()
+            ch.send(framing.REQUEST, hdr)
+            return self._fetch_frames(ch, legacy=True)
+        except DacpError:
+            self._retire(ch)
+            raise
+
+    def _fetch_frames(self, call, legacy: bool = False):
+        """SCHEMA handshake + the (seq, batch) frame iterator for one FETCH."""
+        ftype, header, _ = call.recv()
+        if ftype == framing.ERROR:
+            raise DacpError.from_wire(header)
+        if ftype != framing.SCHEMA:
+            raise TransportError(f"expected SCHEMA frame, got {ftype}")
+        schema = Schema.from_json(header["schema"])
+
+        def frames():
+            try:
+                while True:
+                    ft, hd, body = call.recv()
+                    if ft == framing.BATCH:
+                        seq = int(hd.get("seq", -1))
+                        yield seq, RecordBatch.from_buffers(schema, hd, body)
+                        if not legacy:
+                            try:
+                                # in-band ack: the server releases seqs < ack
+                                call.send(framing.OK, {"ack": seq + 1})
+                            except (DacpError, OSError):
+                                # channel died (a raw socket raises OSError
+                                # straight from send); the next recv surfaces
+                                # the death as a resumable TransportError
+                                pass
+                    elif ft == framing.END:
+                        return
+                    elif ft == framing.ERROR:
+                        raise DacpError.from_wire(hd)
+                    else:
+                        raise TransportError(f"unexpected frame type {ft} inside flow stream")
+            finally:
+                if legacy:
+                    self._retire(call)
+                else:
+                    call.release()
+
+        return schema, frames()
 
     def submit(self, fragment, flow_id: str, exchange_tokens: dict) -> str:
         hdr = {"verb": "SUBMIT", "flow_id": flow_id, "exchange_tokens": exchange_tokens}

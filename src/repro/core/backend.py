@@ -34,13 +34,16 @@ Dispatchable ops:
     segment_reduce  per-group partial folds: count always, sum for integer
                     columns (8-bit-limb exact, wraparound-identical to
                     numpy), min/max for finite float32, int32-safe integer,
-                    and int64/uint32 columns (the latter via a two-word
-                    hi/lo compare — two masked-reduce kernel passes, exact
-                    over the full 64-bit range); float sums and mean partial
-                    sums fold through an explicit **f64-accumulating
-                    reference path** (host-side — kernel lanes are 32-bit —
-                    counted in ``PallasBackend.f64_folds``) instead of
-                    silently falling back; ≤ 256 groups per morsel
+                    and the wide dtypes int64 / uint32 / uint64 / float64
+                    via a two-word hi/lo compare — two masked-reduce kernel
+                    passes over an order-preserving int64 key image (uint64:
+                    top-bit flip; float64: sign-magnitude fold, NaN and
+                    -0.0 ineligible), exact over the full 64-bit range;
+                    float sums and mean partial sums fold through an
+                    explicit **f64-accumulating reference path** (host-side
+                    — kernel lanes are 32-bit — counted in
+                    ``PallasBackend.f64_folds``) instead of silently falling
+                    back; ≤ 256 groups per morsel
 
 ``get_backend("auto")`` selects pallas only when jax reports a real TPU;
 interpret-mode Pallas on CPU is for correctness tests, not speed.
@@ -522,16 +525,66 @@ def _mm_eligible(values: np.ndarray, kind: str):
     return None
 
 
+_I64_MAX = np.int64(2**63 - 1)
+_I64_MIN = np.int64(-(2**63))
+_U64_TOP = np.uint64(1 << 63)
+_F64_LOW63 = np.int64(0x7FFFFFFFFFFFFFFF)
+
+
+def _decode_i64(arr: np.ndarray, fn: str) -> np.ndarray:
+    return arr  # empty-group sentinels (int64 extremes) ARE the identities
+
+
+def _decode_u64(arr: np.ndarray, fn: str) -> np.ndarray:
+    # inverse of the top-bit flip; the min sentinel int64-max decodes to
+    # uint64-max and the max sentinel int64-min to 0 — the uint64 identities
+    return arr.view(np.uint64) ^ _U64_TOP
+
+
+def _decode_f64(arr: np.ndarray, fn: str) -> np.ndarray:
+    # empty-group sentinels are unreachable from (non-NaN) float bits —
+    # substitute the float identities before inverting the order map
+    arr = arr.copy()
+    if fn == "min":
+        sent = arr == _I64_MAX
+        inf = np.float64(np.inf)
+    else:
+        sent = arr == _I64_MIN
+        inf = np.float64(-np.inf)
+    bits = np.where(arr >= 0, arr, arr ^ _F64_LOW63)
+    out = bits.view(np.float64).copy()
+    out[sent] = inf
+    return out
+
+
 def _mm_wide_eligible(values: np.ndarray):
-    """int64 column for the two-word min/max path, or None.  int64 passes
-    through; uint32 lifts exactly.  (uint64 stays on numpy — GroupState
-    accumulates it in uint64, and the signed two-word order would be wrong
-    past 2^63.)"""
+    """``(int64 order keys, decoder)`` for the two-word min/max path, or
+    None.  The keys are an order-preserving int64 image of the column, fed
+    through two ``segment_minmax_tiles`` passes (signed hi words, then
+    sign-flipped lo words); the decoder maps group extremes (and the
+    empty-group sentinels) back to the column dtype:
+
+      * int64   — identity (sentinels are already the int64 identities)
+      * uint32  — widens exactly into int64
+      * uint64  — top-bit flip: ``u ^ 2^63`` viewed signed orders as uint64
+      * float64 — sign-magnitude fold: non-negative bit patterns order as
+        floats already; negative ones have all low 63 bits flipped.  NaN is
+        ineligible (total order ≠ numpy's NaN propagation) and so is -0.0
+        (bitwise total order would distinguish it from +0.0 where numpy's
+        min/max result depends on operand order); ±Inf are fine.
+    """
     dt = values.dtype
     if dt.kind == "i" and dt.itemsize == 8:
-        return values
+        return values, _decode_i64
     if dt.kind == "u" and dt.itemsize == 4:
-        return values.astype(np.int64)
+        return values.astype(np.int64), _decode_i64
+    if dt.kind == "u" and dt.itemsize == 8:
+        return (values ^ _U64_TOP).view(np.int64), _decode_u64
+    if dt == np.float64:
+        if np.isnan(values).any() or ((values == 0.0) & np.signbit(values)).any():
+            return None
+        b = values.view(np.int64)
+        return np.where(b >= 0, b, b ^ _F64_LOW63), _decode_f64
     return None
 
 
@@ -566,7 +619,7 @@ def _pl_segment_reduce(bk: PallasBackend, gidx, ngroups, specs, n_rows) -> dict:
     sums: list = []  # (state name, values)
     fsums: list = []  # (state name, f64 values) — host f64 reference path
     mms: dict = {"f32": [], "i32": []}  # kind -> [(state name, fn, col)]
-    wides: list = []  # (state name, fn, int64 col) — two-word min/max
+    wides: list = []  # (state name, fn, int64 keys, decoder) — two-word min/max
     count_names: list = []
     for name, fn, values in specs:
         if fn == "count":
@@ -583,7 +636,7 @@ def _pl_segment_reduce(bk: PallasBackend, gidx, ngroups, specs, n_rows) -> dict:
             else:
                 wide = _mm_wide_eligible(values)
                 if wide is not None:
-                    wides.append((name, fn, wide))
+                    wides.append((name, fn, wide[0], wide[1]))
     if not (sums or count_names or mms["f32"] or mms["i32"] or wides or fsums):
         return {}
     tile = bk.tile
@@ -622,26 +675,30 @@ def _pl_segment_reduce(bk: PallasBackend, gidx, ngroups, specs, n_rows) -> dict:
             # two-word compare: pass 1 reduces the signed hi words; pass 2
             # reduces the sign-flipped lo words among only the rows whose hi
             # word equals their group's extreme (others masked to the
-            # identity sentinel).  Lexicographic (hi, lo') == int64 order,
-            # and the empty-group sentinels decode to the int64 identities.
-            fns = tuple(fn for _n, fn, _c in wides)
+            # identity sentinel).  Lexicographic (hi, lo') == int64 order on
+            # the order-preserving keys; each column's decoder maps the
+            # extremes (and the empty-group sentinels) back to the source
+            # dtype — int64/uint32 directly, uint64/float64 by inverting
+            # their monotone int64 image (see ``_mm_wide_eligible``).
+            fns = tuple(fn for _n, fn, _c, _d in wides)
             hi_tbl = np.zeros((n_pad, len(wides)), np.int32)
             lo_cols = []
-            for j, (_name, _fn, col) in enumerate(wides):
+            for j, (_name, _fn, col, _dec) in enumerate(wides):
                 hi, lo = _wide_words(col)
                 hi_tbl[:n_rows, j] = hi
                 lo_cols.append((hi, lo))
             h_res = np.asarray(kernel_ops.segment_minmax_tiles(g32, hi_tbl, n_rows, g_pad, fns, tile=tile))
             lo_tbl = np.empty((n_pad, len(wides)), np.int32)
-            for j, (_name, fn, _col) in enumerate(wides):
+            for j, (_name, fn, _col, _dec) in enumerate(wides):
                 sent = np.int32(2**31 - 1) if fn == "min" else np.int32(-(2**31))
                 lo_tbl[:, j] = sent
                 hi, lo = lo_cols[j]
                 at_extreme = hi == h_res[:, j][g32[:n_rows]]
                 lo_tbl[:n_rows, j] = np.where(at_extreme, lo, sent)
             l_res = np.asarray(kernel_ops.segment_minmax_tiles(g32, lo_tbl, n_rows, g_pad, fns, tile=tile))
-            for j, (name, _fn, _col) in enumerate(wides):
-                out[name] = _wide_decode(h_res[:ngroups, j], np.ascontiguousarray(l_res[:ngroups, j]))
+            for j, (name, fn, _col, decode) in enumerate(wides):
+                keys64 = _wide_decode(h_res[:ngroups, j], np.ascontiguousarray(l_res[:ngroups, j]))
+                out[name] = decode(keys64, fn)
             kernel_used = True
         for name, values in fsums:
             # f64-accumulating reference path: bit-identical to the numpy

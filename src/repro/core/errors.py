@@ -68,6 +68,16 @@ class SubTaskFailed(DacpError):
     code = "SUBTASK"
 
 
+class FlowCancelled(DacpError):
+    """A flow was cancelled (client CANCEL verb or server-side teardown).
+
+    Raised by executor pipelines when their flow's cancel event fires, and
+    framed to consumers of a cancelled stream.  Clients must treat it as
+    terminal — unlike ``TransportError`` it is never retried/resumed."""
+
+    code = "FLOW_CANCELLED"
+
+
 _CODE_TO_CLS = {
     c.code: c
     for c in (
@@ -80,5 +90,6 @@ _CODE_TO_CLS = {
         PlanError,
         TransportError,
         SubTaskFailed,
+        FlowCancelled,
     )
 }

@@ -78,7 +78,7 @@ from typing import Callable, Iterator
 from repro.core.backend import ComputeBackend, get_backend
 from repro.core.batch import RecordBatch, concat_batches
 from repro.core.dag import Dag, Node
-from repro.core.errors import PlanError, SchemaError
+from repro.core.errors import FlowCancelled, PlanError, SchemaError
 from repro.core.operators import (
     GroupState,
     agg_out_fields,
@@ -271,7 +271,16 @@ class _MorselSizer:
     tiny, throughput-losing morsels.  Where overhead is negligible
     (vectorized/TPU compute), the floor vanishes and the controller is a
     pure ~1 ms latency target.  Clamped, in 4096-row steps.  Thread-safe;
-    reads are a single attribute load."""
+    reads are a single attribute load.
+
+    The same latency signal also feeds the pipeline's **reorder window**
+    and **prefetch depth** (adaptive mode only): when morsels run at or
+    under the latency target the window stays at its configured maximum
+    (morsels are cheap — keep every worker busy and the sources read
+    ahead); when a morsel costs k× the target, in-flight buffering is
+    scaled down by ~1/k toward one morsel per worker, bounding the memory
+    held by the reorder buffer and the source queues to a roughly constant
+    *time depth* instead of a constant morsel count."""
 
     _ALPHA = 0.15  # EWMA weight for the regression moments
     _OVERHEAD_K = 8  # morsel must be >= K× the fixed overhead
@@ -283,12 +292,20 @@ class _MorselSizer:
         target_s: float = AUTO_TARGET_S,
         lo: int = AUTO_MORSEL_MIN,
         hi: int = AUTO_MORSEL_MAX,
+        workers: int = 1,
+        window: int = 4,
+        prefetch: int = 4,
     ):
         self.size = initial
         self.adaptive = adaptive
         self.target_s = target_s
         self.lo = lo
         self.hi = hi
+        self.workers = max(1, workers)
+        self.max_window = max(self.workers + 1, window)
+        self.max_prefetch = max(1, prefetch)
+        self.window = self.max_window
+        self.prefetch_depth = self.max_prefetch
         self.morsels = 0
         self.rows = 0
         self._m = None  # EWMA moments (E[r], E[t], E[r²], E[r·t])
@@ -327,37 +344,68 @@ class _MorselSizer:
             want = max(self.target_s / b, self._OVERHEAD_K * a / b)
             size = int(min(self.hi, max(self.lo, want)))
             self.size = max(self.lo, min(self.hi, size - size % 4096))
+            # in-flight scaling from the same signal: fast morsels keep the
+            # full window/prefetch; morsels k× over target shrink both ~1/k
+            ratio = min(1.0, self.target_s / max(mt, 1e-12))
+            lo_w = self.workers + 1
+            self.window = lo_w + int(round((self.max_window - lo_w) * ratio))
+            self.prefetch_depth = max(1, min(self.max_prefetch, 1 + int(round((self.max_prefetch - 1) * ratio))))
 
 
 @dataclass
 class ExecutorStats:
     """Per-run executor observability.  One entry per pipeline stage drive:
-    ``{"morsel_rows": final size, "auto": bool, "morsels": n, "rows": n}``.
-    Filled in as each stage finishes (the output SDF is lazy).  When the run
-    has a memory budget, ``to_dict()`` additionally carries the shared
-    accountant's ``"spill"`` counters (budget, bytes/partitions/batches
-    spilled, grace-hash recursion depth)."""
+    ``{"morsel_rows": final size, "auto": bool, "morsels": n, "rows": n,
+    "window": reorder-window morsels, "prefetch_depth": source read-ahead}``.
+    Completed entries land as each stage finishes; stages still driving are
+    reported live (``"live": True`` — flow STATUS progress) from their
+    attached sizers.  When the run has a memory budget, ``to_dict()``
+    additionally carries the shared accountant's ``"spill"`` counters
+    (budget, bytes/partitions/batches spilled, grace-hash recursion depth)."""
 
     pipelines: list = field(default_factory=list)
     accountant: MemoryAccountant | None = None
+    live: list = field(default_factory=list)
+
+    @staticmethod
+    def _entry(sizer: _MorselSizer) -> dict:
+        return {
+            "morsel_rows": sizer.size,
+            "auto": sizer.adaptive,
+            "morsels": sizer.morsels,
+            "rows": sizer.rows,
+            "window": sizer.window,
+            "prefetch_depth": sizer.prefetch_depth,
+        }
+
+    def attach(self, sizer: _MorselSizer) -> None:
+        self.live.append(sizer)
 
     def record(self, sizer: _MorselSizer) -> None:
-        self.pipelines.append(
-            {
-                "morsel_rows": sizer.size,
-                "auto": sizer.adaptive,
-                "morsels": sizer.morsels,
-                "rows": sizer.rows,
-            }
-        )
+        try:
+            self.live.remove(sizer)
+        except ValueError:
+            pass
+        self.pipelines.append(self._entry(sizer))
 
     def chosen_morsel_rows(self) -> int | None:
         """The (last pipeline's) tuned morsel size, or None before any
         pipeline completed."""
         return self.pipelines[-1]["morsel_rows"] if self.pipelines else None
 
+    def progress(self) -> dict:
+        """Aggregate morsel/row progress across finished + live stages."""
+        done = list(self.pipelines)
+        running = [self._entry(s) for s in list(self.live)]
+        return {
+            "morsels_done": sum(p["morsels"] for p in done + running),
+            "rows_processed": sum(p["rows"] for p in done + running),
+            "stages_done": len(done),
+            "stages_running": len(running),
+        }
+
     def to_dict(self) -> dict:
-        d = {"pipelines": list(self.pipelines)}
+        d = {"pipelines": list(self.pipelines), **self.progress()}
         if self.accountant is not None:
             d["spill"] = self.accountant.to_dict()
         return d
@@ -383,11 +431,14 @@ _DONE = object()
 class _Prefetch:
     """Pulls an SDF's batches on a background thread into a bounded queue.
     Exceptions (e.g. a dead exchange pull) are re-raised to the consumer
-    with their original type, so upstream resilience/retry still works."""
+    with their original type, so upstream resilience/retry still works.
+    ``depth_fn`` (optional) makes the bound dynamic: the adaptive morsel
+    sizer shrinks source read-ahead when batches turn out expensive."""
 
-    def __init__(self, sdf: StreamingDataFrame, depth: int):
+    def __init__(self, sdf: StreamingDataFrame, depth: int, depth_fn=None):
         self._sdf = sdf
         self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
+        self._depth_fn = depth_fn
         self._stop = False
         self._exc: BaseException | None = None
         self._thread: threading.Thread | None = None
@@ -408,6 +459,9 @@ class _Prefetch:
 
     def _put(self, item) -> bool:
         while not self._stop:
+            if self._depth_fn is not None and self._q.qsize() >= self._depth_fn():
+                time.sleep(0.01)  # dynamic bound tightened below queue capacity
+                continue
             try:
                 self._q.put(item, timeout=0.1)
                 return True
@@ -489,20 +543,36 @@ def _run_ordered(
     backend: ComputeBackend,
     make_item: Callable,
     stats: ExecutorStats | None = None,
+    cancel: threading.Event | None = None,
 ):
     """Drive branches' morsels through a worker pool; yield non-None
     ``make_item(ops, morsel)`` results in strict input order.
 
     With ``num_workers <= 1`` this degrades to a fully synchronous loop —
-    no threads, reference pull-chain behavior."""
+    no threads, reference pull-chain behavior.
+
+    ``cancel`` is the flow-lifecycle hook: when the event fires, workers
+    stop claiming morsels and the driver raises ``FlowCancelled`` instead
+    of blocking on upstream, so a CANCELled plan releases its threads,
+    prefetchers, and spill files within a bounded delay."""
     compiled = [(br, _finalize_ops(br.specs, backend)) for br in branches]
-    sizer = _MorselSizer(cfg.initial_morsel_rows(), cfg.auto_morsels)
+    sizer = _MorselSizer(
+        cfg.initial_morsel_rows(),
+        cfg.auto_morsels,
+        workers=max(1, cfg.num_workers),
+        window=cfg.effective_window(),
+        prefetch=cfg.prefetch_batches,
+    )
+    if stats is not None:
+        stats.attach(sizer)  # live progress (flow STATUS) before the stage ends
 
     if cfg.num_workers <= 1:
         try:
             for br, ops in compiled:
                 for batch in br.sdf.iter_batches():
                     for m in _morsel_slices(batch, sizer):
+                        if cancel is not None and cancel.is_set():
+                            raise FlowCancelled("execution cancelled")
                         t0 = time.perf_counter()
                         out = make_item(ops, m)
                         sizer.observe(m.num_rows, time.perf_counter() - t0)
@@ -513,8 +583,8 @@ def _run_ordered(
                 stats.record(sizer)
         return
 
-    window = cfg.effective_window()
-    prefetchers = [_Prefetch(br.sdf, cfg.prefetch_batches) for br, _ in compiled]
+    depth_fn = (lambda: sizer.prefetch_depth) if cfg.auto_morsels else None
+    prefetchers = [_Prefetch(br.sdf, cfg.prefetch_batches, depth_fn=depth_fn) for br, _ in compiled]
     for pf in prefetchers:
         pf.start()  # all sources (incl. every exchange pull) activate now
 
@@ -535,10 +605,11 @@ def _run_ordered(
                 while (
                     not state["stop"]
                     and state["error"] is None
-                    and state["assigned"] - state["next"] >= window
+                    and not (cancel is not None and cancel.is_set())
+                    and state["assigned"] - state["next"] >= sizer.window
                 ):
-                    cond.wait()
-                if state["stop"] or state["error"] is not None:
+                    cond.wait(timeout=0.1)
+                if state["stop"] or state["error"] is not None or (cancel is not None and cancel.is_set()):
                     return
             with src_lock:
                 if state["total"] is not None:
@@ -582,9 +653,12 @@ def _run_ordered(
                 while (
                     state["next"] not in state["buf"]
                     and state["error"] is None
+                    and not (cancel is not None and cancel.is_set())
                     and not (state["total"] is not None and state["next"] >= state["total"])
                 ):
                     cond.wait(timeout=0.1)
+                if cancel is not None and cancel.is_set():
+                    raise FlowCancelled("execution cancelled")
                 if state["error"] is not None:
                     raise state["error"]
                 if state["next"] not in state["buf"]:
@@ -674,12 +748,14 @@ class _Compiler:
         backend: ComputeBackend,
         stats: ExecutorStats | None = None,
         acct: MemoryAccountant | None = None,
+        cancel=None,
     ):
         self.dag = dag
         self.resolver = resolver
         self.cfg = cfg
         self.backend = backend
         self.stats = stats
+        self.cancel = cancel  # flow-lifecycle cancellation event (or None)
         # one accountant per run, shared by every breaker in the plan
         self.acct = acct if acct is not None else MemoryAccountant(cfg.memory_budget)
         self._memo: dict = {}  # node id -> (branches, schema)
@@ -694,12 +770,12 @@ class _Compiler:
             return branches[0].sdf  # nothing to compute: pass the source through
 
         def gen():
-            yield from _run_ordered(branches, self.cfg, self.backend, _apply_ops, self.stats)
+            yield from _run_ordered(branches, self.cfg, self.backend, _apply_ops, self.stats, self.cancel)
 
         return StreamingDataFrame(schema, gen)
 
     def _collect_stage(self, branches: list, schema: Schema) -> RecordBatch:
-        got = list(_run_ordered(branches, self.cfg, self.backend, _apply_ops, self.stats))
+        got = list(_run_ordered(branches, self.cfg, self.backend, _apply_ops, self.stats, self.cancel))
         return concat_batches(got) if got else RecordBatch.empty(schema)
 
     # -- recursive compilation ---------------------------------------------
@@ -770,7 +846,7 @@ class _Compiler:
         if missing:
             raise SchemaError(f"aggregate keys missing from input: {missing}")
         out_schema = Schema(agg_out_fields(in_schema, keys, aggs, mode))
-        cfg, backend, stats, acct = self.cfg, self.backend, self.stats, self.acct
+        cfg, backend, stats, acct, cancel = self.cfg, self.backend, self.stats, self.acct, self.cancel
         spillable = acct.enabled and GraceHashAggregate.supported(keys, aggs, mode, in_schema)
         if acct.enabled and keys and not spillable:
             # a keyless aggregate is a single bounded group — but a name
@@ -804,7 +880,7 @@ class _Compiler:
             spiller = None
             reserved = 0
             try:
-                for st in _run_ordered(branches, cfg, backend, fold, stats):
+                for st in _run_ordered(branches, cfg, backend, fold, stats, cancel):
                     if spiller is not None:
                         spiller.spill_state(st)
                         continue
@@ -875,10 +951,10 @@ class _Compiler:
         cannot be retried).  Only a spilled build degrades to the serial
         partition-paired drive.  Collected results are byte-identical to
         the fused in-memory probe either way."""
-        cfg, backend, stats, acct = self.cfg, self.backend, self.stats, self.acct
+        cfg, backend, stats, acct, cancel = self.cfg, self.backend, self.stats, self.acct, self.cancel
 
         def build():
-            batches = _run_ordered(right_branches, cfg, backend, _apply_ops, stats)
+            batches = _run_ordered(right_branches, cfg, backend, _apply_ops, stats, cancel)
             return collect_build(
                 batches,
                 rs,
@@ -904,7 +980,7 @@ class _Compiler:
             res = once.get()
             if res[0] == "mem":
                 probe_branches = [_Branch(left_sdf, [("probe", (_MemTable(), on, payload, schema))])]
-                yield from _run_ordered(probe_branches, cfg, backend, _apply_ops, stats)
+                yield from _run_ordered(probe_branches, cfg, backend, _apply_ops, stats, cancel)
             else:
                 yield from spilled_join_stream(
                     res[1],
@@ -927,13 +1003,17 @@ def execute_parallel(
     source_resolver: Callable[[Node], StreamingDataFrame],
     config: ExecutorConfig | None = None,
     stats: ExecutorStats | None = None,
+    cancel=None,
 ) -> StreamingDataFrame:
     """Wire the DAG into morsel-parallel pipelines and return the output SDF.
 
     Semantics match ``operators.execute`` (same rows, same order for a given
     morsel size); execution is lazy — workers start on the first pull.
     ``stats`` (or ``get_last_stats()``) collects per-pipeline morsel counts
-    and the tuned morsel size as the output is consumed."""
+    and the tuned morsel size as the output is consumed.  ``cancel`` (a
+    ``threading.Event``) is the flow-lifecycle cancellation hook: setting it
+    makes every stage raise ``FlowCancelled`` and release its workers,
+    prefetchers, and spill state within a bounded delay."""
     global _last_stats
     cfg = config or ExecutorConfig()
     backend = get_backend(cfg.backend)
@@ -943,4 +1023,4 @@ def execute_parallel(
     stats.accountant = acct
     with _last_stats_lock:
         _last_stats = stats
-    return _Compiler(dag, source_resolver, cfg, backend, stats, acct).compile()
+    return _Compiler(dag, source_resolver, cfg, backend, stats, acct, cancel).compile()

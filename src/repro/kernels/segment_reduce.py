@@ -17,11 +17,12 @@ the TPU, using the same one-hot MXU pattern as ``filter_select``:
   * **segment_minmax_tiles** — per-group min/max via a masked broadcast
     reduce (VPU): ``where(onehot, vals, sentinel)`` reduced over the tile
     axis, accumulated across tiles with ``minimum``/``maximum``.  Exact for
-    float32 (comparisons only, no arithmetic) and int32.  int64 min/max run
-    as **two passes** of this kernel (host-orchestrated in
+    float32 (comparisons only, no arithmetic) and int32.  Wide min/max —
+    int64, and uint64/float64 through an order-preserving int64 key image —
+    run as **two passes** of this kernel (host-orchestrated in
     ``repro.core.backend``): pass 1 reduces the signed hi words, pass 2 the
     sign-flipped lo words among rows at their group's hi extreme — the
-    lexicographic (hi, lo') order equals int64 order, full 64-bit exact.
+    lexicographic (hi, lo') order equals the key order, full 64-bit exact.
 
 Group ids ≥ the padded group count never occur (the backend caps
 eligibility at ``ngroups <= G``); padding **rows** are masked with the

@@ -6,15 +6,18 @@ Responsibilities:
   * schema-aware columnar operator execution (delegates to
     ``repro.core.operators`` — Filter/Select/Map/... run vectorized on the
     columnar layout);
-  * the **flow table**: published sub-task result streams, token-gated,
-    with TTL — the reverse-supply rendezvous used by cross-domain plans;
+  * the **flow table** — now owned by ``repro.server.flows.FlowManager``:
+    published sub-task result streams stay token-gated with TTL (the
+    reverse-supply rendezvous used by cross-domain plans) and additionally
+    carry the full flow lifecycle (states, seq-numbered resumable buffers,
+    CANCEL propagation); the engine keeps thin delegating wrappers so the
+    pre-flow API (``publish_flow``/``take_flow``/...) is unchanged;
   * pushdown: every DAG is re-optimized server-side before execution (the
     optimizer is pure DAG→DAG, identical on client and server).
 """
 
 from __future__ import annotations
 
-import threading
 import time
 
 from repro.core.dag import Dag, Node
@@ -27,22 +30,9 @@ from repro.core.tokens import TokenAuthority
 from repro.core.uri import parse as parse_uri
 from repro.server import datasource
 from repro.server.catalog import Catalog
+from repro.server.flows import FLOW_TTL_S, FlowManager
 
-__all__ = ["SDFEngine", "PublishedFlow"]
-
-FLOW_TTL_S = 600.0
-
-
-class PublishedFlow:
-    __slots__ = ("flow_id", "factory", "token_raw", "expires_at", "pulls", "rows_out")
-
-    def __init__(self, flow_id: str, factory, token_raw: str, ttl_s: float = FLOW_TTL_S):
-        self.flow_id = flow_id
-        self.factory = factory  # () -> StreamingDataFrame (fresh stream per pull)
-        self.token_raw = token_raw
-        self.expires_at = time.time() + ttl_s
-        self.pulls = 0
-        self.rows_out = 0  # rows that crossed the exchange via this flow
+__all__ = ["SDFEngine", "FLOW_TTL_S"]
 
 
 class SDFEngine:
@@ -54,6 +44,7 @@ class SDFEngine:
         remote_pull=None,
         aliases=None,
         executor: ExecutorConfig | None = None,
+        flows: FlowManager | None = None,
     ):
         self.authority = authority
         self.aliases = aliases if aliases is not None else {authority}
@@ -68,8 +59,8 @@ class SDFEngine:
         # stats of the most recent parallel COOK (tuned morsel size etc.);
         # entries land as the lazy result stream is consumed
         self.last_executor_stats: ExecutorStats | None = None
-        self._flows: dict = {}
-        self._lock = threading.Lock()
+        # lifecycle owner of every COOK/SUBMIT flow on this server
+        self.flows = flows if flows is not None else FlowManager(authority)
 
     # -- GET path -----------------------------------------------------------------
     def open_uri(
@@ -101,8 +92,13 @@ class SDFEngine:
         )
 
     # -- COOK path -----------------------------------------------------------------
-    def execute_dag(self, dag: Dag) -> StreamingDataFrame:
-        """Optimize + lazily execute a (fragment) DAG against this domain."""
+    def execute_dag(self, dag: Dag, stats: ExecutorStats | None = None, cancel=None) -> StreamingDataFrame:
+        """Optimize + lazily execute a (fragment) DAG against this domain.
+
+        ``stats`` collects this run's executor observability (flows pass a
+        per-flow instance so STATUS reports live progress); ``cancel`` is
+        the flow-lifecycle cancellation event threaded into every pipeline
+        stage of the parallel executor."""
         dag = optimize(dag)
 
         def resolver(node: Node) -> StreamingDataFrame:
@@ -123,9 +119,10 @@ class SDFEngine:
 
         if self.executor.num_workers <= 0:
             return execute(dag, resolver)  # reference single-threaded pull chain
-        stats = ExecutorStats()
+        if stats is None:
+            stats = ExecutorStats()
         self.last_executor_stats = stats
-        return execute_parallel(dag, resolver, self.executor, stats=stats)
+        return execute_parallel(dag, resolver, self.executor, stats=stats, cancel=cancel)
 
     def _remote(self, node: Node) -> StreamingDataFrame:
         if self.remote_pull is None:
@@ -137,29 +134,47 @@ class SDFEngine:
             node.params.get("predicate"),
         )
 
-    # -- flow table -------------------------------------------------------------------
-    def publish_flow(self, flow_id: str, factory, ttl_s: float = FLOW_TTL_S) -> str:
-        """Register a lazily-evaluated stream; returns the raw pull token."""
+    # -- flow table (delegated to the FlowManager) ---------------------------------
+    def publish_flow(self, flow_id: str, factory, ttl_s: float = FLOW_TTL_S, owner: str = "") -> str:
+        """Register a lazily-evaluated stream; returns the raw pull token.
+
+        The factory may accept ``stats``/``cancel`` keyword arguments (flow
+        lifecycle hooks); plain zero-argument factories (the pre-flow API)
+        keep working unchanged."""
         token = self.tokens.mint_flow_token(flow_id, resource=f"/.flow/{flow_id}", ttl_s=ttl_s)
-        with self._lock:
-            self._gc_locked()
-            self._flows[flow_id] = PublishedFlow(flow_id, factory, token.raw, ttl_s)
+        # decide the calling convention ONCE from the signature — catching
+        # TypeError at call time would misread a TypeError raised inside the
+        # factory body as a signature mismatch and run the factory twice
+        import inspect
+
+        try:
+            params = inspect.signature(factory).parameters.values()
+            takes_hooks = any(
+                p.kind == inspect.Parameter.VAR_KEYWORD or p.name in ("stats", "cancel") for p in params
+            )
+        except (TypeError, ValueError):
+            takes_hooks = False
+
+        def factory_with_hooks(stats=None, cancel=None, _f=factory):
+            if takes_hooks:
+                return _f(stats=stats, cancel=cancel)
+            return _f()
+
+        self.flows.publish(flow_id, factory_with_hooks, token.raw, ttl_s, owner=owner)
         return token.raw
 
     def take_flow(self, flow_id: str) -> StreamingDataFrame:
-        with self._lock:
-            self._gc_locked()
-            flow = self._flows.get(flow_id)
-        if flow is None:
+        fl = self._published(flow_id)
+        return self.flows.take(fl)
+
+    def _published(self, flow_id: str):
+        try:
+            fl = self.flows.get(flow_id)
+        except ResourceNotFound:
+            raise ResourceNotFound(f"no published flow {flow_id!r}") from None
+        if fl.kind != "submit":
             raise ResourceNotFound(f"no published flow {flow_id!r}")
-        flow.pulls += 1
-        sdf = flow.factory()
-
-        def account(b):
-            flow.rows_out += b.num_rows
-            return b
-
-        return sdf.map_batches(account)
+        return fl
 
     def verify_flow_token(self, flow_id: str, token_raw: str | None) -> None:
         if token_raw is None:
@@ -171,16 +186,22 @@ class SDFEngine:
             raise TokenError(f"flow {flow_id} requires its scoped flow token")
 
     def drop_flow(self, flow_id: str) -> None:
-        with self._lock:
-            self._flows.pop(flow_id, None)
+        self.flows.drop(flow_id)
 
     def flow_stats(self) -> dict:
-        """Per-flow pull/row accounting (exchange-traffic observability)."""
-        with self._lock:
-            return {
-                fid: {"pulls": f.pulls, "rows_out": f.rows_out, "expires_at": f.expires_at}
-                for fid, f in self._flows.items()
+        """Per-flow pull/row accounting (exchange-traffic observability).
+        Uses the manager's read-only snapshot — monitoring must not refresh
+        idle clocks or it would keep abandoned flows alive."""
+        return {
+            fl.flow_id: {
+                "pulls": fl.pulls,
+                "rows_out": fl.rows_out + fl.rows_emitted,
+                "expires_at": fl.expires_at,
+                "state": fl.state,
             }
+            for fl in self.flows.records()
+            if fl.kind == "submit"
+        }
 
     def executor_stats(self) -> dict:
         """Morsel-executor observability for the most recent parallel COOK:
@@ -201,29 +222,25 @@ class SDFEngine:
         if uri.segments and uri.segments[0] == ".flow":
             if len(uri.segments) != 2:
                 raise ResourceNotFound(f"bad flow uri {uri_str}")
-            flow_id = uri.segments[1]
-            with self._lock:
-                flow = self._flows.get(flow_id)
-            if flow is None:
-                raise ResourceNotFound(f"no published flow {flow_id!r}")
+            flow = self._published(uri.segments[1])
+            flow_id = flow.flow_id
+            ttl = max(0.0, flow.expires_at - time.time()) if flow.expires_at else 0.0
             return {
                 "uri": uri_str,
                 "kind": "flow",
                 "dataset": None,
                 "path": f".flow/{flow_id}",
                 "schema": None,  # activating the factory would move data
-                "stats": {"pulls": flow.pulls, "rows_out": flow.rows_out, "ttl_s": max(0.0, flow.expires_at - time.time())},
+                "stats": {
+                    "pulls": flow.pulls,
+                    "rows_out": flow.rows_out,
+                    "ttl_s": ttl,
+                    "state": flow.state,
+                },
                 "policy": {"public": False, "allowed_subjects": [f"flow:{flow_id}"]},
                 "metadata": {},
             }
         return self.catalog.describe(uri, subject=subject)
 
-    def _gc_locked(self) -> None:
-        now = time.time()
-        dead = [k for k, v in self._flows.items() if v.expires_at < now]
-        for k in dead:
-            del self._flows[k]
-
     def flow_ids(self) -> list:
-        with self._lock:
-            return sorted(self._flows)
+        return [fl.flow_id for fl in self.flows.records() if fl.kind == "submit"]

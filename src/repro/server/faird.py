@@ -7,12 +7,24 @@ Request verbs (REQUEST frame header ``{"verb": ..., "uri": ..., "token": ...}``)
              multiplexed session (response advertises ``proto``)
     GET      stream an SDF; honors scan pushdown params (columns / predicate)
     PUT      ingest an SDF stream into a dataset path
-    COOK     body = DAG json; server optimizes, plans, coordinates cross-domain
-             sub-tasks, and streams the root result (non-blocking first batch)
+    COOK     body = DAG json; blocking execute-and-stream.  Since the flow
+             redesign this is START+FETCH server-side: the plan runs as an
+             (anonymous) flow whose buffered frames are drained inline —
+             same wire shape as before, for v1/v2 peers alike
+    START    body = DAG json; returns a flow handle (``flow_id``) at once —
+             the plan runs asynchronously under the server's FlowManager
+    FETCH    stream a flow's seq-numbered result frames from ``from_seq``;
+             cursor-based and resumable — a reconnecting client re-FETCHes
+             from its last acked seq and gets byte-identical frames.  Over a
+             v2 session the client acks in-band (OK frames on the rid)
+    STATUS   flow progress: state, seq/rows/bytes counters, live executor
+             morsel counts + spill counters, per-subtask scheduler state
+    CANCEL   cancel a flow; propagates cross-domain to child SUBMIT flows
+             and tears down executor pipelines/spill files within a deadline
     SUBMIT   internal: register a plan fragment; returns a flow pull token
     LIST     paged catalog enumeration — metadata only, no data files opened
     DESCRIBE schema + stats + policy for one URI — metadata only
-    PING     heartbeat (scheduler liveness probes)
+    PING     heartbeat (scheduler liveness probes + flow-table counters)
     BYE      close the connection / session
 
 DACP v2 multiplexing: a REQUEST carrying a ``rid`` is dispatched to a worker
@@ -27,6 +39,7 @@ usual deployment inside a training pod) and TCP sockets (standalone server).
 
 from __future__ import annotations
 
+import queue
 import threading
 import time
 
@@ -82,8 +95,22 @@ class FairdServer:
             aliases=self.aliases,
             executor=self.executor,
         )
+        self.flows = self.engine.flows  # lifecycle owner of every COOK/SUBMIT
         self.started_at = time.time()
-        self.stats = {"get": 0, "put": 0, "cook": 0, "submit": 0, "list": 0, "describe": 0, "rows_out": 0, "rows_in": 0}
+        self.stats = {
+            "get": 0,
+            "put": 0,
+            "cook": 0,
+            "submit": 0,
+            "list": 0,
+            "describe": 0,
+            "start": 0,
+            "fetch": 0,
+            "status": 0,
+            "cancel": 0,
+            "rows_out": 0,
+            "rows_in": 0,
+        }
         self._tcp_server = None
 
     # ------------------------------------------------------------------ wiring
@@ -216,6 +243,7 @@ class FairdServer:
                     "uptime": time.time() - self.started_at,
                     "stats": self.stats,
                     "executor": self.engine.executor_stats(),
+                    "flows": self.flows.stats(),
                 },
             )
             return False
@@ -253,15 +281,52 @@ class FairdServer:
             channel.send(framing.OK, {"rows": rows, "path": uri.path})
             return False
         if verb == "COOK":
-            self._authorize(header, "COOK")
+            # blocking verb, kept for v1/v2 peers — implemented as START +
+            # inline FETCH-from-0 on an anonymous flow (ack-on-send: COOK has
+            # no resume contract), dropped as soon as the stream completes
+            subject = self._authorize(header, "COOK")
             self.stats["cook"] += 1
             dag = Dag.from_bytes(bytes(body))
-            sdf = self.cook(dag)
-            self.stats["rows_out"] += send_sdf(channel, prefetch_sdf(sdf, self.executor.stream_depth))
+            fl = self.flows.start(subject, self._flow_runner(dag))
+            try:
+                self.stats["rows_out"] += self._serve_flow_stream(channel, fl, 0, ack_on_send=True)
+            finally:
+                self.flows.cancel(fl.flow_id, deadline_s=5.0, network=self.network)
+                self.flows.drop(fl.flow_id)
+            return False
+        if verb == "START":
+            # asynchronous COOK: return a flow handle immediately
+            subject = self._authorize(header, "COOK")
+            self.stats["start"] += 1
+            dag = Dag.from_bytes(bytes(body))
+            fl = self.flows.start(subject, self._flow_runner(dag))
+            channel.send(framing.OK, {"flow_id": fl.flow_id, "state": fl.state})
+            return False
+        if verb == "FETCH":
+            self.stats["fetch"] += 1
+            fl = self._flow_for(header, verb="FETCH")
+            if fl.kind == "submit":
+                self.flows.activate(fl)  # lazy loading: first FETCH runs the fragment
+            from_seq = int(header.get("from_seq", 0))
+            # a v2 rid carries in-band acks; the v1 inline path cannot, so it
+            # degrades to ack-on-send (no mid-stream resume on legacy wires)
+            ack_on_send = getattr(channel, "rid", None) is None
+            self.stats["rows_out"] += self._serve_flow_stream(channel, fl, from_seq, ack_on_send=ack_on_send)
+            return False
+        if verb == "STATUS":
+            self.stats["status"] += 1
+            fl = self._flow_for(header, verb="STATUS")
+            channel.send(framing.OK, self.flows.status(fl))
+            return False
+        if verb == "CANCEL":
+            self.stats["cancel"] += 1
+            fl = self._flow_for(header, verb="CANCEL")
+            deadline = float(header.get("deadline", 5.0))
+            channel.send(framing.OK, self.flows.cancel(fl.flow_id, deadline_s=deadline, network=self.network))
             return False
         if verb == "SUBMIT":
             # internal cross-domain fragment registration (scheduler-called)
-            self.tokens.verify(header.get("token", ""), resource="*", verb="COOK")
+            claims = self.tokens.verify(header.get("token", ""), resource="*", verb="COOK")
             self.stats["submit"] += 1
             frag = Dag.from_bytes(bytes(body))
             flow_id = header["flow_id"]
@@ -269,7 +334,13 @@ class FairdServer:
             for n in frag.nodes.values():
                 if n.op == "exchange" and n.params.get("producer") in exchange_tokens:
                     n.params["token"] = exchange_tokens[n.params["producer"]]
-            pull_token = self.engine.publish_flow(flow_id, lambda frag=frag: self.engine.execute_dag(frag.copy()))
+            pull_token = self.engine.publish_flow(
+                flow_id,
+                lambda stats=None, cancel=None, frag=frag: self.engine.execute_dag(
+                    frag.copy(), stats=stats, cancel=cancel
+                ),
+                owner=claims.get("sub", ""),
+            )
             channel.send(framing.OK, {"flow_id": flow_id, "token": pull_token})
             return False
         if verb == "LIST":
@@ -294,15 +365,120 @@ class FairdServer:
             return True
         raise DacpError(f"unknown verb {verb!r}")
 
-    # ------------------------------------------------------------------ COOK
+    # ------------------------------------------------------------------ COOK / flows
     def cook(self, dag: Dag):
         """Optimize → plan → schedule cross-domain fragments → root stream."""
+        sdf, _sched = self.plan_and_schedule(dag)
+        return sdf
+
+    def plan_and_schedule(self, dag: Dag, stats=None, cancel=None, attach=None):
+        """``cook`` plus the scheduler that ran it — the flow path keeps the
+        scheduler for STATUS (per-subtask state) and CANCEL propagation.
+        ``attach(sched)`` fires before registration starts so a concurrent
+        CANCEL can reach children submitted while the plan is still being
+        laid out."""
         from repro.server.scheduler import CrossDomainScheduler
 
         dag = optimize(dag)
         the_plan = plan_dag(dag, client_domain=self.authority)
-        sched = CrossDomainScheduler(coordinator=self, network=self.network)
-        return sched.run(the_plan)
+        sched = CrossDomainScheduler(coordinator=self, network=self.network, cancel=cancel)
+        if attach is not None:
+            attach(sched)
+        return sched.run(the_plan, stats=stats), sched
+
+    def _flow_runner(self, dag: Dag):
+        """Producer entry point for a cook flow (START / blocking COOK)."""
+
+        def runner(stats, cancel, attach=None):
+            return self.plan_and_schedule(dag, stats=stats, cancel=cancel, attach=attach)
+
+        return runner
+
+    def _flow_for(self, header: dict, verb: str):
+        """Resolve + authorize a flow verb's target.
+
+        Submit-kind flows accept their single-purpose scoped pull token (the
+        scheduler/coordinator holds it); otherwise the session token must
+        carry COOK rights and its subject must own the flow."""
+        flow_id = header.get("flow_id") or ""
+        fl = self.flows.get(flow_id)
+        token = header.get("token")
+        if fl.kind == "submit" and token:
+            try:
+                self.engine.verify_flow_token(flow_id, token)
+                return fl
+            except TokenError:
+                pass  # fall through to owner-session auth
+        claims = self.tokens.verify(token or "", resource="*", verb="COOK")
+        if fl.owner and claims.get("sub", "") != fl.owner:
+            raise PermissionDenied(f"flow {flow_id} is owned by another subject")
+        return fl
+
+    def _serve_flow_stream(self, channel, fl, from_seq: int, ack_on_send: bool) -> int:
+        """Stream a flow's buffered frames from ``from_seq``: SCHEMA, then
+        seq-tagged BATCH frames, then END/ERROR.  ``ack_on_send`` releases
+        each frame as soon as it is written (blocking COOK / legacy FETCH);
+        otherwise frames are retained until the client acks in-band, which
+        is what makes a re-FETCH after a dropped channel byte-identical."""
+        mgr = self.flows
+        with fl.cond:
+            fl.consumers += 1  # idle-reap exemption while this loop serves
+        try:
+            return self._serve_flow_frames(channel, fl, from_seq, ack_on_send)
+        finally:
+            with fl.cond:
+                fl.consumers -= 1
+
+    def _serve_flow_frames(self, channel, fl, from_seq: int, ack_on_send: bool) -> int:
+        mgr = self.flows
+        mgr.ack(fl, from_seq)
+        schema_json = mgr.wait_ready(fl)
+        channel.send(framing.SCHEMA, {"schema": schema_json, "flow_id": fl.flow_id, "from_seq": from_seq})
+        cursor = from_seq
+        rows = 0
+        while True:
+            if not ack_on_send and not self._drain_acks(channel, fl):
+                return rows  # consumer channel died; the flow stays resumable
+            item = mgr.next_frame(fl, cursor, timeout=0.1)
+            if item is None:
+                continue
+            kind = item[0]
+            try:
+                if kind == "batch":
+                    _k, hdr, parts, nrows = item
+                    channel.send(framing.BATCH, hdr, parts)
+                    cursor += 1
+                    rows += nrows
+                    if ack_on_send:
+                        mgr.ack(fl, cursor)
+                elif kind == "end":
+                    channel.send(framing.END, {"rows": item[1], "next_seq": cursor})
+                    mgr.mark_delivered(fl)
+                    return rows
+                else:  # terminal error (FAILED / CANCELLED / released seq)
+                    send_error(channel, DacpError.from_wire(item[1]))
+                    return rows
+            except (DacpError, OSError):
+                # the consumer's socket died mid-write: stop serving quietly;
+                # unacked frames stay buffered for the re-FETCH
+                return rows
+
+    def _drain_acks(self, channel, fl) -> bool:
+        """Apply in-band acks queued on a v2 FETCH's rid; False when the
+        consumer's channel died (stop serving, keep the flow resumable)."""
+        inbox = getattr(channel, "inbox", None)
+        if inbox is None:
+            return True
+        while True:
+            try:
+                item = inbox.get_nowait()
+            except queue.Empty:
+                return True
+            if isinstance(item, Exception):
+                return False
+            ftype, hdr, _body = item
+            if ftype == framing.OK and isinstance(hdr, dict) and "ack" in hdr:
+                self.flows.ack(fl, int(hdr["ack"]))
 
     # ------------------------------------------------------------------ TCP
     def serve_tcp(self, host: str = "127.0.0.1", port: int = 0):

@@ -1,0 +1,552 @@
+"""Flow lifecycle manager — asynchronous, cancellable, resumable
+reverse-supply flows (paper §III-D, redesigned execution surface).
+
+Every running COOK and SUBMIT is owned by the server's ``FlowManager`` as a
+**flow**: an id, a state machine, bounded result buffering, and seq-numbered
+result batches.  The lifecycle::
+
+    PLANNED ──► RUNNING ──► DRAINING ──► DONE
+       │           │            │
+       └───────────┴────────────┴──────► CANCELLED / FAILED
+
+  * ``PLANNED``   the flow exists; no computation has produced anything yet
+                  (START just returned, or a SUBMIT fragment awaits its
+                  first pull — lazy loading is preserved).
+  * ``RUNNING``   a producer thread is driving the plan; batches accumulate
+                  in the flow's bounded buffer.
+  * ``DRAINING``  the producer finished (END is buffered) but unacked
+                  batches remain for a (re)connecting consumer.
+  * ``DONE``      END was delivered.  ``CANCELLED``/``FAILED`` are the other
+                  terminal states.
+
+**Seq-numbered, resumable.**  Each result batch gets a monotonically
+increasing ``seq``; the buffered wire form (BATCH header + zero-copy payload
+parts) is retained until the consumer *acks* it.  A reconnecting client
+re-FETCHes from the last acked seq and receives byte-identical frames — the
+resume is cursor-based, so a dropped channel loses nothing.  Acks arrive as
+``from_seq`` on a (re)FETCH and as in-band OK frames during a live v2 FETCH.
+
+**Bounded buffering.**  The producer blocks once the flow holds more than
+``DACP_FLOW_BUFFER`` unacked bytes (and at least one batch), propagating
+backpressure into the executor's reorder window instead of buffering an
+unbounded result server-side.
+
+**Cancellation.**  ``cancel`` flips the flow's cancel event (checked by the
+morsel executor between morsels and by the producer between batches), asks
+the cross-domain scheduler to CANCEL child SUBMIT flows at their domains,
+and joins the producer within a deadline — tearing down executor pipelines
+and spill files (their ``finally`` blocks run as the plan's generators
+close).
+
+**Retention.**  Terminal flows (DONE/FAILED/CANCELLED) and their buffered
+batches are reaped after ``DACP_FLOW_TTL`` seconds; a flow no consumer has
+touched for ``idle_ttl_s`` is cancelled and reaped.  Reap counts are
+PING-visible (``flows.reaped``) so abandoned flows never leak silently.
+
+SUBMIT-published fragments live here too (kind ``submit``): they keep the
+token-gated lazy ``factory`` activation used by exchange GETs, and a FETCH
+on them activates the same buffered/resumable machinery — which is what
+subsumes the scheduler's old reopen-and-skip-rows resilience.
+"""
+
+from __future__ import annotations
+
+import itertools
+import os
+import threading
+import time
+
+from repro.core.batch import RecordBatch
+from repro.core.errors import DacpError, FlowCancelled, ResourceNotFound
+from repro.core.executor import ExecutorStats, _env_bytes
+
+__all__ = ["FlowManager", "FlowRecord", "FLOW_STATES", "FLOW_TTL_S"]
+
+FLOW_STATES = ("PLANNED", "RUNNING", "DRAINING", "DONE", "CANCELLED", "FAILED")
+
+# live TTL for published (SUBMIT) fragments awaiting activation — unchanged
+# from the pre-flow engine table
+FLOW_TTL_S = 600.0
+
+
+def _env_float(name: str, default: float) -> float:
+    raw = os.environ.get(name)
+    if raw is None or raw.strip() == "":
+        return default
+    try:
+        v = float(raw)
+    except ValueError:
+        import warnings
+
+        warnings.warn(f"{name}={raw!r} is not a number; using {default}", stacklevel=2)
+        return default
+    return v if v > 0 else default
+
+
+class FlowRecord:
+    """One flow: state machine + seq-numbered bounded result buffer."""
+
+    __slots__ = (
+        "flow_id",
+        "kind",  # "cook" (START/COOK) | "submit" (published fragment)
+        "owner",
+        "state",
+        "created_at",
+        "finished_at",
+        "touched",
+        "error",  # wire dict once FAILED
+        "schema_json",
+        "cancel",  # threading.Event — the executor's cancellation hook
+        "cond",  # guards every mutable field below (one lock per flow)
+        "buffer",  # seq -> (header dict, payload parts, nbytes, rows)
+        "base_seq",  # lowest retained (unacked) seq
+        "next_seq",  # next seq the producer will assign
+        "end_rows",  # total rows, set when the producer finishes cleanly
+        "rows_emitted",
+        "bytes_emitted",
+        "buffered_bytes",
+        "stats",  # per-flow ExecutorStats (morsels, spill counters)
+        "scheduler",  # CrossDomainScheduler for cross-domain plans
+        "producer",  # producer thread once activated
+        "consumers",  # serve loops currently attached (idle-reap exemption)
+        # submit-kind only:
+        "factory",
+        "token_raw",
+        "expires_at",
+        "pulls",
+        "rows_out",
+    )
+
+    def __init__(self, flow_id: str, kind: str, owner: str):
+        self.flow_id = flow_id
+        self.kind = kind
+        self.owner = owner
+        self.state = "PLANNED"
+        self.created_at = time.time()
+        self.finished_at = None
+        self.touched = self.created_at
+        self.error = None
+        self.schema_json = None
+        self.cancel = threading.Event()
+        self.cond = threading.Condition()
+        self.buffer: dict = {}
+        self.base_seq = 0
+        self.next_seq = 0
+        self.end_rows = None
+        self.rows_emitted = 0
+        self.bytes_emitted = 0
+        self.buffered_bytes = 0
+        self.stats = ExecutorStats()
+        self.scheduler = None
+        self.producer = None
+        self.consumers = 0
+        self.factory = None
+        self.token_raw = None
+        self.expires_at = None
+        self.pulls = 0
+        self.rows_out = 0
+
+    @property
+    def terminal(self) -> bool:
+        return self.state in ("DONE", "CANCELLED", "FAILED")
+
+    @property
+    def ended(self) -> bool:
+        """Producer finished cleanly (END is buffered or delivered)."""
+        return self.end_rows is not None
+
+
+class FlowManager:
+    """Server-side owner of every flow (see module docstring)."""
+
+    def __init__(
+        self,
+        authority: str,
+        buffer_bytes: int | None = None,
+        retain_ttl_s: float | None = None,
+        idle_ttl_s: float = FLOW_TTL_S,
+    ):
+        self.authority = authority
+        # per-flow unacked-byte budget; the producer blocks past it
+        self.buffer_bytes = (
+            buffer_bytes if buffer_bytes is not None else _env_bytes("DACP_FLOW_BUFFER", 32 << 20)
+        )
+        # terminal flows (and their buffers) are reaped after this long
+        self.retain_ttl_s = (
+            retain_ttl_s if retain_ttl_s is not None else _env_float("DACP_FLOW_TTL", 60.0)
+        )
+        self.idle_ttl_s = idle_ttl_s
+        self.reaped = 0  # PING-visible: flows reclaimed by the retention TTL
+        self._flows: dict = {}
+        self._lock = threading.Lock()
+        self._ids = itertools.count(1)
+
+    # ------------------------------------------------------------------ registry
+    def _new_id(self) -> str:
+        return f"F{next(self._ids)}-{os.urandom(4).hex()}"
+
+    def get(self, flow_id: str) -> FlowRecord:
+        with self._lock:
+            self._reap_locked()
+            fl = self._flows.get(flow_id)
+        if fl is None:
+            raise ResourceNotFound(f"no flow {flow_id!r}")
+        fl.touched = time.time()
+        return fl
+
+    def drop(self, flow_id: str) -> None:
+        with self._lock:
+            self._flows.pop(flow_id, None)
+
+    def flow_ids(self) -> list:
+        with self._lock:
+            self._reap_locked()
+            return sorted(self._flows)
+
+    def _reap_locked(self) -> None:
+        now = time.time()
+        dead = []
+        for fid, fl in self._flows.items():
+            if fl.terminal and fl.finished_at is not None and now - fl.finished_at > self.retain_ttl_s:
+                dead.append(fid)  # retention TTL: DONE/FAILED/CANCELLED + buffers
+            elif fl.kind == "submit" and fl.producer is None and fl.expires_at is not None and fl.expires_at < now:
+                dead.append(fid)  # unactivated published fragment expired
+            elif not fl.terminal and fl.consumers <= 0 and now - fl.touched > self.idle_ttl_s:
+                # abandoned mid-run: nothing attached and untouched — a live
+                # consumer blocked waiting for a slow plan's first batch has
+                # its serve loop attached (consumers > 0) and is never reaped
+                dead.append(fid)
+        for fid in dead:
+            fl = self._flows.pop(fid)
+            if not fl.terminal:
+                fl.cancel.set()
+                with fl.cond:
+                    fl.cond.notify_all()
+            with fl.cond:
+                fl.buffer.clear()
+                fl.buffered_bytes = 0
+            self.reaped += 1
+
+    def reap(self) -> None:
+        with self._lock:
+            self._reap_locked()
+
+    def records(self) -> list:
+        """Read-only snapshot of every flow record, id-sorted.  Monitoring
+        MUST use this rather than ``get`` in a loop: it never refreshes the
+        idle clocks (a dashboard poll must not keep abandoned flows alive)
+        and runs the reaper once, not per flow."""
+        with self._lock:
+            self._reap_locked()
+            return [self._flows[fid] for fid in sorted(self._flows)]
+
+    def stats(self) -> dict:
+        """PING surface: flow counts by state + retention-reap counter."""
+        with self._lock:
+            self._reap_locked()
+            by_state: dict = {}
+            buffered = 0
+            for fl in self._flows.values():
+                by_state[fl.state] = by_state.get(fl.state, 0) + 1
+                buffered += fl.buffered_bytes
+            return {
+                "active": len(self._flows),
+                "by_state": by_state,
+                "buffered_bytes": buffered,
+                "reaped": self.reaped,
+            }
+
+    # ------------------------------------------------------------------ start
+    def start(self, owner: str, runner, flow_id: str | None = None) -> FlowRecord:
+        """Create a cook-kind flow and launch its producer immediately.
+
+        ``runner(stats, cancel, attach) -> (StreamingDataFrame, scheduler |
+        None)`` plans and schedules the DAG (injected by the server so the
+        manager stays free of planner dependencies); ``attach(sched)`` must
+        be called as soon as the scheduler exists so a CANCEL that lands
+        mid-registration still reaches the already-submitted children."""
+        fl = FlowRecord(flow_id or self._new_id(), "cook", owner)
+        with self._lock:
+            self._reap_locked()
+            self._flows[fl.flow_id] = fl
+        self._spawn_producer(fl, runner)
+        return fl
+
+    def publish(self, flow_id: str, factory, token_raw: str, ttl_s: float = FLOW_TTL_S, owner: str = "") -> FlowRecord:
+        """Register a SUBMIT fragment as a lazily-activated flow."""
+        fl = FlowRecord(flow_id, "submit", owner)
+        fl.factory = factory
+        fl.token_raw = token_raw
+        fl.expires_at = time.time() + ttl_s
+        with self._lock:
+            self._reap_locked()
+            self._flows[flow_id] = fl
+        return fl
+
+    def activate(self, fl: FlowRecord) -> None:
+        """FETCH on a submit flow: start the buffered producer (idempotent).
+        The factory's stream becomes seq-numbered and resumable."""
+        factory = fl.factory
+
+        def runner(stats, cancel, attach):
+            return factory(stats=stats, cancel=cancel), None
+
+        self._spawn_producer(fl, runner)
+
+    def _spawn_producer(self, fl: FlowRecord, runner) -> None:
+        # claim-then-start: the producer slot is taken atomically under the
+        # flow lock, so two racing first-FETCHes can never both spawn (a
+        # double producer would interleave two copies of the stream into
+        # one seq space)
+        t = threading.Thread(target=self._produce, args=(fl, runner), daemon=True)
+        with fl.cond:
+            if fl.producer is not None or fl.terminal:
+                return
+            fl.producer = t
+        t.start()
+
+    # ------------------------------------------------------------------ producer
+    def _produce(self, fl: FlowRecord, runner) -> None:
+        def attach(sched):
+            with fl.cond:
+                fl.scheduler = sched
+
+        try:
+            sdf, sched = runner(fl.stats, fl.cancel, attach)
+            with fl.cond:
+                fl.scheduler = sched
+                fl.schema_json = sdf.schema.to_json()
+                if not fl.terminal:
+                    fl.state = "RUNNING"
+                fl.cond.notify_all()
+            it = sdf.iter_batches()
+            try:
+                for batch in it:
+                    if fl.cancel.is_set():
+                        break
+                    self._buffer_put(fl, batch)
+            finally:
+                close = getattr(it, "close", None)
+                if close is not None:
+                    close()  # tears down executor workers / prefetchers / spill
+        except FlowCancelled:
+            pass  # the cancel path below settles the state
+        except BaseException as e:  # noqa: BLE001 - becomes the flow's FAILED error
+            err = e if isinstance(e, DacpError) else DacpError(f"flow failed: {type(e).__name__}: {e}")
+            with fl.cond:
+                if not fl.terminal:
+                    fl.state = "FAILED"
+                    fl.error = err.to_wire()
+                    fl.finished_at = time.time()
+                fl.cond.notify_all()
+            return
+        with fl.cond:
+            if fl.cancel.is_set():
+                if not fl.terminal:
+                    fl.state = "CANCELLED"
+                    fl.finished_at = time.time()
+            elif not fl.terminal:
+                fl.end_rows = fl.rows_emitted
+                fl.state = "DRAINING" if fl.buffer else "DONE"
+                if fl.state == "DONE":
+                    fl.finished_at = time.time()
+            fl.cond.notify_all()
+
+    def _buffer_put(self, fl: FlowRecord, batch: RecordBatch) -> None:
+        header, bufs = batch.to_buffers()
+        parts = RecordBatch.payload_parts(bufs)  # zero-copy views, pinned by the buffer
+        nbytes = sum(len(p) for p in parts)
+        with fl.cond:
+            # bounded buffering: block while over budget with >= 1 batch
+            # retained (a single oversized batch must still pass through)
+            while (
+                not fl.cancel.is_set()
+                and fl.buffer
+                and fl.buffered_bytes + nbytes > self.buffer_bytes
+            ):
+                fl.cond.wait(timeout=0.1)
+            if fl.cancel.is_set():
+                raise FlowCancelled(f"flow {fl.flow_id} cancelled")
+            header["seq"] = fl.next_seq
+            fl.buffer[fl.next_seq] = (header, parts, nbytes, batch.num_rows)
+            fl.next_seq += 1
+            fl.rows_emitted += batch.num_rows
+            fl.bytes_emitted += nbytes
+            fl.buffered_bytes += nbytes
+            fl.cond.notify_all()
+
+    # ------------------------------------------------------------------ consume
+    def ack(self, fl: FlowRecord, upto_seq: int) -> None:
+        """Consumer progress: drop retained frames below ``upto_seq``."""
+        fl.touched = time.time()
+        with fl.cond:
+            while fl.base_seq < upto_seq:
+                entry = fl.buffer.pop(fl.base_seq, None)
+                if entry is not None:
+                    fl.buffered_bytes -= entry[2]
+                fl.base_seq += 1
+            fl.cond.notify_all()  # producer may be blocked on the budget
+
+    def wait_ready(self, fl: FlowRecord, timeout: float = 60.0) -> str:
+        """Block until the flow's schema is known; raise its terminal error."""
+        deadline = time.time() + timeout
+        with fl.cond:
+            while fl.schema_json is None:
+                if fl.state == "FAILED":
+                    raise DacpError.from_wire(fl.error)
+                if fl.state == "CANCELLED" or fl.cancel.is_set():
+                    raise FlowCancelled(f"flow {fl.flow_id} cancelled")
+                rem = deadline - time.time()
+                if rem <= 0:
+                    raise DacpError(f"flow {fl.flow_id} produced no schema within {timeout}s")
+                fl.cond.wait(timeout=min(rem, 0.25))
+            return fl.schema_json
+
+    def next_frame(self, fl: FlowRecord, cursor: int, timeout: float = 0.1):
+        """The frame at ``cursor``, or what terminates the stream there.
+
+        Returns ``("batch", header, parts, rows)`` | ``("end", total_rows)``
+        | ``("error", wire_dict)`` | ``None`` (nothing yet — poll again).
+
+        Only an actual delivery refreshes the flow's idle clock — the serve
+        loop's own polling must not keep an abandoned flow alive, or the
+        idle reaper could never reclaim it (acks and STATUS/FETCH requests
+        are the consumer-liveness signals).
+        """
+        with fl.cond:
+            if cursor < fl.base_seq:
+                return (
+                    "error",
+                    DacpError(
+                        f"flow {fl.flow_id}: seq {cursor} was acked and released "
+                        f"(resume must start at >= {fl.base_seq})"
+                    ).to_wire(),
+                )
+            entry = fl.buffer.get(cursor)
+            if entry is not None:
+                fl.touched = time.time()
+                return ("batch", entry[0], entry[1], entry[3])
+            if fl.ended and cursor >= fl.next_seq:
+                return ("end", fl.end_rows)
+            if fl.state == "FAILED":
+                return ("error", fl.error)
+            if fl.state == "CANCELLED" or fl.cancel.is_set():
+                return ("error", FlowCancelled(f"flow {fl.flow_id} cancelled").to_wire())
+            fl.cond.wait(timeout=timeout)
+            return None
+
+    def mark_delivered(self, fl: FlowRecord) -> None:
+        """END reached the consumer: the flow is DONE (buffer retained until
+        the retention TTL reaps it — a late resume can still re-read)."""
+        with fl.cond:
+            if not fl.terminal:
+                fl.state = "DONE"
+                fl.finished_at = time.time()
+            fl.cond.notify_all()
+
+    # ------------------------------------------------------------------ status
+    def status(self, fl: FlowRecord) -> dict:
+        with fl.cond:
+            d = {
+                "flow_id": fl.flow_id,
+                "kind": fl.kind,
+                "state": fl.state,
+                "owner": fl.owner,
+                "next_seq": fl.next_seq,
+                "acked_seq": fl.base_seq,
+                "buffered_batches": len(fl.buffer),
+                "buffered_bytes": fl.buffered_bytes,
+                "rows_emitted": fl.rows_emitted,
+                "bytes_emitted": fl.bytes_emitted,
+                "total_rows": fl.end_rows,
+                "error": fl.error,
+                "age_s": time.time() - fl.created_at,
+            }
+        d["executor"] = fl.stats.to_dict()
+        sched = fl.scheduler
+        if sched is not None:
+            d["subtasks"] = sched.snapshot()
+        if fl.kind == "submit":
+            d["pulls"] = fl.pulls
+            d["rows_out"] = fl.rows_out
+        return d
+
+    # ------------------------------------------------------------------ cancel
+    def cancel(self, flow_id: str, deadline_s: float = 5.0, network=None) -> dict:
+        """Cancel a flow: flip its cancel event, propagate to child SUBMIT
+        flows cross-domain, and join the producer within ``deadline_s`` so
+        executor pipelines and spill files are torn down boundedly."""
+        try:
+            fl = self.get(flow_id)
+        except ResourceNotFound:
+            return {"flow_id": flow_id, "state": "UNKNOWN", "released": True}
+        t0 = time.time()
+        already = fl.terminal
+        fl.cancel.set()
+        with fl.cond:
+            fl.cond.notify_all()
+        children = 0
+        sched = fl.scheduler
+        if not already and sched is not None:
+            children = self._cancel_children(sched, network, deadline_s)
+        producer = fl.producer
+        if producer is not None and producer.is_alive():
+            producer.join(timeout=max(0.0, deadline_s - (time.time() - t0)))
+        released = producer is None or not producer.is_alive()
+        with fl.cond:
+            if not fl.terminal:
+                fl.state = "CANCELLED"
+                fl.finished_at = time.time()
+            if released:
+                fl.buffer.clear()
+                fl.buffered_bytes = 0
+            state = fl.state
+            fl.cond.notify_all()
+        return {
+            "flow_id": flow_id,
+            "state": state,
+            "released": released,
+            "children_cancelled": children,
+        }
+
+    def _cancel_children(self, sched, network, deadline_s: float) -> int:
+        """Propagate CANCEL to every child SUBMIT registration (local
+        children cancel in-process, remote ones over the wire)."""
+        n = 0
+        for authority, child_id, token in sched.children():
+            try:
+                if authority == self.authority:
+                    self.cancel(child_id, deadline_s=deadline_s)
+                elif network is not None:
+                    network.client_for(authority).cancel(child_id, token=token, deadline=deadline_s)
+                n += 1
+            except DacpError:
+                pass  # best-effort: a dead child domain has nothing to tear down
+        return n
+
+    # ------------------------------------------------------------------ submit-kind streaming (GET .flow)
+    def take(self, fl: FlowRecord):
+        """Legacy streaming activation for exchange pulls (GET .flow): a
+        fresh stream per pull, with per-batch cancellation checks so a
+        CANCELLed fragment unblocks its puller promptly."""
+        fl.pulls += 1
+        fl.touched = time.time()
+        if fl.cancel.is_set() or fl.state == "CANCELLED":
+            raise FlowCancelled(f"flow {fl.flow_id} cancelled")
+        sdf = fl.factory()
+        from repro.core.sdf import StreamingDataFrame
+
+        def gen():
+            with fl.cond:
+                if not fl.terminal and fl.state == "PLANNED":
+                    fl.state = "RUNNING"
+            for b in sdf.iter_batches():
+                if fl.cancel.is_set():
+                    raise FlowCancelled(f"flow {fl.flow_id} cancelled")
+                fl.rows_out += b.num_rows
+                yield b
+            with fl.cond:
+                if not fl.terminal and fl.producer is None:
+                    fl.state = "DRAINING"  # delivered once; TTL may still re-pull
+
+        return StreamingDataFrame.one_shot(sdf.schema, gen())

@@ -66,12 +66,17 @@ class InProcChannel:
         return ftype, header, memoryview(body) if not isinstance(body, memoryview) else body
 
     def close(self) -> None:
+        # signal BOTH directions: the peer's reader gets EOF, and a local
+        # reader blocked in recv wakes with "channel closed" — matching the
+        # socket channel, where closing the fd unblocks the reader thread
+        # (the session read-loop relies on this to fail in-flight calls)
         if not self._closed:
             self._closed = True
-            try:
-                self._out.put_nowait(_CLOSE)
-            except Exception:
-                pass
+            for q in (self._out, self._in):
+                try:
+                    q.put_nowait(_CLOSE)
+                except Exception:
+                    pass
 
 
 def channel_pair():

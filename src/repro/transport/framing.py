@@ -30,6 +30,13 @@ BATCH, END, ERROR, and upload stream frames — echoes the same ``rid``.
 Tagged requests from concurrent callers interleave on one channel; frames
 without a ``rid`` follow the v1 one-request-at-a-time discipline, so v1
 peers interoperate unchanged (they simply never tag).
+
+Flow streams additionally tag each BATCH header with a monotone ``seq``
+(assigned once, at produce time, by the server's FlowManager): a FETCH that
+resumes from a cursor re-sends the retained frames with their original
+headers and payload parts, so the replay is byte-identical.  Receivers that
+ignore ``seq`` (the blocking COOK path) are unaffected — it is just another
+header key alongside the buffer layout.
 """
 
 from __future__ import annotations

@@ -432,6 +432,91 @@ def test_segment_reduce_uint32_minmax_parity():
     assert np.array_equal(st.acc["hi"], ref.acc["hi"])
 
 
+# ---------------------------------------------------------------------------
+# PR 5: f64 / uint64 min/max on the two-word compare path
+# ---------------------------------------------------------------------------
+def test_segment_reduce_uint64_minmax_parity():
+    """Full-range uint64 min/max dispatch via the top-bit-flip key image —
+    values straddling 2^63 must compare unsigned (min over [1, 2^63+5] is 1,
+    never a wrapped negative), matching the uint64 accumulator exactly."""
+    rng = np.random.default_rng(19)
+    vals = rng.integers(0, 2**64 - 1, 512, dtype=np.uint64)
+    vals[:4] = [1, 2**63 + 5, 2**64 - 1, 0]
+    keys = rng.integers(0, 7, 512).astype(np.int32)
+    keys[:4] = 0
+    batch = RecordBatch.from_pydict({"k": keys, "v": vals})
+    aggs = {"lo": {"fn": "min", "column": "v"}, "hi": {"fn": "max", "column": "v"}}
+    backend = get_backend("pallas")
+    st = GroupState(["k"], aggs, "full", batch.schema, vectorized=True, backend=backend)
+    ref = GroupState(["k"], aggs, "full", batch.schema, vectorized=True)
+    before = backend.kernel_calls
+    st.update(batch)
+    ref.update(batch)
+    assert backend.kernel_calls == before + 1, "uint64 min/max did not dispatch"
+    assert st.acc["lo"].dtype == np.uint64 and np.array_equal(st.acc["lo"], ref.acc["lo"])
+    assert np.array_equal(st.acc["hi"], ref.acc["hi"])
+
+
+def test_segment_reduce_float64_minmax_parity():
+    """float64 min/max dispatch via the sign-magnitude fold: bit patterns
+    (incl. ±Inf and subnormals) compare in float order through two int32
+    word passes, byte-identical to numpy's scatter."""
+    rng = np.random.default_rng(20)
+    vals = rng.standard_normal(512) * 10.0**rng.integers(-200, 200, 512)
+    vals[:4] = [np.inf, -np.inf, 5e-324, -5e-324]
+    keys = rng.integers(0, 6, 512).astype(np.int32)
+    keys[:4] = 1
+    batch = RecordBatch.from_pydict({"k": keys, "v": vals})
+    aggs = {"lo": {"fn": "min", "column": "v"}, "hi": {"fn": "max", "column": "v"}}
+    backend = get_backend("pallas")
+    st = GroupState(["k"], aggs, "full", batch.schema, vectorized=True, backend=backend)
+    ref = GroupState(["k"], aggs, "full", batch.schema, vectorized=True)
+    before = backend.kernel_calls
+    st.update(batch)
+    ref.update(batch)
+    assert backend.kernel_calls == before + 1, "float64 min/max did not dispatch"
+    assert st.acc["lo"].tobytes() == ref.acc["lo"].tobytes()
+    assert st.acc["hi"].tobytes() == ref.acc["hi"].tobytes()
+
+
+def test_segment_reduce_float64_sentinels_on_absent_groups():
+    """A second batch that misses some already-interned groups exercises the
+    empty-group sentinel decode (must be the ±Inf identities, not NaN)."""
+    b1 = RecordBatch.from_pydict(
+        {"k": np.asarray([0, 1, 2, 3] * 64, np.int32), "v": np.arange(256, dtype=np.float64) - 128.0}
+    )
+    b2 = RecordBatch.from_pydict(
+        {"k": np.asarray([1, 3] * 128, np.int32), "v": -(np.arange(256, dtype=np.float64)) * 7.5}
+    )
+    aggs = {"lo": {"fn": "min", "column": "v"}, "hi": {"fn": "max", "column": "v"}}
+    backend = get_backend("pallas")
+    st = GroupState(["k"], aggs, "full", b1.schema, vectorized=True, backend=backend)
+    ref = GroupState(["k"], aggs, "full", b1.schema, vectorized=True)
+    for b in (b1, b2):
+        st.update(b)
+        ref.update(b)
+    assert st.acc["lo"].tobytes() == ref.acc["lo"].tobytes()
+    assert st.acc["hi"].tobytes() == ref.acc["hi"].tobytes()
+
+
+@pytest.mark.parametrize("poison", ["nan", "negzero"])
+def test_segment_reduce_float64_nan_negzero_fall_back(poison):
+    """NaN (total order ≠ numpy NaN propagation) and -0.0 (operand-order
+    dependent in numpy min/max) keep float64 columns off the kernel — and
+    the numpy scatter result is bit-preserved."""
+    vals = np.arange(256, dtype=np.float64)
+    vals[7] = np.nan if poison == "nan" else -0.0
+    keys = np.asarray([0, 1] * 128, np.int32)
+    batch = RecordBatch.from_pydict({"k": keys, "v": vals})
+    aggs = {"lo": {"fn": "min", "column": "v"}}
+    backend = get_backend("pallas")
+    st = GroupState(["k"], aggs, "full", batch.schema, vectorized=True, backend=backend)
+    ref = GroupState(["k"], aggs, "full", batch.schema, vectorized=True)
+    st.update(batch)
+    ref.update(batch)
+    assert st.acc["lo"].tobytes() == ref.acc["lo"].tobytes()
+
+
 def test_float_sums_take_f64_reference_path():
     """Float sums (and mean partial sums) from a fresh state no longer fall
     back silently: the backend folds them in its f64-accumulating reference

@@ -443,6 +443,75 @@ def test_auto_morsel_rows_results_and_stats():
     assert get_last_stats() is stats
 
 
+def test_adaptive_window_and_prefetch_exported():
+    """The adaptive latency signal also tunes the reorder window and source
+    prefetch depth; both land in ExecutorStats per pipeline."""
+    from repro.core.executor import ExecutorStats
+
+    full = _table(60_000)
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    f = bld.add("filter", {"predicate": col("x") > 0.0}, [s])
+    dag = bld.finish(f)
+
+    stats = ExecutorStats()
+    cfg = ExecutorConfig(num_workers=4, morsel_rows="auto", backend="numpy")
+    execute_parallel(dag, lambda n: _sdf(full), cfg, stats=stats).collect()
+    assert stats.pipelines
+    for p in stats.pipelines:
+        # window in [workers+1, effective_window], depth in [1, prefetch_batches]
+        assert 5 <= p["window"] <= cfg.effective_window()
+        assert 1 <= p["prefetch_depth"] <= cfg.prefetch_batches
+    # static configs report their fixed values
+    stats2 = ExecutorStats()
+    cfg2 = ExecutorConfig(num_workers=2, morsel_rows=512, backend="numpy")
+    execute_parallel(dag, lambda n: _sdf(full), cfg2, stats=stats2).collect()
+    for p in stats2.pipelines:
+        assert p["window"] == cfg2.effective_window()
+        assert p["prefetch_depth"] == cfg2.prefetch_batches
+
+
+def test_adaptive_window_shrinks_for_slow_morsels():
+    """Morsels far over the latency target pull the reorder window toward
+    one-per-worker (bounded in-flight memory) instead of 4× workers."""
+    from repro.core.executor import _MorselSizer
+
+    sizer = _MorselSizer(4096, True, workers=4, window=16, prefetch=4)
+    for _ in range(20):
+        sizer.observe(4096, 0.05)  # 50x the 1 ms target
+    assert sizer.window == 5  # workers + 1
+    assert sizer.prefetch_depth == 1
+    for _ in range(40):
+        sizer.observe(4096, 1e-4)  # far under target: full read-ahead again
+    assert sizer.window == 16
+    assert sizer.prefetch_depth == 4
+
+
+def test_cancel_event_stops_parallel_execution():
+    """The flow-lifecycle hook: setting the cancel event makes the driver
+    raise FlowCancelled and wind its workers down."""
+    from repro.core.errors import FlowCancelled
+
+    full = _table(60_000)
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    f = bld.add("filter", {"predicate": col("x") > -10.0}, [s])
+    dag = bld.finish(f)
+    cancel = threading.Event()
+    out = execute_parallel(dag, lambda n: _sdf(full, rows=500), _cfg(4), cancel=cancel)
+    it = out.iter_batches()
+    next(it)
+    before = threading.active_count()
+    cancel.set()
+    with pytest.raises(FlowCancelled):
+        for _ in it:
+            pass
+    deadline = time.time() + 5
+    while time.time() < deadline and threading.active_count() > before - 1:
+        time.sleep(0.05)
+    assert threading.active_count() <= before
+
+
 def test_morsel_rows_env_validation(monkeypatch):
     from repro.core.executor import DEFAULT_MORSEL_ROWS
 

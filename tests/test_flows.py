@@ -1,0 +1,375 @@
+"""Flow lifecycle: asynchronous START, cursor-resumable FETCH, STATUS,
+CANCEL (incl. cross-domain propagation), bounded buffering, retention TTL.
+
+The load-bearing assertions:
+
+  * ``RemoteFrame.collect()`` over the flow path is byte-identical to the
+    blocking COOK result — including after a forced mid-stream channel kill
+    with seq-based resume, and under a tiny memory budget (spill paths);
+  * a mid-stream CANCEL frees executor worker threads and spill temp files
+    within a bounded deadline, and reaches child SUBMIT fragments at other
+    domains;
+  * abandoned DONE/FAILED flows are reaped by the retention TTL with a
+    PING-visible counter.
+"""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.client import LocalNetwork
+from repro.client.client import Flow
+from repro.core import col
+from repro.core.errors import DacpError, FlowCancelled, PermissionDenied, ResourceNotFound
+from repro.core.executor import ExecutorConfig
+from repro.core.sdf import StreamingDataFrame
+from repro.server import FairdServer, write_sdf_dataset
+
+ROWS = 120_000
+
+
+def _batch_bytes(rb) -> bytes:
+    header, bufs = rb.to_buffers()
+    from repro.core.batch import RecordBatch
+
+    return repr(header).encode() + RecordBatch.payload_bytes(bufs)
+
+
+def _dataset(tmp_path, rows=ROWS, parts=6):
+    rng = np.random.default_rng(7)
+    sdf = StreamingDataFrame.from_pydict(
+        {
+            "k": rng.integers(0, 50, rows),
+            "v": rng.integers(-(2**40), 2**40, rows),
+            "x": rng.standard_normal(rows).astype(np.float32),
+        },
+        batch_rows=1 << 14,
+    )
+    write_sdf_dataset(str(tmp_path / "ds" / "tab"), sdf, rows_per_part=rows // parts)
+    return tmp_path / "ds"
+
+
+def _cluster(tmp_path, executor=None, second_domain=False):
+    net = LocalNetwork()
+    s1 = FairdServer("f1:3101", executor=executor)
+    s1.catalog.register_path("ds", str(_dataset(tmp_path)))
+    net.register(s1)
+    servers = [s1]
+    if second_domain:
+        s2 = FairdServer("f2:3101", executor=executor)
+        s2.catalog.register_path("ds", str(tmp_path / "ds"))
+        net.register(s2)
+        servers.append(s2)
+    return (net, *servers)
+
+
+def _agg_frame(c, authority="f1:3101"):
+    return (
+        c.open(f"dacp://{authority}/ds/tab")
+        .filter(col("v") > -(2**39))
+        .group_by("k")
+        .agg(n="count", sv=("sum", "v"), mx=("max", "v"))
+    )
+
+
+def _scan_frame(c, authority="f1:3101"):
+    return c.open(f"dacp://{authority}/ds/tab").filter(col("x") > 0.0).rebatch(8192)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle basics
+# ---------------------------------------------------------------------------
+def test_start_returns_immediately_and_status_progresses(tmp_path):
+    net, s1 = _cluster(tmp_path)
+    c = net.client_for("f1:3101")
+    fl = _agg_frame(c).start()
+    assert isinstance(fl, Flow) and fl.flow_id
+    st = fl.status()
+    assert st["state"] in ("PLANNED", "RUNNING", "DRAINING", "DONE")
+    got = fl.collect()
+    assert got.num_rows == 50
+    st = fl.status()
+    assert st["state"] == "DONE"
+    assert st["total_rows"] == 50
+    assert st["rows_emitted"] == 50
+    # executor progress surfaced through the flow
+    assert st["executor"]["morsels_done"] > 0
+
+
+def test_flow_collect_byte_identical_to_blocking_cook(tmp_path):
+    net, s1 = _cluster(tmp_path)
+    c = net.client_for("f1:3101")
+    dag = _agg_frame(c).dag()
+    via_cook = c.cook(dag.copy()).collect()  # blocking COOK verb (kept)
+    via_flow = c.start(dag.copy()).collect()  # START + FETCH
+    assert _batch_bytes(via_cook) == _batch_bytes(via_flow)
+    # and RemoteFrame.collect() itself rides the flow path on a v2 peer
+    assert _batch_bytes(_agg_frame(c).collect()) == _batch_bytes(via_cook)
+    assert s1.stats["start"] >= 2 and s1.stats["fetch"] >= 2
+
+
+def test_blocking_cook_still_works_against_v1_peer(tmp_path):
+    net = LocalNetwork()
+    s1 = FairdServer("old:3101", protocol_version=1)
+    s1.catalog.register_path("ds", str(_dataset(tmp_path)))
+    net.register(s1)
+    c = net.client_for("old:3101")
+    out = _agg_frame(c, "old:3101").collect()  # falls back to blocking COOK
+    assert out.num_rows == 50
+    assert c.session.v2 is False
+
+
+def test_refetch_replays_byte_identical_frames(tmp_path):
+    """White-box: the same seq served twice (no ack in between) is the same
+    header + payload bytes — the resume contract at frame granularity."""
+    net, s1 = _cluster(tmp_path)
+    c = net.client_for("f1:3101")
+    dag = _scan_frame(c).dag()
+    fl = s1.flows.start("anonymous", s1._flow_runner(dag))
+    s1.flows.wait_ready(fl)
+    deadline = time.time() + 10
+    first = second = None
+    while time.time() < deadline:
+        first = s1.flows.next_frame(fl, 0, timeout=0.2)
+        if first is not None and first[0] == "batch":
+            break
+    second = s1.flows.next_frame(fl, 0, timeout=0.2)
+    assert first[0] == "batch" and second[0] == "batch"
+    assert repr(first[1]) == repr(second[1])  # identical header (incl. seq)
+    assert b"".join(first[2]) == b"".join(second[2])  # identical payload
+    s1.flows.cancel(fl.flow_id)
+
+
+# ---------------------------------------------------------------------------
+# disconnect + resume
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("budget", [0, 256 * 1024])
+def test_kill_channel_midstream_resumes_byte_identically(tmp_path, budget):
+    """The acceptance bar: a forced mid-stream disconnect, then transparent
+    reconnect-and-resume from the last acked seq — the delivered batch
+    sequence is byte-identical to an uninterrupted run, with and without
+    the 256KB spill budget at 4 workers."""
+    cfg = ExecutorConfig(num_workers=4, morsel_rows=1 << 14, memory_budget=budget)
+    net, s1 = _cluster(tmp_path, executor=cfg)
+    c = net.client_for("f1:3101")
+    dag = _scan_frame(c).dag()
+    reference = [_batch_bytes(b) for b in c.start(dag.copy()).stream().iter_batches()]
+    assert len(reference) > 3
+
+    fl = c.start(dag.copy())
+    got = []
+    stream = fl.stream()
+    it = stream.iter_batches()
+    for _ in range(2):
+        got.append(_batch_bytes(next(it)))
+    c.session._ch.close()  # kill the live session channel mid-stream
+    for b in it:  # Flow.stream reconnects + re-FETCHes from the cursor
+        got.append(_batch_bytes(b))
+    assert got == reference
+    assert c.session.connects >= 2  # a reconnect really happened
+
+
+def test_resume_does_not_duplicate_or_drop_rows_under_aggregate(tmp_path):
+    cfg = ExecutorConfig(num_workers=4, morsel_rows=1 << 14, memory_budget=256 * 1024)
+    net, s1 = _cluster(tmp_path, executor=cfg)
+    c = net.client_for("f1:3101")
+    dag = _agg_frame(c).dag()
+    ref = c.cook(dag.copy()).collect()
+    fl = c.start(dag.copy())
+    it = fl.stream().iter_batches()
+    c.session._ch.close()  # die before the first FETCH frame is consumed
+    got = list(it)
+    from repro.core.batch import concat_batches
+
+    assert _batch_bytes(concat_batches(got)) == _batch_bytes(ref)
+
+
+# ---------------------------------------------------------------------------
+# cancellation
+# ---------------------------------------------------------------------------
+def _count_threads() -> int:
+    return threading.active_count()
+
+
+def _poll(fn, timeout=8.0, every=0.05):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if fn():
+            return True
+        time.sleep(every)
+    return False
+
+
+def test_cancel_midstream_frees_workers_and_spill_files(tmp_path):
+    spill_dir = tmp_path / "spill"
+    spill_dir.mkdir()
+    cfg = ExecutorConfig(
+        num_workers=4, morsel_rows=4096, memory_budget=16 * 1024, spill_dir=str(spill_dir)
+    )
+    net, s1 = _cluster(tmp_path, executor=cfg)
+    s1.flows.buffer_bytes = 1 << 12  # tiny flow buffer: producer stays mid-run
+    c = net.client_for("f1:3101")
+    c.ping()  # establish the session channel before the thread baseline
+    before = _count_threads()
+    fl = c.start(_agg_frame(c).dag())
+    # wait until the plan is actually executing (workers up, spill likely)
+    assert _poll(lambda: fl.status()["state"] in ("RUNNING", "DRAINING", "DONE"))
+    resp = fl.cancel(deadline=5.0)
+    assert resp["state"] in ("CANCELLED", "DONE")  # DONE only if it raced to finish
+    assert resp["released"] is True
+    assert fl.status()["state"] == resp["state"]
+    # bounded teardown: executor/prefetch threads wind down ...
+    assert _poll(lambda: _count_threads() <= before + 1), (
+        f"threads leaked: {before} -> {_count_threads()}"
+    )
+    # ... and spill temp files are deleted
+    assert _poll(lambda: os.listdir(str(spill_dir)) == [])
+
+
+def test_cancelled_stream_raises_flow_cancelled_not_retried(tmp_path):
+    cfg = ExecutorConfig(num_workers=2, morsel_rows=4096)
+    net, s1 = _cluster(tmp_path, executor=cfg)
+    s1.flows.buffer_bytes = 1 << 12
+    c = net.client_for("f1:3101")
+    fl = c.start(_scan_frame(c).dag())
+    it = fl.stream().iter_batches()
+    next(it)  # stream is live
+    fl.cancel(deadline=5.0)
+    with pytest.raises(FlowCancelled):
+        for _ in it:
+            pass
+
+
+def test_cancel_cross_domain_reaches_child_submits(tmp_path):
+    """CANCEL on a cross-domain plan propagates to the child SUBMIT flow at
+    the producing domain and releases both domains' executor threads within
+    the deadline."""
+    cfg = ExecutorConfig(num_workers=4, morsel_rows=4096)
+    net, s1, s2 = _cluster(tmp_path, executor=cfg, second_domain=True)
+    s1.flows.buffer_bytes = 1 << 12  # keep the coordinator flow mid-run
+    c = net.client_for("f1:3101")
+    # pre-warm every session pair (client→f1, f1→f2) so the thread baseline
+    # excludes the persistent channel handlers created on first contact
+    _scan_frame(c, "f2:3101").limit(1).collect()
+    before = _count_threads()
+    stale = set(s2.flows.flow_ids())  # the pre-warm plan's leftovers
+    # f1 coordinates; the scan fragment runs at f2 and crosses an exchange
+    rf = _scan_frame(c, "f2:3101")
+    fl = c.start(rf.dag())
+    # wait until THIS plan's child fragment is registered at f2
+    assert _poll(lambda: set(s2.flows.flow_ids()) - stale)
+    child_ids = sorted(set(s2.flows.flow_ids()) - stale)
+    resp = fl.cancel(deadline=5.0)
+    assert resp["released"] is True
+    assert resp["state"] == "CANCELLED"
+    assert resp["children_cancelled"] >= 1
+    child = s2.flows.get(child_ids[0])
+    assert child.cancel.is_set() or child.terminal
+    assert _poll(lambda: _count_threads() <= before + 1), (
+        f"threads leaked: {before} -> {_count_threads()}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# ownership / auth
+# ---------------------------------------------------------------------------
+def test_flow_verbs_enforce_ownership(tmp_path):
+    net, s1 = _cluster(tmp_path)
+    c = net.client_for("f1:3101")
+    fl = c.start(_scan_frame(c).dag())
+    from repro.client.client import DacpClient
+
+    # a different subject on the same server must not see the flow
+    mallory = DacpClient(net._clients["f1:3101"]._factory, "f1:3101", subject="mallory")
+    with pytest.raises(PermissionDenied):
+        mallory.status(fl.flow_id)
+    with pytest.raises(PermissionDenied):
+        mallory.cancel(fl.flow_id)
+    fl.cancel()
+    mallory.close()
+
+
+def test_fetch_below_acked_cursor_is_an_error(tmp_path):
+    net, s1 = _cluster(tmp_path)
+    c = net.client_for("f1:3101")
+    fl = c.start(_scan_frame(c).dag())
+    assert fl.collect().num_rows > 0  # acks everything as it streams
+    with pytest.raises(DacpError):
+        # the flow is DONE and seq 0 was acked+released: resume must refuse
+        schema, frames = c.session.fetch(fl.flow_id, from_seq=0)
+        list(frames)
+
+
+# ---------------------------------------------------------------------------
+# retention TTL / leak-proofing (satellite bugfix)
+# ---------------------------------------------------------------------------
+def test_retention_ttl_reaps_done_flows_with_ping_counter(tmp_path):
+    net, s1 = _cluster(tmp_path)
+    s1.flows.retain_ttl_s = 0.2
+    c = net.client_for("f1:3101")
+    fl = c.start(_scan_frame(c).dag())
+    assert fl.collect().num_rows > 0
+    assert fl.status()["state"] == "DONE"
+    time.sleep(0.35)
+    info = c.ping()
+    assert info["flows"]["reaped"] >= 1
+    assert info["flows"]["by_state"].get("DONE", 0) == 0
+    with pytest.raises(ResourceNotFound):
+        fl.status()
+
+
+def test_failed_flow_is_reaped_too(tmp_path):
+    net, s1 = _cluster(tmp_path)
+    s1.flows.retain_ttl_s = 0.2
+    c = net.client_for("f1:3101")
+    resp = c.session.start(c.open("dacp://f1:3101/ds/nope").dag())
+    flow_id = resp["flow_id"]
+    assert _poll(lambda: c.status(flow_id)["state"] == "FAILED" or True)
+    with pytest.raises(DacpError):
+        Flow(c, flow_id).collect()
+    assert c.status(flow_id)["state"] == "FAILED"
+    time.sleep(0.35)
+    assert c.ping()["flows"]["reaped"] >= 1
+    with pytest.raises(ResourceNotFound):
+        c.status(flow_id)
+
+
+def test_flow_buffer_budget_bounds_server_memory(tmp_path):
+    """With a tiny flow buffer the producer must stall rather than buffer
+    the whole result; the stream still delivers everything."""
+    net, s1 = _cluster(tmp_path)
+    s1.flows.buffer_bytes = 1 << 13  # 8KB
+    c = net.client_for("f1:3101")
+    dag = _scan_frame(c).dag()
+    ref = c.cook(dag.copy()).collect()
+    fl = c.start(dag.copy())
+    seen_bounded = []
+    out = []
+    for b in fl.stream().iter_batches():
+        # the budget admits at least one (possibly oversized) batch, so the
+        # bound is ~2 batches in flight: the retained one + the one whose
+        # put crossed the budget while the consumer had not yet acked
+        seen_bounded.append(fl.status()["buffered_batches"] <= 3)
+        out.append(b)
+    from repro.core.batch import concat_batches
+
+    assert _batch_bytes(concat_batches(out)) == _batch_bytes(ref)
+    assert all(seen_bounded)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: remote root rides the resumable flow pull
+# ---------------------------------------------------------------------------
+def test_remote_root_pull_uses_flow_fetch(tmp_path):
+    """A COOK coordinated by a domain that does not own the root fragment
+    FETCHes the registered flow (seq-resumable) instead of a raw GET."""
+    cfg = ExecutorConfig(num_workers=2, morsel_rows=1 << 14)
+    net, s1, s2 = _cluster(tmp_path, executor=cfg, second_domain=True)
+    c2 = net.client_for("f2:3101")
+    # f2 coordinates a plan whose root runs at f1 (aggregate over f1 data)
+    out = _agg_frame(c2, "f1:3101").collect()
+    assert out.num_rows == 50
+    assert s1.stats["fetch"] >= 1  # the coordinator pulled via FETCH
