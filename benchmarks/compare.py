@@ -38,7 +38,7 @@ import sys
 
 _RESULTS = os.path.join(os.path.dirname(__file__), "results")
 _GATED_PREFIXES = ("speedup_",)
-_GATED_EXACT = {"amplification", "byte_reduction"}
+_GATED_EXACT = {"amplification", "byte_reduction", "cache_hit_rate"}
 
 
 def _flatten(d: dict, prefix: str = "") -> dict:

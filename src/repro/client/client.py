@@ -24,6 +24,7 @@ consumed seq), ``status()`` (server-side progress) and ``cancel()``.
 
 from __future__ import annotations
 
+import os
 import time
 
 from repro.core.dag import Dag, DagBuilder
@@ -44,15 +45,25 @@ class Flow:
     reconnects on channel death: the handle tracks the last consumed seq
     and re-FETCHes from there, so the delivered batch sequence is exactly
     the uninterrupted one — byte-identical, nothing replayed or lost.
-    Terminal flow states (CANCELLED/FAILED) are never retried."""
+    Terminal flow states (CANCELLED/FAILED) are never retried.
 
-    def __init__(self, client: "DacpClient", flow_id: str, token: str | None = None, max_attempts: int = 4, backoff_s: float = 0.05):
+    Each handle carries a stable ``consumer`` id: its independent cursor on
+    the server-side flow buffer.  Flows can be **shared** — a START whose
+    plan fingerprint matches a live or cached flow attaches to it instead
+    of re-executing (``shared`` is True on such handles); every consumer
+    then reads the one buffer at its own pace."""
+
+    def __init__(self, client: "DacpClient", flow_id: str, token: str | None = None, max_attempts: int = 4, backoff_s: float = 0.05, shared: bool = False):
         self._client = client
         self.flow_id = flow_id
         self._token = token  # scoped pull token for submit flows (scheduler)
         self.max_attempts = max_attempts
         self.backoff_s = backoff_s
         self.next_seq = 0  # resume cursor: last consumed seq + 1
+        self.shared = shared  # server matched this plan to an existing flow
+        # this handle's cursor key on the (possibly shared) flow buffer;
+        # stable across reconnects so the resume keeps the same watermark
+        self.consumer = f"c-{os.urandom(8).hex()}"
 
     def status(self) -> dict:
         return self._client.session.status(self.flow_id, token=self._token)
@@ -97,7 +108,9 @@ class Flow:
         return StreamingDataFrame.one_shot(schema, gen())
 
     def _fetch(self):
-        return self._client.session.fetch(self.flow_id, from_seq=self.next_seq, token=self._token)
+        return self._client.session.fetch(
+            self.flow_id, from_seq=self.next_seq, token=self._token, consumer=self.consumer
+        )
 
     def collect(self):
         return self.stream().collect()
@@ -164,11 +177,14 @@ class DacpClient:
         return self.session.cook(dag)
 
     # -- flow lifecycle --------------------------------------------------------------
-    def start(self, dag: Dag) -> Flow:
+    def start(self, dag: Dag, priority: int = 0) -> Flow:
         """Asynchronous COOK: START the plan as a server-side flow and
-        return a ``Flow`` handle immediately (no result bytes move yet)."""
-        resp = self.session.start(dag)
-        return Flow(self, resp["flow_id"])
+        return a ``Flow`` handle immediately (no result bytes move yet).
+        ``priority`` orders the flow in the tenant's admission queue; the
+        handle's ``shared`` flag reports a plan-cache hit (the server
+        attached us to an identical live/retained flow — no re-execution)."""
+        resp = self.session.start(dag, priority=priority)
+        return Flow(self, resp["flow_id"], shared=bool(resp.get("shared")))
 
     def flow(self, flow_id: str, token: str | None = None) -> Flow:
         """Attach a handle to an existing flow (e.g. a registered SUBMIT
@@ -286,10 +302,10 @@ class RemoteFrame:
             return self._client.start(dag).stream()
         return self._client.cook(dag)
 
-    def start(self) -> "Flow":
+    def start(self, priority: int = 0) -> "Flow":
         """START the DAG as a server-side flow; returns the ``Flow`` handle
         (status/cancel/stream) without pulling any result bytes."""
-        return self._client.start(self.dag())
+        return self._client.start(self.dag(), priority=priority)
 
     def iter_batches(self):
         return self.stream().iter_batches()

@@ -523,10 +523,15 @@ class DacpSession:
         return self._legacy_stream(sdf, ch)
 
     # -- flow verbs -----------------------------------------------------------------
-    def start(self, dag) -> dict:
-        """Asynchronous COOK: returns ``{"flow_id", "state"}`` immediately;
-        consume with ``fetch`` / wrap in a client ``Flow`` handle."""
+    def start(self, dag, priority: int = 0) -> dict:
+        """Asynchronous COOK: returns ``{"flow_id", "state", "shared"}``
+        immediately; consume with ``fetch`` / wrap in a client ``Flow``
+        handle.  ``priority`` orders this flow within the tenant's admission
+        queue (higher dispatches first); ``shared`` is True when the plan
+        matched a live/cached identical flow server-side (no re-execution)."""
         hdr = {"verb": "START"}
+        if priority:
+            hdr["priority"] = int(priority)
         body = dag.to_bytes()
         if self.v2 is None:
             self.connect()
@@ -558,15 +563,22 @@ class DacpSession:
             return self._roundtrip(hdr)
         return self._legacy_roundtrip(hdr)
 
-    def fetch(self, flow_id: str, from_seq: int = 0, token: str | None = None):
+    def fetch(self, flow_id: str, from_seq: int = 0, token: str | None = None, consumer: str | None = None):
         """Open a flow's result stream at ``from_seq``.
 
         Returns ``(schema, frames)`` where ``frames`` yields ``(seq, batch)``
         tuples in seq order; over a v2 session each delivered frame is acked
         in-band so the server can drop it from the flow buffer.  On channel
         death the iterator raises ``TransportError`` — the caller re-fetches
-        from its last consumed seq + 1 and the replay is byte-identical."""
+        from its last consumed seq + 1 and the replay is byte-identical.
+
+        ``consumer`` names this reader's cursor on the server's (possibly
+        multi-consumer, shared) flow buffer: readers ack independently and
+        the buffer trims to the slowest; a stable id lets a reconnect resume
+        the same cursor.  Omitted, the server assigns an ephemeral cursor."""
         hdr = {"verb": "FETCH", "flow_id": flow_id, "from_seq": int(from_seq)}
+        if consumer is not None:
+            hdr["consumer"] = str(consumer)
         if self.v2 is None:
             self.connect()
         if self.v2:

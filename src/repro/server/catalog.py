@@ -176,6 +176,13 @@ class Catalog:
             self._stats_cache[ds.root] = (now + STATS_TTL_S, stats)
         return dict(stats)
 
+    def invalidate_stats(self, ds: Dataset) -> None:
+        """Drop the cached walk for a dataset (called after a PUT lands).
+        Without this, a write inside the STATS_TTL_S window would leave the
+        plan cache fingerprinting — and serving — the pre-write version."""
+        with self._lock:
+            self._stats_cache.pop(ds.root, None)
+
     def list_entries(self, prefix: str | None = None, offset: int = 0, limit: int | None = None) -> dict:
         """Paged catalog enumeration (the LIST verb's payload).
 

@@ -124,6 +124,30 @@ class SDFEngine:
         self.last_executor_stats = stats
         return execute_parallel(dag, resolver, self.executor, stats=stats, cancel=cancel)
 
+    def source_version(self, uri_str: str) -> dict | None:
+        """Version stamp for a plan-cache fingerprint's source leaf: the
+        dataset's catalog stats (file count / byte total / latest mtime —
+        os.stat only, no data files opened).  None marks the leaf
+        unversionable — remote authority, ``.flow`` pseudo-URIs, unknown
+        datasets, the discovery root — which makes the plan uncacheable:
+        we must never serve stale results for data we cannot version."""
+        try:
+            uri = parse_uri(uri_str)
+        except Exception:  # noqa: BLE001 - malformed uri: the plan will fail anyway
+            return None
+        if uri.authority not in self.aliases:
+            return None
+        if uri.segments and uri.segments[0] == ".flow":
+            return None
+        try:
+            ds, _path = self.catalog.resolve_uri(uri)
+        except ResourceNotFound:
+            return None
+        if ds is None:
+            return None  # discovery root: contents change with the catalog
+        stats = self.catalog.dataset_stats(ds)
+        return {"n_files": stats.get("n_files"), "bytes": stats.get("bytes"), "mtime": stats.get("mtime")}
+
     def _remote(self, node: Node) -> StreamingDataFrame:
         if self.remote_pull is None:
             raise ResourceNotFound(f"no remote pull configured for {node.params.get('uri')}")

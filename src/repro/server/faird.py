@@ -54,6 +54,7 @@ from repro.core.uri import parse as parse_uri
 from repro.server.catalog import Catalog
 from repro.server.datasource import write_sdf_dataset
 from repro.server.engine import SDFEngine
+from repro.server.plancache import fingerprint as plan_fingerprint
 from repro.transport import framing
 from repro.transport.channel import TaggedChannel
 from repro.transport.flight import recv_sdf, send_error, send_sdf
@@ -277,30 +278,34 @@ class FairdServer:
             channel.send(framing.OK, {"ready": True})
             sdf = recv_sdf(channel)
             rows = write_sdf_dataset(path, sdf)
+            self.catalog.invalidate_stats(ds)  # next fingerprint sees the write
             self.stats["rows_in"] += rows
             channel.send(framing.OK, {"rows": rows, "path": uri.path})
             return False
         if verb == "COOK":
             # blocking verb, kept for v1/v2 peers — implemented as START +
-            # inline FETCH-from-0 on an anonymous flow (ack-on-send: COOK has
-            # no resume contract), dropped as soon as the stream completes
+            # inline FETCH-from-0 (ack-on-send: COOK has no resume contract).
+            # Identical plans ride the fingerprint cache: concurrent COOKs
+            # share one flow, and a completed cacheable flow is retained for
+            # replay rather than dropped
             subject = self._authorize(header, "COOK")
             self.stats["cook"] += 1
             dag = Dag.from_bytes(bytes(body))
-            fl = self.flows.start(subject, self._flow_runner(dag))
+            fl, _shared = self._start_flow(subject, dag, header)
             try:
                 self.stats["rows_out"] += self._serve_flow_stream(channel, fl, 0, ack_on_send=True)
             finally:
-                self.flows.cancel(fl.flow_id, deadline_s=5.0, network=self.network)
-                self.flows.drop(fl.flow_id)
+                self.flows.release_cook(fl, network=self.network)
             return False
         if verb == "START":
-            # asynchronous COOK: return a flow handle immediately
+            # asynchronous COOK: return a flow handle immediately.  The
+            # response's ``shared`` flag tells the client its plan matched a
+            # live/retained flow (the executor will not run again for it)
             subject = self._authorize(header, "COOK")
             self.stats["start"] += 1
             dag = Dag.from_bytes(bytes(body))
-            fl = self.flows.start(subject, self._flow_runner(dag))
-            channel.send(framing.OK, {"flow_id": fl.flow_id, "state": fl.state})
+            fl, shared = self._start_flow(subject, dag, header)
+            channel.send(framing.OK, {"flow_id": fl.flow_id, "state": fl.state, "shared": shared})
             return False
         if verb == "FETCH":
             self.stats["fetch"] += 1
@@ -308,10 +313,16 @@ class FairdServer:
             if fl.kind == "submit":
                 self.flows.activate(fl)  # lazy loading: first FETCH runs the fragment
             from_seq = int(header.get("from_seq", 0))
+            # the client-supplied consumer id keys this FETCH's independent
+            # cursor on the (possibly shared) flow buffer; consumers that
+            # don't send one get an ephemeral cursor for this stream only
+            cid = header.get("consumer")
             # a v2 rid carries in-band acks; the v1 inline path cannot, so it
             # degrades to ack-on-send (no mid-stream resume on legacy wires)
             ack_on_send = getattr(channel, "rid", None) is None
-            self.stats["rows_out"] += self._serve_flow_stream(channel, fl, from_seq, ack_on_send=ack_on_send)
+            self.stats["rows_out"] += self._serve_flow_stream(
+                channel, fl, from_seq, ack_on_send=ack_on_send, cid=cid
+            )
             return False
         if verb == "STATUS":
             self.stats["status"] += 1
@@ -394,12 +405,25 @@ class FairdServer:
 
         return runner
 
+    def _start_flow(self, subject: str, dag: Dag, header: dict):
+        """START/COOK entry: fingerprint the plan and start (or attach to)
+        its flow under admission control -> (flow, shared)."""
+        priority = int(header.get("priority", 0) or 0)
+        fp = None
+        if self.flows.plan_cache.enabled:
+            fp, cacheable = plan_fingerprint(dag, self.engine.source_version)
+            if not cacheable:
+                fp = None
+        fl, shared = self.flows.start_cached(subject, self._flow_runner(dag), fp, priority=priority)
+        return fl, shared
+
     def _flow_for(self, header: dict, verb: str):
         """Resolve + authorize a flow verb's target.
 
         Submit-kind flows accept their single-purpose scoped pull token (the
         scheduler/coordinator holds it); otherwise the session token must
-        carry COOK rights and its subject must own the flow."""
+        carry COOK rights and its subject must own the flow — or be one of
+        the subjects a shared (plan-cache) flow was attached for."""
         flow_id = header.get("flow_id") or ""
         fl = self.flows.get(flow_id)
         token = header.get("token")
@@ -410,35 +434,51 @@ class FairdServer:
             except TokenError:
                 pass  # fall through to owner-session auth
         claims = self.tokens.verify(token or "", resource="*", verb="COOK")
-        if fl.owner and claims.get("sub", "") != fl.owner:
+        sub = claims.get("sub", "")
+        if fl.owner and sub != fl.owner and sub not in fl.shared_with:
             raise PermissionDenied(f"flow {flow_id} is owned by another subject")
         return fl
 
-    def _serve_flow_stream(self, channel, fl, from_seq: int, ack_on_send: bool) -> int:
+    def _serve_flow_stream(self, channel, fl, from_seq: int, ack_on_send: bool, cid: str | None = None) -> int:
         """Stream a flow's buffered frames from ``from_seq``: SCHEMA, then
         seq-tagged BATCH frames, then END/ERROR.  ``ack_on_send`` releases
         each frame as soon as it is written (blocking COOK / legacy FETCH);
         otherwise frames are retained until the client acks in-band, which
-        is what makes a re-FETCH after a dropped channel byte-identical."""
+        is what makes a re-FETCH after a dropped channel byte-identical.
+
+        ``cid`` is the consumer's cursor key on the flow's ack table; a
+        client-supplied id persists across reconnects (its cursor survives
+        for the resume), an ephemeral one is unregistered when this stream
+        ends so it never pins the trim watermark."""
         mgr = self.flows
+        ephemeral = cid is None
+        if ephemeral:
+            cid = f"_srv-{id(channel):x}-{from_seq}"
         with fl.cond:
             fl.consumers += 1  # idle-reap exemption while this loop serves
+        finished = False
         try:
-            return self._serve_flow_frames(channel, fl, from_seq, ack_on_send)
+            rows, finished = self._serve_flow_frames(channel, fl, from_seq, ack_on_send, cid)
+            return rows
         finally:
             with fl.cond:
                 fl.consumers -= 1
+            if ephemeral or finished:
+                # a finished (END/ERROR-delivered) cursor is done for good;
+                # a named cursor that died mid-stream stays registered so
+                # the buffer keeps its unacked frames for the re-FETCH
+                mgr.unregister_consumer(fl, cid)
 
-    def _serve_flow_frames(self, channel, fl, from_seq: int, ack_on_send: bool) -> int:
+    def _serve_flow_frames(self, channel, fl, from_seq: int, ack_on_send: bool, cid: str):
         mgr = self.flows
-        mgr.ack(fl, from_seq)
+        mgr.ack(fl, from_seq, cid)  # registers the cursor at its start seq
         schema_json = mgr.wait_ready(fl)
         channel.send(framing.SCHEMA, {"schema": schema_json, "flow_id": fl.flow_id, "from_seq": from_seq})
         cursor = from_seq
         rows = 0
         while True:
-            if not ack_on_send and not self._drain_acks(channel, fl):
-                return rows  # consumer channel died; the flow stays resumable
+            if not ack_on_send and not self._drain_acks(channel, fl, cid):
+                return rows, False  # consumer channel died; the flow stays resumable
             item = mgr.next_frame(fl, cursor, timeout=0.1)
             if item is None:
                 continue
@@ -450,20 +490,20 @@ class FairdServer:
                     cursor += 1
                     rows += nrows
                     if ack_on_send:
-                        mgr.ack(fl, cursor)
+                        mgr.ack(fl, cursor, cid)
                 elif kind == "end":
                     channel.send(framing.END, {"rows": item[1], "next_seq": cursor})
                     mgr.mark_delivered(fl)
-                    return rows
+                    return rows, True
                 else:  # terminal error (FAILED / CANCELLED / released seq)
                     send_error(channel, DacpError.from_wire(item[1]))
-                    return rows
+                    return rows, True
             except (DacpError, OSError):
                 # the consumer's socket died mid-write: stop serving quietly;
                 # unacked frames stay buffered for the re-FETCH
-                return rows
+                return rows, False
 
-    def _drain_acks(self, channel, fl) -> bool:
+    def _drain_acks(self, channel, fl, cid: str) -> bool:
         """Apply in-band acks queued on a v2 FETCH's rid; False when the
         consumer's channel died (stop serving, keep the flow resumable)."""
         inbox = getattr(channel, "inbox", None)
@@ -478,7 +518,7 @@ class FairdServer:
                 return False
             ftype, hdr, _body = item
             if ftype == framing.OK and isinstance(hdr, dict) and "ack" in hdr:
-                self.flows.ack(fl, int(hdr["ack"]))
+                self.flows.ack(fl, int(hdr["ack"]), cid)
 
     # ------------------------------------------------------------------ TCP
     def serve_tcp(self, host: str = "127.0.0.1", port: int = 0):

@@ -103,7 +103,13 @@ class SocketChannel:
         return self._reader.bytes_read
 
     def send(self, ftype: int, header: dict, body=b"") -> None:
-        self._writer.write_frame(ftype, header, body)
+        # a locally-closed file object raises ValueError (not OSError):
+        # normalize so reconnect/resume paths see one transport failure
+        # type whichever side tore the connection down first
+        try:
+            self._writer.write_frame(ftype, header, body)
+        except ValueError as e:
+            raise TransportError(f"send on closed channel: {e}") from e
 
     def recv(self, timeout: float | None = None):
         if timeout is not None:
@@ -112,9 +118,14 @@ class SocketChannel:
             return self._reader.read_frame()
         except socket.timeout:
             raise TransportError("recv timeout") from None
+        except ValueError as e:
+            raise TransportError(f"recv on closed channel: {e}") from e
         finally:
             if timeout is not None:
-                self._sock.settimeout(None)
+                try:
+                    self._sock.settimeout(None)
+                except OSError:
+                    pass
 
     def close(self) -> None:
         # flush pending writes, then shut the socket down BEFORE closing the

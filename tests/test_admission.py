@@ -1,0 +1,397 @@
+"""Multi-tenant flow serving: admission control, weighted-fair dispatch,
+plan-fingerprint sharing, and the structured NOT_FOUND contract.
+
+The acceptance bars:
+
+  * a greedy tenant's 10 concurrent STARTs queue behind its concurrency
+    quota while another tenant's flow is admitted and completes;
+  * two clients issuing the identical COOK share ONE flow (the second
+    START returns ``shared``; the executor runs once) and both collect
+    byte-identical results vs an uncached run;
+  * STATUS/FETCH/CANCEL on an unknown or reaped flow id yield a
+    structured NOT_FOUND error frame, never a server-side KeyError;
+  * ``DACP_FLOW_BUFFER`` (and the quota knobs) accept size-suffix forms
+    and fall back with a warning on garbage.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.client import LocalNetwork
+from repro.client.client import DacpClient
+from repro.core import col
+from repro.core.errors import ResourceNotFound
+from repro.core.sdf import StreamingDataFrame
+from repro.server import FairdServer, write_sdf_dataset
+from repro.server.admission import AdmissionController, parse_weights
+from repro.server.flows import FlowManager
+
+ROWS = 60_000
+
+
+def _batch_bytes(rb) -> bytes:
+    header, bufs = rb.to_buffers()
+    from repro.core.batch import RecordBatch
+
+    return repr(header).encode() + RecordBatch.payload_bytes(bufs)
+
+
+def _cluster(tmp_path):
+    rng = np.random.default_rng(11)
+    sdf = StreamingDataFrame.from_pydict(
+        {
+            "k": rng.integers(0, 50, ROWS),
+            "v": rng.integers(-(2**40), 2**40, ROWS),
+            "x": rng.standard_normal(ROWS).astype(np.float32),
+        },
+        batch_rows=1 << 13,
+    )
+    write_sdf_dataset(str(tmp_path / "ds" / "tab"), sdf, rows_per_part=ROWS // 4)
+    net = LocalNetwork()
+    s1 = FairdServer("f1:3101")
+    s1.catalog.register_path("ds", str(tmp_path / "ds"))
+    net.register(s1)
+    return net, s1
+
+
+def _client(net, subject):
+    return DacpClient(net._clients["f1:3101"]._factory, "f1:3101", subject=subject)
+
+
+def _scan_dag(c, threshold=0.0):
+    return c.open("dacp://f1:3101/ds/tab").filter(col("x") > threshold).rebatch(4096).dag()
+
+
+def _agg_dag(c):
+    return (
+        c.open("dacp://f1:3101/ds/tab")
+        .group_by("k")
+        .agg(n="count", sv=("sum", "v"))
+        .dag()
+    )
+
+
+def _poll(fn, timeout=10.0, every=0.02):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if fn():
+            return True
+        time.sleep(every)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# acceptance: quotas + weighted-fair dispatch end to end
+# ---------------------------------------------------------------------------
+def test_greedy_tenant_queues_while_other_tenant_is_admitted(tmp_path):
+    net, s1 = _cluster(tmp_path)
+    s1.flows.plan_cache.budget_bytes = 0  # distinct-plan semantics under test
+    s1.flows.admission = AdmissionController(total_slots=2, concurrency=1, bytes_quota=0, weights={})
+    s1.flows.buffer_bytes = 1 << 12  # running flows stall mid-run until fetched
+    c = net.client_for("f1:3101")
+    bob = _client(net, "bob")
+    alice = _client(net, "alice")
+
+    # bob floods 10 concurrent STARTs (distinct plans — the cache is off
+    # anyway); his concurrency quota of 1 admits one and queues nine
+    flows = [bob.start(_scan_dag(bob, threshold=-3.0 + 0.1 * i)) for i in range(10)]
+    assert _poll(lambda: s1.flows.admission.stats()["queued_depth"] == 9)
+    states = [f.status()["state"] for f in flows]
+    assert states.count("QUEUED") == 9
+    assert sum(s in ("PLANNED", "RUNNING", "DRAINING", "DONE") for s in states) == 1
+
+    # queued flows report their back-off signals through STATUS
+    queued = [f for f in flows if f.status()["state"] == "QUEUED"]
+    st = queued[0].status()
+    assert isinstance(st["queue_position"], int) and st["queue_position"] >= 0
+    assert "eta_s" in st
+
+    # alice is admitted into the free slot and completes while bob waits
+    out = alice.start(_agg_dag(alice)).collect()
+    assert out.num_rows == 50
+    assert [f.status()["state"] for f in flows].count("QUEUED") == 9
+
+    # draining bob's flows dispatches the queue one slot at a time
+    for f in flows:
+        assert f.collect().num_rows > 0
+    st = s1.flows.admission.stats()
+    assert st["dispatched"] >= 11
+    assert st["waited"] >= 9
+    assert st["wait_total_s"] >= 0.0
+    assert st["queued_depth"] == 0
+    bob.close()
+    alice.close()
+
+
+def test_queued_flow_cancel_settles_instantly(tmp_path):
+    net, s1 = _cluster(tmp_path)
+    s1.flows.plan_cache.budget_bytes = 0
+    s1.flows.admission = AdmissionController(total_slots=1, concurrency=0, bytes_quota=0, weights={})
+    s1.flows.buffer_bytes = 1 << 12
+    c = net.client_for("f1:3101")
+    first = c.start(_scan_dag(c, -1.0))
+    second = c.start(_scan_dag(c, 1.0))
+    assert _poll(lambda: second.status()["state"] == "QUEUED")
+    resp = second.cancel(deadline=2.0)
+    assert resp["state"] == "CANCELLED" and resp["released"] is True
+    assert second.status()["state"] == "CANCELLED"
+    assert first.collect().num_rows > 0  # the admitted flow is untouched
+
+
+# ---------------------------------------------------------------------------
+# acceptance: identical plans share one flow, executor runs once
+# ---------------------------------------------------------------------------
+def test_identical_plans_share_one_flow_byte_identical(tmp_path):
+    net, s1 = _cluster(tmp_path)
+    c = net.client_for("f1:3101")
+    dag = _agg_dag(c)
+
+    s1.flows.plan_cache.budget_bytes = 0  # uncached reference run
+    ref = c.cook(dag.copy()).collect()
+    s1.flows.plan_cache.budget_bytes = 64 << 20
+    dispatched0 = s1.flows.admission.stats()["dispatched"]
+
+    f1 = c.start(dag.copy())
+    r1 = f1.collect()
+    peer = _client(net, "peer")
+    f2 = peer.start(dag.copy())
+    assert f2.shared is True
+    assert f2.flow_id == f1.flow_id  # one flow serves both clients
+    r2 = f2.collect()
+
+    assert _batch_bytes(r1) == _batch_bytes(ref)
+    assert _batch_bytes(r2) == _batch_bytes(ref)
+    # the executor ran exactly once across both STARTs
+    assert s1.flows.admission.stats()["dispatched"] - dispatched0 == 1
+    cache = s1.flows.plan_cache.stats()
+    assert cache["hits"] >= 1 and cache["misses"] >= 1
+    peer.close()
+
+
+def test_concurrent_identical_starts_attach_midrun(tmp_path):
+    net, s1 = _cluster(tmp_path)
+    c = net.client_for("f1:3101")
+    dag = _scan_dag(c)
+    f1 = c.start(dag.copy())
+    # second START lands before the first is ever fetched: it must attach
+    # to the still-running flow, not spawn a second producer
+    peer = _client(net, "peer")
+    f2 = peer.start(dag.copy())
+    assert f2.flow_id == f1.flow_id and f2.shared is True
+    r1 = f1.collect()
+    r2 = f2.collect()  # independent cursor replays from seq 0
+    assert _batch_bytes(r1) == _batch_bytes(r2)
+    st = f1.status()
+    assert st["shared"] is True and st["refs"] >= 1
+    peer.close()
+
+
+def test_source_write_changes_fingerprint_no_stale_hits(tmp_path):
+    net, s1 = _cluster(tmp_path)
+    c = net.client_for("f1:3101")
+    dag = _agg_dag(c)
+    first = c.start(dag.copy())
+    assert first.collect().num_rows == 50
+    hit = c.start(dag.copy())
+    assert hit.shared is True  # source unchanged: instant cache hit
+    # grow the source dataset and drop the 5s stats cache (the PUT verb
+    # does exactly this via catalog.invalidate_stats)
+    extra = StreamingDataFrame.from_pydict(
+        {
+            "k": np.array([1, 2], dtype=np.int64),
+            "v": np.array([10, 20], dtype=np.int64),
+            "x": np.zeros(2, np.float32),
+        }
+    )
+    write_sdf_dataset(str(tmp_path / "ds" / "tab2"), extra, rows_per_part=2)
+    s1.catalog._stats_cache.clear()
+    fresh = c.start(dag.copy())
+    assert fresh.shared is False  # new source version -> new fingerprint
+    assert fresh.flow_id != first.flow_id
+    assert fresh.collect().num_rows == 50
+
+
+# ---------------------------------------------------------------------------
+# structured NOT_FOUND (satellite: unknown / reaped flow ids)
+# ---------------------------------------------------------------------------
+def test_unknown_flow_id_yields_structured_not_found(tmp_path):
+    net, s1 = _cluster(tmp_path)
+    c = net.client_for("f1:3101")
+    c.ping()
+    with pytest.raises(ResourceNotFound):
+        c.status("no-such-flow")
+    with pytest.raises(ResourceNotFound):
+        _schema, frames = c.session.fetch("no-such-flow")
+        list(frames)
+    with pytest.raises(ResourceNotFound):
+        c.cancel("no-such-flow")
+
+
+def test_reaped_flow_id_yields_structured_not_found(tmp_path):
+    net, s1 = _cluster(tmp_path)
+    s1.flows.plan_cache.budget_bytes = 0
+    c = net.client_for("f1:3101")
+    fl = c.start(_scan_dag(c))
+    assert fl.collect().num_rows > 0
+    s1.flows.drop(fl.flow_id)  # simulate the reaper claiming it
+    with pytest.raises(ResourceNotFound):
+        fl.status()
+    with pytest.raises(ResourceNotFound):
+        _schema, frames = c.session.fetch(fl.flow_id)
+        list(frames)
+    with pytest.raises(ResourceNotFound):
+        fl.cancel()
+
+
+# ---------------------------------------------------------------------------
+# multi-consumer watermark (white-box)
+# ---------------------------------------------------------------------------
+def test_multi_consumer_watermark_trims_to_slowest(tmp_path):
+    net, s1 = _cluster(tmp_path)
+    s1.flows.plan_cache.budget_bytes = 0
+    c = net.client_for("f1:3101")
+    fl = s1.flows.start("anonymous", s1._flow_runner(_scan_dag(c)))
+    s1.flows.wait_ready(fl)
+    assert _poll(lambda: fl.next_seq >= 3)
+    s1.flows.ack(fl, 0, cid="slow")  # slow consumer registers its cursor
+    s1.flows.ack(fl, 3, cid="fast")  # fast consumer acked three batches
+    assert fl.ack_floor == 0 and fl.base_seq == 0  # pinned by the slowest
+    frame = s1.flows.next_frame(fl, 0, timeout=1.0)
+    assert frame is not None and frame[0] == "batch"  # seq 0 still servable
+    s1.flows.ack(fl, 2, cid="slow")
+    assert fl.ack_floor == 2 and fl.base_seq == 2  # trimmed to the new min
+    s1.flows.unregister_consumer(fl, "slow")
+    assert fl.ack_floor == 3 and fl.base_seq == 3  # departed cursor unpins
+    s1.flows.cancel(fl.flow_id)
+
+
+# ---------------------------------------------------------------------------
+# controller unit tests (stub flows)
+# ---------------------------------------------------------------------------
+class _F:
+    def __init__(self, owner, priority=0):
+        self.owner = owner
+        self.priority = priority
+        self.admitted_at = None
+        self.enqueued_at = None
+
+
+def test_priority_orders_dispatch_within_a_tenant():
+    ctl = AdmissionController(total_slots=1, concurrency=0, bytes_quota=0, weights={})
+    hold = _F("t")
+    assert ctl.submit(hold, lambda: None) is True  # takes the only slot
+    order = []
+    fs = {}
+    for name, pri in [("low", 0), ("hi", 5), ("mid", 1)]:
+        fs[name] = _F("t", priority=pri)
+        assert ctl.submit(fs[name], lambda n=name: order.append(n)) is False
+    assert ctl.queue_info(fs["hi"])["queue_position"] == 0
+    assert ctl.queue_info(fs["mid"])["queue_position"] == 1
+    assert ctl.queue_info(fs["low"])["queue_position"] == 2
+    ctl.release(hold)
+    assert order == ["hi"]
+    ctl.release(fs["hi"])
+    ctl.release(fs["mid"])
+    assert order == ["hi", "mid", "low"]
+
+
+def test_weighted_fair_dispatch_is_stride_ordered():
+    ctl = AdmissionController(total_slots=1, concurrency=0, bytes_quota=0, weights={"a": 2.0, "b": 1.0})
+    hold = _F("c")
+    assert ctl.submit(hold, lambda: None) is True
+    order = []
+    fs = []
+    for tenant, tag in [("a", "a1"), ("a", "a2"), ("a", "a3"), ("b", "b1"), ("b", "b2"), ("b", "b3")]:
+        f = _F(tenant)
+        fs.append((f, tag))
+        assert ctl.submit(f, lambda t=tag: order.append(t)) is False
+    prev = hold
+    for _ in range(6):
+        ctl.release(prev)
+        prev = next(f for f, tag in fs if tag == order[-1])
+    # stride scheduling: tenant a (weight 2) gets two slots per b slot
+    assert order == ["a1", "b1", "a2", "a3", "b2", "b3"]
+
+
+def test_byte_quota_blocks_until_acks_free_it():
+    ctl = AdmissionController(total_slots=0, concurrency=0, bytes_quota=1000, weights={})
+    ctl.add_bytes("t", 1000)
+    order = []
+    f = _F("t")
+    assert ctl.submit(f, lambda: order.append("f")) is False  # quota exhausted
+    assert ctl.stats()["queued_depth"] == 1
+    ctl.kick()
+    assert order == []  # still over quota
+    ctl.add_bytes("t", -600)
+    ctl.kick()  # the ack path's dispatch re-try
+    assert order == ["f"]
+    assert ctl.stats()["queued_depth"] == 0
+
+
+def test_unlimited_defaults_admit_everything():
+    ctl = AdmissionController(total_slots=0, concurrency=0, bytes_quota=0, weights={})
+    ran = []
+    for i in range(20):
+        assert ctl.submit(_F("t"), lambda i=i: ran.append(i)) is True
+    assert len(ran) == 20
+    assert ctl.stats()["queued_depth"] == 0
+
+
+# ---------------------------------------------------------------------------
+# env knob parsing (satellite: size suffixes + warning fallback)
+# ---------------------------------------------------------------------------
+def test_parse_weights_and_malformed_fallback():
+    assert parse_weights("alice=4,bob=1") == {"alice": 4.0, "bob": 1.0}
+    assert parse_weights(" alice = 2.5 ,, ") == {"alice": 2.5}
+    assert parse_weights(None) == {}
+    assert parse_weights("") == {}
+    with pytest.warns(UserWarning):
+        w = parse_weights("alice=4,bob")  # missing '='
+    assert w == {"alice": 4.0}
+    with pytest.warns(UserWarning):
+        w = parse_weights("alice=-1")  # weight must be > 0
+    assert w == {}
+    ctl = AdmissionController(total_slots=0, concurrency=0, bytes_quota=0, weights=w)
+    assert ctl.weight("alice") == 1.0  # malformed entries fall back to 1
+
+
+def test_flow_buffer_env_accepts_size_suffixes(monkeypatch):
+    monkeypatch.setenv("DACP_FLOW_BUFFER", "64k")
+    assert FlowManager("t:1").buffer_bytes == 64 << 10
+    monkeypatch.setenv("DACP_FLOW_BUFFER", "2MB")
+    assert FlowManager("t:1").buffer_bytes == 2 << 20
+    monkeypatch.setenv("DACP_FLOW_BUFFER", "0.5g")
+    assert FlowManager("t:1").buffer_bytes == 1 << 29
+    monkeypatch.setenv("DACP_FLOW_BUFFER", "1048576")
+    assert FlowManager("t:1").buffer_bytes == 1 << 20
+
+
+def test_flow_buffer_env_garbage_warns_and_falls_back(monkeypatch):
+    monkeypatch.setenv("DACP_FLOW_BUFFER", "weird")
+    with pytest.warns(UserWarning):
+        mgr = FlowManager("t:1")
+    assert mgr.buffer_bytes == 32 << 20  # the documented default
+    monkeypatch.setenv("DACP_FLOW_BUFFER", "-5m")
+    with pytest.warns(UserWarning):
+        mgr = FlowManager("t:1")
+    assert mgr.buffer_bytes == 32 << 20
+
+
+def test_quota_env_knobs_are_read(monkeypatch):
+    monkeypatch.setenv("DACP_FLOW_QUOTA_SLOTS", "8")
+    monkeypatch.setenv("DACP_FLOW_QUOTA_CONCURRENCY", "2")
+    monkeypatch.setenv("DACP_FLOW_QUOTA_BYTES", "16m")
+    monkeypatch.setenv("DACP_FLOW_QUOTA_WEIGHTS", "alice=4,bob=1")
+    ctl = AdmissionController()
+    assert ctl.total_slots == 8
+    assert ctl.concurrency == 2
+    assert ctl.bytes_quota == 16 << 20
+    assert ctl.weight("alice") == 4.0 and ctl.weight("bob") == 1.0
+    monkeypatch.setenv("DACP_PLAN_CACHE_BYTES", "128m")
+    from repro.server.plancache import PlanCache
+
+    assert PlanCache().budget_bytes == 128 << 20
+    monkeypatch.setenv("DACP_PLAN_CACHE_BYTES", "0")
+    assert PlanCache().enabled is False

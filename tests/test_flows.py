@@ -154,6 +154,9 @@ def test_kill_channel_midstream_resumes_byte_identically(tmp_path, budget):
     the 256KB spill budget at 4 workers."""
     cfg = ExecutorConfig(num_workers=4, morsel_rows=1 << 14, memory_budget=budget)
     net, s1 = _cluster(tmp_path, executor=cfg)
+    # plan cache off: the second START must run a fresh flow, not replay the
+    # reference run's retained result before the channel kill can land
+    s1.flows.plan_cache.budget_bytes = 0
     c = net.client_for("f1:3101")
     dag = _scan_frame(c).dag()
     reference = [_batch_bytes(b) for b in c.start(dag.copy()).stream().iter_batches()]
@@ -294,6 +297,9 @@ def test_flow_verbs_enforce_ownership(tmp_path):
 
 def test_fetch_below_acked_cursor_is_an_error(tmp_path):
     net, s1 = _cluster(tmp_path)
+    # plan cache off: cache-retained flows keep acked frames for shared
+    # replay, so the below-cursor refusal only applies to uncached flows
+    s1.flows.plan_cache.budget_bytes = 0
     c = net.client_for("f1:3101")
     fl = c.start(_scan_frame(c).dag())
     assert fl.collect().num_rows > 0  # acks everything as it streams
@@ -308,6 +314,9 @@ def test_fetch_below_acked_cursor_is_an_error(tmp_path):
 # ---------------------------------------------------------------------------
 def test_retention_ttl_reaps_done_flows_with_ping_counter(tmp_path):
     net, s1 = _cluster(tmp_path)
+    # plan cache off: cache-retained DONE flows are exempt from the idle
+    # retention reap until their cache TTL — this test times the bare TTL
+    s1.flows.plan_cache.budget_bytes = 0
     s1.flows.retain_ttl_s = 0.2
     c = net.client_for("f1:3101")
     fl = c.start(_scan_frame(c).dag())

@@ -1,0 +1,238 @@
+"""Plan-fingerprint canonicalization + cache-table properties.
+
+The load-bearing invariants (a collision serves WRONG results; a spurious
+mismatch only costs a cache miss — so the tests are asymmetric):
+
+  * equivalent plans hash identically: reordered commutative predicate
+    operands (and/or/eq/ne/add/mul), reordered ``union`` inputs, advisory
+    source-column differences;
+  * distinct plans NEVER collide: differing literal values, differing
+    literal *types* (``1`` vs ``1.0`` vs ``"1"`` vs ``True``), differing
+    source versions, swapped ``join`` sides (order-sensitive);
+  * unversionable leaves (exchange, version=None sources) are uncacheable.
+
+Property-style coverage uses seeded random generation (hypothesis is not
+in the environment)."""
+
+import random
+import time
+
+import pytest
+
+from repro.core.dag import Dag
+from repro.core.expr import Expr, col, lit
+from repro.server.plancache import PlanCache, _canon_params, fingerprint
+
+URI = "dacp://f1:3101/ds/tab"
+VERSION = {"n_files": 3, "bytes": 4096, "mtime": 123.5}
+
+
+def _v(_uri):
+    return dict(VERSION)
+
+
+def _scan(pred=None, uri=URI):
+    b = Dag.build()
+    s = b.source(uri)
+    if pred is None:
+        return b.finish(s)
+    f = b.add("filter", {"predicate": pred}, [s])
+    return b.finish(f)
+
+
+def _fp(dag, version=_v):
+    fp, cacheable = fingerprint(dag, version)
+    assert fp is not None
+    return fp, cacheable
+
+
+# ---------------------------------------------------------------------------
+# equivalent plans hash identically
+# ---------------------------------------------------------------------------
+def test_commutative_predicate_operand_order_is_canonical():
+    a = col("v") > 5
+    b = col("x") > 0.0
+    fp1, c1 = _fp(_scan(Expr("and", (a, b))))
+    fp2, c2 = _fp(_scan(Expr("and", (b, a))))
+    assert fp1 == fp2 and c1 and c2
+    fp3, _ = _fp(_scan(Expr("or", (a, b))))
+    fp4, _ = _fp(_scan(Expr("or", (b, a))))
+    assert fp3 == fp4
+    assert fp1 != fp3  # and vs or is a different plan
+
+
+def test_commutative_ops_property_random_swaps():
+    rng = random.Random(42)
+    for _ in range(50):
+        op = rng.choice(["and", "or", "eq", "ne", "add", "mul"])
+        x = col(rng.choice(["v", "x", "k"]))
+        y = lit(rng.choice([0, 1, 5, -3, 2.5, "s"]))
+        if op in ("and", "or"):
+            x = x > 0
+            y = col("k") != lit(rng.randrange(100))
+        fwd = Expr(op, (x, y))
+        rev = Expr(op, (y, x))
+        if op in ("eq", "ne", "add", "mul"):
+            fwd, rev = fwd == lit(True), rev == lit(True)  # wrap as a predicate
+        assert _fp(_scan(fwd))[0] == _fp(_scan(rev))[0], (op, x, y)
+
+
+def test_noncommutative_ops_are_order_sensitive():
+    fp1, _ = _fp(_scan(col("v") > 5))
+    fp2, _ = _fp(_scan(Expr("gt", (lit(5), col("v")))))
+    assert fp1 != fp2  # v > 5 is not 5 > v
+
+
+def test_advisory_source_columns_are_excluded():
+    # unit level: the canonical param encoding drops the advisory hint
+    p1 = _canon_params("source", {"uri": URI, "columns": ["v", "x"]})
+    p2 = _canon_params("source", {"uri": URI, "columns": ["x"]})
+    p3 = _canon_params("source", {"uri": URI})
+    assert p1 == p2 == p3
+    # ... but the same key on a semantic op (select) still counts
+    assert _canon_params("select", {"columns": ["v"]}) != _canon_params("select", {"columns": ["x"]})
+    # end to end: a column hint on the source leaf never changes the fp
+    d1 = _scan(col("v") > 5)
+    d2 = _scan(col("v") > 5)
+    for n in d2.nodes.values():
+        if n.op == "source":
+            n.params["columns"] = ["k", "v", "x"]
+    assert _fp(d1)[0] == _fp(d2)[0]
+
+
+def test_union_input_order_is_canonical():
+    def build(order):
+        b = Dag.build()
+        s1 = b.source(URI)
+        f1 = b.add("filter", {"predicate": col("v") > 5}, [s1])
+        s2 = b.source(URI)
+        f2 = b.add("filter", {"predicate": col("x") > 0.0}, [s2])
+        pair = [f1, f2] if order else [f2, f1]
+        return b.finish(b.add("union", {}, pair))
+
+    assert _fp(build(True))[0] == _fp(build(False))[0]
+
+
+def test_node_ids_and_json_ordering_never_matter():
+    d1 = _scan(col("v") > 5)
+    d2 = Dag.from_bytes(d1.to_bytes())  # round-trip: same ids
+    d3 = _scan(col("v") > 5)  # fresh ids from the global counter
+    assert _fp(d1)[0] == _fp(d2)[0] == _fp(d3)[0]
+
+
+# ---------------------------------------------------------------------------
+# distinct plans never collide
+# ---------------------------------------------------------------------------
+def test_differing_literal_values_never_collide():
+    rng = random.Random(7)
+    seen = {}
+    for _ in range(60):
+        v = rng.choice(
+            [rng.randrange(-(2**40), 2**40), rng.random() * 1e6, f"s{rng.randrange(1000)}"]
+        )
+        fp, _ = _fp(_scan(Expr("gt", (col("v"), lit(v)))))
+        key = (type(v).__name__, v)
+        if fp in seen:
+            assert seen[fp] == key, f"collision: {seen[fp]} vs {key}"
+        seen[fp] = key
+
+
+def test_literal_types_are_tagged():
+    fps = {
+        kind: _fp(_scan(Expr("eq", (col("v"), lit(v)))))[0]
+        for kind, v in [("int", 1), ("float", 1.0), ("str", "1"), ("bool", True)]
+    }
+    assert len(set(fps.values())) == 4, fps
+
+
+def test_join_sides_are_order_sensitive():
+    def build(swap):
+        b = Dag.build()
+        s1 = b.source(URI)
+        f1 = b.add("filter", {"predicate": col("v") > 5}, [s1])
+        s2 = b.source(URI)
+        f2 = b.add("filter", {"predicate": col("x") > 0.0}, [s2])
+        pair = [f2, f1] if swap else [f1, f2]
+        return b.finish(b.add("join", {"on": ["k"]}, pair))
+
+    # left = probe, right = build: swapping sides is a different plan
+    assert _fp(build(False))[0] != _fp(build(True))[0]
+
+
+def test_source_version_changes_the_fingerprint():
+    dag = _scan(col("v") > 5)
+    fp1, c1 = fingerprint(dag, lambda u: {"n_files": 3, "bytes": 4096, "mtime": 123.5})
+    fp2, c2 = fingerprint(dag, lambda u: {"n_files": 3, "bytes": 4096, "mtime": 999.0})
+    fp3, c3 = fingerprint(dag, lambda u: {"n_files": 4, "bytes": 4096, "mtime": 123.5})
+    assert c1 and c2 and c3
+    assert len({fp1, fp2, fp3}) == 3
+
+
+def test_unversionable_source_is_uncacheable():
+    dag = _scan(col("v") > 5)
+    fp, cacheable = fingerprint(dag, lambda u: None)
+    assert fp is not None and cacheable is False
+    fp2, cacheable2 = fingerprint(dag, None)  # no version oracle at all
+    assert fp2 is not None and cacheable2 is False
+
+
+def test_exchange_leaf_is_uncacheable():
+    b = Dag.build()
+    s = b.source(URI)
+    e = b.add("exchange", {"uri": "dacp://f2:3101/.flow/abc", "token": None})
+    u = b.add("union", {}, [s, e])
+    fp, cacheable = fingerprint(b.finish(u), _v)
+    assert fp is not None and cacheable is False
+
+
+# ---------------------------------------------------------------------------
+# cache table semantics
+# ---------------------------------------------------------------------------
+def test_lookup_reserve_hit_and_conditional_invalidate():
+    pc = PlanCache(budget_bytes=1 << 20, ttl_s=60.0)
+    assert pc.lookup_or_reserve("fp1", "flow-a") is None  # miss: reserved
+    assert pc.lookup_or_reserve("fp1", "flow-b") == "flow-a"  # concurrent hit
+    assert pc.stats()["hits"] == 1 and pc.stats()["misses"] == 1
+    pc.invalidate("fp1", "flow-zzz")  # wrong flow: a no-op
+    assert pc.entries() == {"fp1": "flow-a"}
+    pc.invalidate("fp1", "flow-a")
+    assert pc.entries() == {}
+    assert pc.lookup_or_reserve("fp1", "flow-b") is None  # re-reserve works
+
+
+def test_commit_superseded_entry_is_its_own_victim():
+    pc = PlanCache(budget_bytes=1 << 20, ttl_s=60.0)
+    pc.lookup_or_reserve("fp1", "flow-a")
+    pc.invalidate("fp1", "flow-a")
+    pc.lookup_or_reserve("fp1", "flow-b")
+    assert pc.commit("fp1", "flow-a", 100) == ["flow-a"]  # stale commit
+    assert pc.entries() == {"fp1": "flow-b"}
+
+
+def test_budget_eviction_is_lru_and_oversized_entries_never_cache():
+    pc = PlanCache(budget_bytes=1000, ttl_s=60.0)
+    pc.lookup_or_reserve("fpA", "flow-a")
+    assert pc.commit("fpA", "flow-a", 600) == []
+    time.sleep(0.01)
+    pc.lookup_or_reserve("fpB", "flow-b")
+    assert pc.commit("fpB", "flow-b", 600) == ["flow-a"]  # LRU victim
+    assert pc.entries() == {"fpB": "flow-b"}
+    pc.lookup_or_reserve("fpC", "flow-c")
+    assert pc.commit("fpC", "flow-c", 2000) == ["flow-c"]  # > whole budget
+    assert "fpC" not in pc.entries()
+    assert pc.stats()["evictions"] == 2
+
+
+def test_ttl_expires_committed_entries():
+    pc = PlanCache(budget_bytes=1 << 20, ttl_s=0.05)
+    pc.lookup_or_reserve("fp1", "flow-a")
+    pc.commit("fp1", "flow-a", 10)
+    assert pc.lookup_or_reserve("fp1", "flow-b") == "flow-a"  # fresh: hit
+    time.sleep(0.12)
+    assert pc.lookup_or_reserve("fp1", "flow-b") is None  # expired: re-reserved
+    assert pc.entries() == {"fp1": "flow-b"}
+
+
+def test_disabled_cache_budget_zero():
+    pc = PlanCache(budget_bytes=0, ttl_s=60.0)
+    assert pc.enabled is False

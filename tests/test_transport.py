@@ -76,3 +76,28 @@ def test_tcp_channel_roundtrip(tmp_tree):
         assert c.bytes_received > 0
     finally:
         s.shutdown()
+
+
+def test_socket_channel_closed_send_raises_transport_error():
+    """A locally-closed socket file object raises ValueError from write, not
+    OSError — SocketChannel must normalize it so flow resume paths (which
+    retry on TransportError/OSError) survive whichever side closed first."""
+    import socket as socket_mod
+
+    from repro.transport.channel import SocketChannel
+
+    srv = socket_mod.socket()
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+    cs = socket_mod.create_connection(srv.getsockname())
+    ss, _ = srv.accept()
+    try:
+        ch = SocketChannel(cs)
+        ch.close()
+        with pytest.raises(TransportError):
+            ch.send(framing.REQUEST, {"verb": "PING"})
+        with pytest.raises(TransportError):
+            ch.recv()
+    finally:
+        for s in (ss, srv):
+            s.close()
