@@ -7,7 +7,22 @@ import socket
 import threading
 import time
 
-__all__ = ["timer", "emit", "FtpSim", "mbps"]
+__all__ = ["timer", "emit", "FtpSim", "mbps", "pin_blas_threads"]
+
+
+def pin_blas_threads() -> None:
+    """Cap BLAS/OpenMP pools at one thread each — call BEFORE numpy loads.
+    The executor legs multiply worker threads by library pools; unpinned, a
+    4-worker run oversubscribes the host and the ``speedup_*`` worker-scaling
+    ratios measure scheduler thrash instead of the executor."""
+    for v in (
+        "OMP_NUM_THREADS",
+        "OPENBLAS_NUM_THREADS",
+        "MKL_NUM_THREADS",
+        "NUMEXPR_NUM_THREADS",
+        "VECLIB_MAXIMUM_THREADS",
+    ):
+        os.environ.setdefault(v, "1")
 
 
 class timer:

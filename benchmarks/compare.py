@@ -23,6 +23,12 @@ What gates and what merely reports:
     least as much as the code, so they print in the delta table (regression
     trajectory stays visible in the job log + artifact) without failing CI.
 
+Worker-scaling ratios (``speedup_4w_vs_1w``, ``speedup_4w_vs_seed``) are
+only meaningful because ``benchmarks.run`` pins the BLAS/OpenMP pools to
+one thread before numpy loads (``common.pin_blas_threads``): unpinned,
+every executor worker drags its own library pool along and the ratio
+measures oversubscription thrash, not the executor.
+
 New metrics (absent from baseline) and removed ones are listed, never
 fatal — ``--update-baseline`` refreshes the committed file after a
 deliberate change.

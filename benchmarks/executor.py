@@ -27,9 +27,11 @@ from __future__ import annotations
 import os
 import tempfile
 
-import numpy as np
+from benchmarks.common import emit, pin_blas_threads, timer
 
-from benchmarks.common import emit, timer
+pin_blas_threads()  # one BLAS thread per worker: scaling ratios stay honest
+
+import numpy as np  # noqa: E402 - after the thread caps
 from repro.core import col
 from repro.core.dag import Dag
 from repro.core.executor import ExecutorConfig

@@ -68,21 +68,23 @@ def run(rows: int = 100_000, selectivity: float = 0.02, verbose: bool = True) ->
     results["amplification"] = results["full_bytes"] / max(results["pushdown_bytes"], 1)
     results["speedup"] = results["full_s"] / results["pushdown_s"]
 
-    # ---- fused filter_select kernel vs oracle (host-side, interpret mode) ----
+    # ---- bit-plane filter_select kernel vs oracle (host-side, interpret) ----
     from repro.kernels import ops, ref
 
     table = np.random.default_rng(0).normal(size=(8192, 8)).astype(np.float32)
     import jax.numpy as jnp
 
     jt = jnp.asarray(table)
-    ops.filter_select_tiles(jt, 1, 0.0, (0, 2), tile=256)  # warm
+    planes = jnp.asarray(table.view(np.int32))
+    scalars = jnp.asarray([table.shape[0], 0, 0], jnp.int32)  # x[:, 0] > 0.0
+    ops.filter_select_planes(planes[:, :1], planes, scalars, "gt", "f32", tile=256)  # warm
     t0 = time.perf_counter()
     for _ in range(5):
-        ops.filter_select_tiles(jt, 1, 0.0, (0, 2), tile=256)[0].block_until_ready()
+        ops.filter_select_planes(planes[:, :1], planes, scalars, "gt", "f32", tile=256)[0].block_until_ready()
     k_us = (time.perf_counter() - t0) / 5 * 1e6
     t0 = time.perf_counter()
     for _ in range(5):
-        ref.filter_select_ref(jt, 1, 0.0, (0, 2), 256)[0].block_until_ready()
+        ref.filter_select_ref(jt, 0, 0.0, tuple(range(8)), 256)[0].block_until_ready()
     r_us = (time.perf_counter() - t0) / 5 * 1e6
     results["filter_select_kernel_us"] = k_us
     results["filter_select_ref_us"] = r_us

@@ -23,6 +23,10 @@ import json
 import os
 import sys
 
+from benchmarks.common import pin_blas_threads
+
+pin_blas_threads()  # before any bench module pulls in numpy/jax
+
 
 def main() -> None:
     quick = "--quick" in sys.argv

@@ -51,8 +51,10 @@ interpret-mode Pallas on CPU is for correctness tests, not speed.
 
 from __future__ import annotations
 
+import math
 import os
 import threading
+import warnings
 from typing import Callable
 
 import numpy as np
@@ -67,6 +69,9 @@ __all__ = [
     "get_backend",
     "available_backends",
     "BACKENDS",
+    "FUSED_INELIGIBLE",
+    "FusedChainPlan",
+    "plan_fused_chain",
 ]
 
 
@@ -391,6 +396,31 @@ _ARITH_F32 = {"add", "sub", "mul", "div"}
 _ARITH_I32 = {"add", "sub", "mul"}  # int div/mod promote to float64 in numpy
 
 
+def _contraction_safe(op: str, a, b) -> bool:
+    """XLA's CPU backend contracts a float ``mul`` feeding ``add``/``sub``
+    into a single-rounding FMA during LLVM codegen (nothing at the HLO level
+    survives to prevent it), while numpy rounds the product separately — a
+    1-ulp divergence whenever the product is inexact.  Only exact products
+    are immune, so a float32 mul may sit directly under add/sub solely when
+    one factor is a power-of-two literal (a mantissa-preserving scale).
+    Division never contracts, and integer arithmetic is exact."""
+    if op not in ("add", "sub"):
+        return True
+    for t in (a, b):
+        if t[0] != "mul":
+            continue
+        if not any(
+            s[0] == "lit" and _is_pow2_f32(s[1]) for s in (t[1], t[2])
+        ):
+            return False
+    return True
+
+
+def _is_pow2_f32(v) -> bool:
+    v32 = float(np.float32(v))
+    return v32 != 0.0 and math.isfinite(v32) and abs(math.frexp(v32)[0]) == 0.5
+
+
 def _arith_descr(e, batch: RecordBatch, group: str, col_idx: dict):
     """Lower an Expr subtree to a kernel descriptor, interning column
     indices into ``col_idx``.  Returns None when any node falls outside the
@@ -430,6 +460,8 @@ def _arith_descr(e, batch: RecordBatch, group: str, col_idx: dict):
         return None
     b = _arith_descr(e.args[1], batch, group, col_idx)
     if b is None:
+        return None
+    if group == "float32" and not _contraction_safe(e.op, a, b):
         return None
     return (e.op, a, b)
 
@@ -714,6 +746,671 @@ def _pl_segment_reduce(bk: PallasBackend, gidx, ngroups, specs, n_rows) -> dict:
     if fsums:
         bk.f64_folds += len(fsums)
     return out
+
+
+# ---------------------------------------------------------------------------
+# whole-chain fused pipelines: one launch per morsel
+# ---------------------------------------------------------------------------
+# Sentinel returned by FusedChainPlan.run/.fold when THIS morsel falls
+# outside the compiled envelope (validity mask appeared, row/group caps
+# exceeded, non-finite min/max input); the caller falls back to the per-op
+# path for that morsel only.
+FUSED_INELIGIBLE = object()
+
+_FLOAT_NAMES = {"float16", "float32", "float64"}
+
+
+def _lit_value(v, group: str):
+    """Literal eligibility for fused arithmetic — same envelope as
+    ``_arith_descr`` (numpy promotion parity for the given group dtype)."""
+    if isinstance(v, (bool, np.bool_)):
+        return None
+    if group == "float32":
+        if isinstance(v, (int, float)) or (isinstance(v, np.floating) and v.dtype.itemsize <= 4):
+            return float(v)
+        return None
+    if isinstance(v, (int, np.integer)) and not isinstance(v, np.uint64):
+        vi = int(v)
+        if isinstance(v, np.int64) or not (-(2**31) <= vi <= 2**31 - 1):
+            return None
+        return vi
+    return None
+
+
+def _lower_pred(pred, mapping: dict, src_schema):
+    """Lower a filter predicate against SOURCE column names.  Returns
+    ``(op, kind, t_hi_bits, t_lo, src_name)`` or None."""
+    if not (
+        isinstance(pred, Expr)
+        and pred.op in _CMP_OPS
+        and isinstance(pred.args[0], Expr)
+        and pred.args[0].op == "col"
+        and isinstance(pred.args[1], Expr)
+        and pred.args[1].op == "lit"
+    ):
+        return None
+    m = mapping.get(pred.args[0].args[0])
+    if m is None or m[0] != "src":
+        return None
+    sname = m[1]
+    dtn = src_schema.field(sname).dtype.name
+    if dtn not in _PRED_KINDS:
+        return None
+    norm = _normalize_threshold(pred.args[1].args[0], dtn, pred.op)
+    if norm is None:
+        return None
+    kind, op, t_hi, t_lo = norm
+    t_hi_bits = int(np.array([t_hi], np.float32).view(np.int32)[0]) if kind == "f32" else int(t_hi)
+    return op, kind, t_hi_bits, int(t_lo), sname
+
+
+def _lower_arith_named(e, mapping: dict, src_schema, group: str):
+    """Lower an Expr to a descriptor tree over SOURCE column names.
+    Computed-of-computed inlines the earlier tree when the group matches:
+    the stored f32/i32 column value IS the in-kernel subtree value (each op
+    rounds in the group dtype either way), so inlining is exact."""
+    if not isinstance(e, Expr):
+        return None
+    if e.op == "col":
+        m = mapping.get(e.args[0])
+        if m is None:
+            return None
+        if m[0] == "src":
+            if src_schema.field(m[1]).dtype.name != group:
+                return None
+            return ("col", m[1])
+        return m[2] if m[1] == group else None
+    if e.op == "lit":
+        v = _lit_value(e.args[0], group)
+        return None if v is None else ("lit", v)
+    allowed = _ARITH_F32 if group == "float32" else _ARITH_I32
+    if e.op not in allowed or len(e.args) != 2:
+        return None
+    a = _lower_arith_named(e.args[0], mapping, src_schema, group)
+    if a is None:
+        return None
+    b = _lower_arith_named(e.args[1], mapping, src_schema, group)
+    if b is None:
+        return None
+    if group == "float32" and not _contraction_safe(e.op, a, b):
+        return None
+    return (e.op, a, b)
+
+
+def _intern_tree(tree, idx: dict):
+    """Replace source column names in a descriptor tree with table indices."""
+    if tree[0] == "col":
+        name = tree[1]
+        if name not in idx:
+            idx[name] = len(idx)
+        return ("col", idx[name])
+    if tree[0] == "lit":
+        return tree
+    return (tree[0], _intern_tree(tree[1], idx), _intern_tree(tree[2], idx))
+
+
+def plan_fused_chain(specs: list, in_schema, agg=None, backend=None):
+    """Compile a pipeline's op-spec chain into a :class:`FusedChainPlan`
+    (one ``fused_chain_tiles`` launch per morsel), or None when any link
+    falls outside the kernel envelope (→ the per-op path runs unchanged).
+
+    ``specs`` is the executor's ``[(kind, args), ...]`` chain.  Eligible
+    chains are any combination of at most one ``filter`` (predicate
+    ``col <cmp> lit`` on a float32/int32/int64 source column), ``select``,
+    and ``project`` (f32/i32 arithmetic or cast-free renames) — evaluated
+    symbolically against SOURCE columns, so the kernel reads the original
+    morsel regardless of where the filter sits in the chain.  With ``agg``
+    (``(keys, aggs, mode, in_schema)``) the plan also folds the per-morsel
+    partial aggregate in the same launch: counts, integer sums (8-bit-limb
+    passthrough / 4-limb in-kernel for computed int32), f32 + narrow-int
+    min/max, and float sums via compacted planes + the host's f64 fold.
+    Float-keyed aggregates are ineligible (the pre-filter factorization
+    could pick a different -0.0/NaN representative than the reference's
+    post-filter one); wide min/max and var-width outputs are ineligible.
+    """
+    if backend is None or getattr(backend, "name", None) != "pallas":
+        return None
+    kernel_ops = backend._ops()
+    if kernel_ops is None:
+        return None
+    mapping = {f.name: ("src", f.name) for f in in_schema}
+    cur = in_schema
+    filt = None
+    for kind_, args in specs:
+        if kind_ == "filter":
+            if filt is not None:
+                return None
+            filt = _lower_pred(args[0], mapping, in_schema)
+            if filt is None:
+                return None
+        elif kind_ == "select":
+            cols = list(args[0])
+            if any(c not in mapping for c in cols):
+                return None
+            mapping = {c: mapping[c] for c in cols}
+            cur = cur.select(cols)
+        elif kind_ == "project":
+            exprs, out_schema = args
+            new_map = {}
+            for f in out_schema:
+                e = exprs.get(f.name)
+                if e is None:
+                    m = mapping.get(f.name)
+                    if m is None:
+                        return None
+                    new_map[f.name] = m
+                    continue
+                if isinstance(e, Expr) and e.op == "col":
+                    m = mapping.get(e.args[0])
+                    if m is None:
+                        return None
+                    src_dt = in_schema.field(m[1]).dtype.name if m[0] == "src" else m[1]
+                    if src_dt != f.dtype.name:
+                        return None  # dtype-coercing rename: outside the kernel
+                    new_map[f.name] = m
+                    continue
+                if f.dtype.name not in ("float32", "int32"):
+                    return None
+                tree = _lower_arith_named(e, mapping, in_schema, f.dtype.name)
+                if tree is None or tree[0] in ("col", "lit"):
+                    return None
+                new_map[f.name] = ("arith", f.dtype.name, tree)
+            mapping = new_map
+            cur = out_schema
+        else:
+            return None  # map / probe break the fusable chain
+    if filt is None and agg is None:
+        return None
+    if not cur.fields:
+        return None
+
+    # -- assemble the kernel input/output layout --------------------------
+    f_trees: dict = {}  # name-tree -> index among f32 computed columns
+    i_trees: dict = {}
+    pass_fields: list = []  # (src name, dtype, plane start, plane count)
+    pass_pos = 0
+
+    def _computed(m):
+        _tag, group, tree = m
+        trees = f_trees if group == "float32" else i_trees
+        if tree not in trees:
+            trees[tree] = len(trees)
+        return ("f32" if group == "float32" else "i32", trees[tree])
+
+    def _pass_ref(sname, dtype):
+        nonlocal pass_pos
+        for s, dt, start, k in pass_fields:
+            if s == sname:
+                return ("pass", start, k, dt)
+        k = _plane_count(dtype.name)
+        pass_fields.append((sname, dtype, pass_pos, k))
+        ref = ("pass", pass_pos, k, dtype)
+        pass_pos += k
+        return ref
+
+    out_decode = None
+    key_srcs: list = []
+    gcnt_states: list = []
+    limb_srcs: list = []
+    csum_states: list = []
+    mmf: list = []
+    mmi: list = []
+    fsums: list = []
+    if agg is None:
+        out_decode = []
+        for f in cur:
+            m = mapping[f.name]
+            if m[0] == "src":
+                if f.dtype.is_varwidth:
+                    return None
+                out_decode.append((f, _pass_ref(m[1], f.dtype)))
+            else:
+                out_decode.append((f, _computed(m)))
+    else:
+        keys, aggs, mode, agg_schema = agg
+        for k in keys:
+            m = mapping.get(k)
+            if m is None or m[0] != "src":
+                return None
+            if in_schema.field(m[1]).dtype.name in _FLOAT_NAMES:
+                return None
+            key_srcs.append((k, m[1]))
+
+        def _fsum_ref(m):
+            if m[0] == "src":
+                dt = in_schema.field(m[1]).dtype
+                return None if dt.is_varwidth else _pass_ref(m[1], dt)
+            return _computed(m)
+
+        for out, spec in aggs.items():
+            fn = spec["fn"]
+            if fn == "count":
+                if mode == "final":
+                    m = mapping.get(out)
+                    if m is None or m[0] != "src":
+                        return None
+                    limb_srcs.append((out, m[1]))
+                else:
+                    gcnt_states.append(out)
+            elif fn == "mean":
+                psrc = f"{out}__psum" if mode == "final" else spec.get("column")
+                m = mapping.get(psrc)
+                if m is None:
+                    return None
+                r = _fsum_ref(m)
+                if r is None:
+                    return None
+                fsums.append((f"{out}__psum", r))
+                if mode == "final":
+                    m2 = mapping.get(f"{out}__pcnt")
+                    if m2 is None or m2[0] != "src":
+                        return None
+                    limb_srcs.append((f"{out}__pcnt", m2[1]))
+                else:
+                    gcnt_states.append(f"{out}__pcnt")
+            elif fn == "sum":
+                src = out if mode == "final" else spec.get("column")
+                m = mapping.get(src)
+                if m is None:
+                    return None
+                if m[0] == "src":
+                    dt = in_schema.field(m[1]).dtype.np_dtype
+                    if dt.kind in "iub":
+                        limb_srcs.append((out, m[1]))
+                    elif dt.kind == "f":
+                        fsums.append((out, _pass_ref(m[1], in_schema.field(m[1]).dtype)))
+                    else:
+                        return None
+                elif m[1] == "int32":
+                    csum_states.append((out, _computed(m)[1]))
+                else:
+                    fsums.append((out, _computed(m)))
+            elif fn in ("min", "max"):
+                src = out if mode == "final" else spec.get("column")
+                m = mapping.get(src)
+                if m is None or m[0] != "src":
+                    return None
+                dt = in_schema.field(m[1]).dtype.np_dtype
+                if dt == np.float32:
+                    mmf.append((out, fn, m[1]))
+                elif dt.kind == "b" or (dt.kind == "i" and dt.itemsize <= 4) or (dt.kind == "u" and dt.itemsize <= 2):
+                    mmi.append((out, fn, m[1]))
+                else:
+                    return None
+            else:
+                return None
+
+    af_idx: dict = {}
+    ai_idx: dict = {}
+    descrs_f = tuple(_intern_tree(t, af_idx) for t, _j in sorted(f_trees.items(), key=lambda kv: kv[1]))
+    descrs_i = tuple(_intern_tree(t, ai_idx) for t, _j in sorted(i_trees.items(), key=lambda kv: kv[1]))
+    af_cols = [s for s, _ in sorted(af_idx.items(), key=lambda kv: kv[1])]
+    ai_cols = [s for s, _ in sorted(ai_idx.items(), key=lambda kv: kv[1])]
+    checked = {s for s, _dt, _p, _k in pass_fields} | set(af_cols) | set(ai_cols)
+    checked |= {s for _st, s in limb_srcs} | {s for _st, _fn, s in mmf} | {s for _st, _fn, s in mmi}
+    if filt is not None:
+        checked.add(filt[4])
+    return FusedChainPlan(
+        backend,
+        kernel_ops,
+        filt=filt,
+        out_schema=cur if agg is None else None,
+        out_decode=out_decode,
+        agg=None if agg is None else (list(agg[0]), dict(agg[1]), agg[2], agg[3]),
+        key_srcs=key_srcs,
+        gcnt_states=gcnt_states,
+        limb_srcs=limb_srcs,
+        csum_states=csum_states,
+        mmf=mmf,
+        mmi=mmi,
+        fsums=fsums,
+        pass_fields=pass_fields,
+        pass_width=pass_pos,
+        descrs_f=descrs_f,
+        descrs_i=descrs_i,
+        af_cols=af_cols,
+        ai_cols=ai_cols,
+        checked_cols=sorted(checked),
+    )
+
+
+class FusedChainPlan:
+    """Runtime for a compiled device-resident pipeline (see
+    :func:`plan_fused_chain`).  ``run`` streams one morsel through the
+    filter/project chain; ``fold`` additionally produces the per-morsel
+    partial ``GroupState`` — byte-identical to the reference per-op fold.
+    ``stage`` pre-uploads a morsel's kernel inputs (double buffering: the
+    H2D transfer of morsel *i+1* overlaps the compute of morsel *i*);
+    staged buffers are torn down by ``clear_staged`` on pipeline exit or
+    cancel.  Per-morsel envelope violations return ``FUSED_INELIGIBLE``."""
+
+    def __init__(
+        self,
+        backend,
+        kernel_ops,
+        *,
+        filt,
+        out_schema,
+        out_decode,
+        agg,
+        key_srcs,
+        gcnt_states,
+        limb_srcs,
+        csum_states,
+        mmf,
+        mmi,
+        fsums,
+        pass_fields,
+        pass_width,
+        descrs_f,
+        descrs_i,
+        af_cols,
+        ai_cols,
+        checked_cols,
+    ):
+        self._bk = backend
+        self._kernel_ops = kernel_ops
+        self._tile = backend.tile
+        if filt is None:
+            self._op, self._kind, self._t_hi, self._t_lo, self._pred_src = "gt", "none", 0, 0, None
+        else:
+            self._op, self._kind, self._t_hi, self._t_lo, self._pred_src = filt
+        self._out_schema = out_schema
+        self._out_decode = out_decode
+        if agg is None:
+            self._agg_keys = self._aggs = self._mode = self._agg_schema = None
+        else:
+            self._agg_keys, self._aggs, self._mode, self._agg_schema = agg
+        self._key_srcs = key_srcs
+        self._gcnt_states = gcnt_states
+        self._limb_srcs = limb_srcs
+        self._csum_states = csum_states
+        self._mmf = mmf
+        self._mmi = mmi
+        self._fsums = fsums
+        self._pass_fields = pass_fields
+        self._dp = max(1, pass_width)
+        self._limb_base = max(1, _SUM_LIMBS * len(limb_srcs))
+        self._descrs_f = descrs_f
+        self._descrs_i = descrs_i
+        self._nf = len(descrs_f)
+        self._csums = tuple(idx for _state, idx in csum_states)
+        self._fns_f = tuple(fn for _s, fn, _c in mmf) or ("min",)
+        self._fns_i = tuple(fn for _s, fn, _c in mmi) or ("min",)
+        self._af_cols = af_cols
+        self._ai_cols = ai_cols
+        self._with_gidx = bool(fsums)
+        self._gidx_off = self._dp + len(descrs_f) + len(descrs_i)
+        self._checked_cols = checked_cols
+        self._sizer = None
+        self._dev_idx = None
+        self._dev = None
+        self._dev_resolved = False
+        self._staged: dict = {}
+        self._stage_lock = threading.Lock()
+        self._stage_closed = False
+
+    # -- executor wiring ----------------------------------------------------
+    def bind(self, sizer, device_index=None) -> None:
+        """Attach the pipeline's stat sink and (optional) device pin."""
+        self._sizer = sizer
+        self._dev_idx = device_index
+
+    def _bump(self, counter: str, k: int = 1) -> None:
+        if self._sizer is not None:
+            self._sizer.bump(counter, k)
+
+    def _device(self):
+        if self._dev_resolved:
+            return self._dev
+        self._dev_resolved = True
+        if self._dev_idx is not None:
+            try:
+                import jax
+
+                devs = jax.devices()
+            except Exception:
+                return None
+            if 0 <= self._dev_idx < len(devs):
+                self._dev = devs[self._dev_idx]
+            else:
+                warnings.warn(
+                    f"DACP_DEVICES index {self._dev_idx} out of range "
+                    f"({len(devs)} jax devices); staging to the default device",
+                    stacklevel=2,
+                )
+        return self._dev
+
+    # -- per-morsel envelope ------------------------------------------------
+    def _pad(self, n: int) -> int:
+        return -(-n // self._tile) * self._tile
+
+    def _morsel_ok(self, batch: RecordBatch) -> bool:
+        n = batch.num_rows
+        if n == 0 or n > self._kernel_ops.SUM_ROW_CAP:
+            return False
+        for name in self._checked_cols:
+            if batch.column(name).validity is not None:
+                return False
+        return True
+
+    # -- double-buffered uploads ---------------------------------------------
+    def stage(self, batch: RecordBatch) -> None:
+        """Begin the async H2D upload of ``batch``'s kernel inputs (jax
+        device transfers are async: they overlap the previous morsel's
+        compute).  run/fold pops the staged buffers by batch identity."""
+        if self._stage_closed or not self._morsel_ok(batch):
+            return
+        try:
+            import jax
+        except Exception:
+            return
+        arrs = self._encode(batch)
+        dev = self._device()
+        try:
+            put = {k: (jax.device_put(v, dev) if dev is not None else jax.device_put(v)) for k, v in arrs.items()}
+        except Exception:
+            return
+        with self._stage_lock:
+            if self._stage_closed:  # raced a CANCEL teardown: drop, don't leak
+                return
+            self._staged[id(batch)] = (batch.num_rows, put)
+
+    def _take_staged(self, batch: RecordBatch):
+        with self._stage_lock:
+            entry = self._staged.pop(id(batch), None)
+        if entry is None or entry[0] != batch.num_rows:
+            return None
+        return entry[1]
+
+    def clear_staged(self) -> None:
+        """Drop every in-flight staged buffer and refuse new ones (pipeline
+        exit / CANCEL): a worker racing the teardown inside the source lock
+        must not re-stage after the sweep."""
+        with self._stage_lock:
+            self._stage_closed = True
+            self._staged.clear()
+
+    @property
+    def staged_count(self) -> int:
+        with self._stage_lock:
+            return len(self._staged)
+
+    # -- host-side encode / decode -------------------------------------------
+    def _encode(self, batch: RecordBatch) -> dict:
+        n = batch.num_rows
+        n_pad = self._pad(n)
+        sch = batch.schema
+        if self._kind == "none":
+            pred = np.zeros((n_pad, 1), np.int32)
+        else:
+            planes = _col_planes(batch.column(self._pred_src).values, sch.field(self._pred_src).dtype.name)
+            pred = np.zeros((n_pad, len(planes)), np.int32)
+            for j, p in enumerate(planes):
+                pred[:n, j] = p
+        pass_tbl = np.zeros((n_pad, self._dp), np.int32)
+        for s, dtype, start, _k in self._pass_fields:
+            for j, p in enumerate(_col_planes(batch.column(s).values, dtype.name)):
+                pass_tbl[:n, start + j] = p
+        limb = np.zeros((n_pad, self._limb_base), np.int32)
+        for i, (_state, s) in enumerate(self._limb_srcs):
+            for k, plane in enumerate(_sum_limbs(np.asarray(batch.column(s).values))):
+                limb[:n, _SUM_LIMBS * i + k] = plane
+        mmf = np.zeros((n_pad, max(1, len(self._mmf))), np.float32)
+        for j, (_state, _fn, s) in enumerate(self._mmf):
+            mmf[:n, j] = batch.column(s).values
+        mmi = np.zeros((n_pad, max(1, len(self._mmi))), np.int32)
+        for j, (_state, _fn, s) in enumerate(self._mmi):
+            mmi[:n, j] = np.asarray(batch.column(s).values).astype(np.int32)
+        af = np.zeros((n_pad, max(1, len(self._af_cols))), np.float32)
+        for j, s in enumerate(self._af_cols):
+            af[:n, j] = batch.column(s).values
+        ai = np.zeros((n_pad, max(1, len(self._ai_cols))), np.int32)
+        for j, s in enumerate(self._ai_cols):
+            ai[:n, j] = batch.column(s).values
+        return {"pred": pred, "pass": pass_tbl, "limb": limb, "mmf": mmf, "mmi": mmi, "af": af, "ai": ai}
+
+    def _compact(self, ctab: np.ndarray, counts: np.ndarray) -> np.ndarray:
+        t = self._tile
+        parts = [ctab[i * t : i * t + int(c)] for i, c in enumerate(counts) if c]
+        return np.concatenate(parts) if parts else ctab[:0]
+
+    def _decode_ref(self, compact: np.ndarray, ref):
+        tag = ref[0]
+        if tag == "pass":
+            _t, start, k, dtype = ref
+            return _planes_to_values(compact[:, start : start + k], dtype)
+        off = self._dp + ref[1] if tag == "f32" else self._dp + self._nf + ref[1]
+        col = np.ascontiguousarray(compact[:, off])
+        return col.view(np.float32) if tag == "f32" else col
+
+    def _launch(self, arrs: dict, gidx: np.ndarray, n: int, segmented: bool, ngroups: int):
+        scalars = np.asarray([n, self._t_hi, self._t_lo, 0], np.int32)
+        return self._kernel_ops.fused_chain_tiles(
+            scalars,
+            arrs["pred"],
+            gidx,
+            arrs["pass"],
+            arrs["limb"],
+            arrs["mmf"],
+            arrs["mmi"],
+            arrs["af"],
+            arrs["ai"],
+            op=self._op,
+            kind=self._kind,
+            descrs_f=self._descrs_f,
+            descrs_i=self._descrs_i,
+            csums=self._csums,
+            fns_f=self._fns_f,
+            fns_i=self._fns_i,
+            with_gidx=self._with_gidx,
+            segmented=segmented,
+            ngroups=ngroups,
+            tile=self._tile,
+        )
+
+    # -- streaming chain ------------------------------------------------------
+    def run(self, batch: RecordBatch):
+        """filter → project → select in one launch.  Returns the output
+        morsel, None (fully filtered), or ``FUSED_INELIGIBLE``."""
+        staged = self._take_staged(batch)
+        if not self._morsel_ok(batch):
+            return FUSED_INELIGIBLE
+        arrs = staged if staged is not None else self._encode(batch)
+        n = batch.num_rows
+        gidx = np.zeros(self._pad(n), np.int32)
+        try:
+            out = self._launch(arrs, gidx, n, segmented=False, ngroups=8)
+        except Exception:
+            return FUSED_INELIGIBLE
+        ctab, counts = np.asarray(out[0]), np.asarray(out[1])
+        self._bump("fused_launches")
+        if staged is not None:
+            self._bump("transfers_overlapped")
+        if int(counts.sum()) == 0:
+            return None
+        compact = self._compact(ctab, counts)
+        cols = []
+        for f, ref in self._out_decode:
+            vals = self._decode_ref(compact, ref)
+            cols.append(Column(f.dtype, values=vals) if ref[0] == "pass" else Column.from_values(f.dtype, vals))
+        return RecordBatch(self._out_schema, cols)
+
+    # -- aggregate fold --------------------------------------------------------
+    def fold(self, batch: RecordBatch):
+        """Per-morsel partial aggregate in one launch.  Returns a
+        ``GroupState`` byte-identical to the reference per-op fold over the
+        filtered morsel, None (no surviving rows), or ``FUSED_INELIGIBLE``.
+        Group ids come from factorizing the PRE-filter morsel; the kernel's
+        per-group minimum surviving row index reorders the survivors into
+        first-seen-filtered order, matching the reference interning."""
+        staged = self._take_staged(batch)
+        if not self._morsel_ok(batch):
+            return FUSED_INELIGIBLE
+        for _state, _fn, s in self._mmf:
+            if not np.isfinite(batch.column(s).values).all():
+                return FUSED_INELIGIBLE
+        from repro.core.operators import GroupState
+        from repro.core.schema import Field, Schema
+
+        keys = [k for k, _s in self._key_srcs]
+        if all(k == s for k, s in self._key_srcs):
+            kb = batch
+        else:
+            fields = [Field(k, batch.schema.field(s).dtype) for k, s in self._key_srcs]
+            kb = RecordBatch(Schema(fields), [batch.column(s) for _k, s in self._key_srcs])
+        tmp = GroupState(keys, {}, self._mode, kb.schema, vectorized=True)
+        gidx_full = tmp._factorize(kb)
+        ng = len(tmp.gids)
+        if ng == 0 or ng > _SEG_GROUP_CAP:
+            return FUSED_INELIGIBLE
+        g_pad = max(8, -(-ng // 8) * 8)
+        arrs = staged if staged is not None else self._encode(batch)
+        n = batch.num_rows
+        g32 = np.zeros(self._pad(n), np.int32)
+        g32[:n] = gidx_full
+        try:
+            out = self._launch(arrs, g32, n, segmented=True, ngroups=g_pad)
+        except Exception:
+            return FUSED_INELIGIBLE
+        ctab, counts, gsum, gcnt, gmmf, gmmi, gfirst = [np.asarray(o) for o in out]
+        self._bump("fused_launches")
+        if staged is not None:
+            self._bump("transfers_overlapped")
+        gcnt_v = gcnt[:ng]
+        alive = np.flatnonzero(gcnt_v > 0)
+        if alive.size == 0:
+            return None
+        perm = alive[np.argsort(gfirst[:ng][alive], kind="stable")]
+        st = GroupState(
+            self._agg_keys, self._aggs, self._mode, self._agg_schema, vectorized=True, backend=self._bk
+        )
+        st.key_rows = [tmp.key_rows[g] for g in perm]
+        st.gids = {kt: i for i, kt in enumerate(st.key_rows)}
+        acc: dict = {}
+        for state in self._gcnt_states:
+            acc[state] = gcnt_v[perm].astype(np.int64)
+        for i, (state, _s) in enumerate(self._limb_srcs):
+            acc[state] = _limbs_to_int64(gsum[:, _SUM_LIMBS * i : _SUM_LIMBS * (i + 1)][perm])
+        base = self._limb_base
+        for j, (state, _idx) in enumerate(self._csum_states):
+            s4 = gsum[perm, base + 4 * j : base + 4 * (j + 1)].astype(np.int64)
+            acc[state] = s4[:, 0] + (s4[:, 1] << 8) + (s4[:, 2] << 16) + (s4[:, 3] << 24)
+        for j, (state, _fn, _s) in enumerate(self._mmf):
+            acc[state] = gmmf[perm, j].astype(np.float64)
+        for j, (state, _fn, _s) in enumerate(self._mmi):
+            acc[state] = gmmi[perm, j].astype(np.int64)
+        if self._fsums:
+            compact = self._compact(ctab, counts)
+            g_sel = compact[:, self._gidx_off]
+            for state, ref in self._fsums:
+                vals = np.asarray(self._decode_ref(compact, ref), np.float64)
+                accf = np.zeros(ng, np.float64)
+                np.add.at(accf, g_sel, vals)
+                acc[state] = accf[perm]
+        for name, (_init, dt) in st._state_specs().items():
+            st.acc[name] = np.ascontiguousarray(np.asarray(acc[name], dt))
+        return st
 
 
 # ---------------------------------------------------------------------------

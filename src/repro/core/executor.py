@@ -67,6 +67,7 @@ or closed.
 
 from __future__ import annotations
 
+import itertools
 import os
 import queue
 import threading
@@ -75,7 +76,7 @@ import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Iterator
 
-from repro.core.backend import ComputeBackend, get_backend
+from repro.core.backend import FUSED_INELIGIBLE, ComputeBackend, get_backend, plan_fused_chain
 from repro.core.batch import RecordBatch, concat_batches
 from repro.core.dag import Dag, Node
 from repro.core.errors import FlowCancelled, PlanError, SchemaError
@@ -190,6 +191,28 @@ def _env_morsel_rows():
     return _env_int("DACP_MORSEL_ROWS", DEFAULT_MORSEL_ROWS, 1)
 
 
+def _env_devices():
+    """Validated ``DACP_DEVICES`` override: a comma-separated list of jax
+    device indices that fused-pipeline stages round-robin their staged
+    uploads across.  Garbage warns and falls back to None (default device);
+    out-of-range indices warn at first use and fall back too."""
+    raw = os.environ.get("DACP_DEVICES")
+    if raw is None or raw.strip() == "":
+        return None
+    try:
+        vals = tuple(int(p) for p in raw.split(",") if p.strip() != "")
+    except ValueError:
+        warnings.warn(
+            f"DACP_DEVICES={raw!r} is not a comma-separated list of device indices; ignoring",
+            stacklevel=2,
+        )
+        return None
+    if not vals or any(v < 0 for v in vals):
+        warnings.warn(f"DACP_DEVICES={raw!r} must list non-negative device indices; ignoring", stacklevel=2)
+        return None
+    return vals
+
+
 def default_workers() -> int:
     return _env_int("DACP_EXECUTOR_WORKERS", min(4, os.cpu_count() or 1), 0)
 
@@ -220,6 +243,10 @@ class ExecutorConfig:
     spill_dir     directory for spill partition files (None = the system
                   temp dir; env ``DACP_SPILL_DIR``).
     spill_fanout  partitions per grace-hash level (≥ 2).
+    devices       jax device indices that fused-pipeline stages round-robin
+                  their device-resident launches/staged uploads across
+                  (None = jax's default device; env ``DACP_DEVICES`` as a
+                  comma-separated list, validated with warn + fallback).
     """
 
     num_workers: int = field(default_factory=default_workers)
@@ -232,6 +259,7 @@ class ExecutorConfig:
     memory_budget: int = field(default_factory=lambda: _env_bytes("DACP_MEMORY_BUDGET", 0))
     spill_dir: str | None = field(default_factory=_env_spill_dir)
     spill_fanout: int = 8
+    devices: tuple | None = field(default_factory=_env_devices)
 
     def __post_init__(self) -> None:
         mr = self.morsel_rows
@@ -245,6 +273,11 @@ class ExecutorConfig:
             raise ValueError(f"memory_budget must be >= 0 (0 = unbounded), got {self.memory_budget}")
         if self.spill_fanout < 2:
             raise ValueError(f"spill_fanout must be >= 2, got {self.spill_fanout}")
+        if self.devices is not None:
+            devs = tuple(int(d) for d in self.devices)
+            if not devs or any(d < 0 for d in devs):
+                raise ValueError(f"devices must be a non-empty tuple of indices >= 0, got {self.devices!r}")
+            self.devices = devs
 
     @property
     def auto_morsels(self) -> bool:
@@ -308,11 +341,20 @@ class _MorselSizer:
         self.prefetch_depth = self.max_prefetch
         self.morsels = 0
         self.rows = 0
+        # fused device-resident pipeline counters (bumped by FusedChainPlan
+        # and the micro-morsel coalescer; surfaced via ExecutorStats)
+        self.fused_launches = 0
+        self.transfers_overlapped = 0
+        self.micromorsels_coalesced = 0
         self._m = None  # EWMA moments (E[r], E[t], E[r²], E[r·t])
         self._lock = threading.Lock()
 
     def current(self) -> int:
         return self.size
+
+    def bump(self, counter: str, k: int = 1) -> None:
+        with self._lock:
+            setattr(self, counter, getattr(self, counter) + k)
 
     def observe(self, rows: int, seconds: float) -> None:
         if rows <= 0:
@@ -376,6 +418,9 @@ class ExecutorStats:
             "rows": sizer.rows,
             "window": sizer.window,
             "prefetch_depth": sizer.prefetch_depth,
+            "fused_launches": sizer.fused_launches,
+            "transfers_overlapped": sizer.transfers_overlapped,
+            "micromorsels_coalesced": sizer.micromorsels_coalesced,
         }
 
     def attach(self, sizer: _MorselSizer) -> None:
@@ -402,6 +447,9 @@ class ExecutorStats:
             "rows_processed": sum(p["rows"] for p in done + running),
             "stages_done": len(done),
             "stages_running": len(running),
+            "fused_launches": sum(p.get("fused_launches", 0) for p in done + running),
+            "transfers_overlapped": sum(p.get("transfers_overlapped", 0) for p in done + running),
+            "micromorsels_coalesced": sum(p.get("micromorsels_coalesced", 0) for p in done + running),
         }
 
     def to_dict(self) -> dict:
@@ -517,7 +565,16 @@ class _Branch:
         self.specs = specs if specs is not None else []
 
 
-def _apply_ops(ops: list, batch: RecordBatch) -> RecordBatch | None:
+def _apply_ops(cops, batch: RecordBatch) -> RecordBatch | None:
+    """Apply a compiled ``(ops, plan)`` chain to one morsel.  A fused plan
+    runs the whole chain in one device launch; a morsel outside the kernel
+    envelope (nulls, overflow rows) falls back to the per-op closures,
+    byte-identically."""
+    ops, plan = cops
+    if plan is not None:
+        out = plan.run(batch)
+        if out is not FUSED_INELIGIBLE:
+            return out
     for op in ops:
         batch = op(batch)
         if batch is None:
@@ -537,6 +594,59 @@ def _morsel_slices(batch: RecordBatch, sizer: _MorselSizer):
         s += rows
 
 
+def _branch_items(cops, batches, sizer: _MorselSizer, cfg: ExecutorConfig, do_stage: bool):
+    """One branch's batches → morsels, in input order.
+
+    Adaptive mode coalesces runs of tiny source batches into a single
+    morsel (**micro-morsel batching**: when the sizer picks sizes larger
+    than what the source produces, launches amortize over the coalesced
+    run instead of one per fragment; output order is preserved because
+    only *consecutive* batches merge).  On a fused plan, each emitted
+    morsel's kernel inputs are staged to the device before the morsel is
+    handed to a worker (**double-buffering**: jax H2D transfers are async,
+    so morsel N+1's upload overlaps morsel N's compute)."""
+    plan = cops[1]
+    pending: list = []
+    pending_rows = 0
+
+    def emit(m):
+        if plan is not None and do_stage:
+            plan.stage(m)
+        return m
+
+    def flush():
+        nonlocal pending, pending_rows
+        if not pending:
+            return None
+        m = pending[0] if len(pending) == 1 else concat_batches(pending)
+        if len(pending) > 1:
+            sizer.bump("micromorsels_coalesced", len(pending) - 1)
+        pending = []
+        pending_rows = 0
+        return emit(m)
+
+    for batch in batches:
+        if cfg.auto_morsels and batch.num_rows < sizer.current():
+            if pending and pending_rows + batch.num_rows > sizer.current():
+                out = flush()
+                if out is not None:
+                    yield out
+            pending.append(batch)
+            pending_rows += batch.num_rows
+            continue
+        out = flush()
+        if out is not None:
+            yield out
+        for m in _morsel_slices(batch, sizer):
+            yield emit(m)
+    out = flush()
+    if out is not None:
+        yield out
+
+
+_device_rr = itertools.count()  # round-robin cursor over cfg.devices
+
+
 def _run_ordered(
     branches: list,
     cfg: ExecutorConfig,
@@ -544,18 +654,23 @@ def _run_ordered(
     make_item: Callable,
     stats: ExecutorStats | None = None,
     cancel: threading.Event | None = None,
+    agg=None,
 ):
     """Drive branches' morsels through a worker pool; yield non-None
-    ``make_item(ops, morsel)`` results in strict input order.
+    ``make_item(cops, morsel)`` results in strict input order.
 
     With ``num_workers <= 1`` this degrades to a fully synchronous loop —
     no threads, reference pull-chain behavior.
+
+    ``agg`` (``(keys, aggs, mode, in_schema)``) marks an aggregate drive:
+    the fused-chain planner then folds the partial aggregate into the same
+    per-morsel launch as the streaming ops.
 
     ``cancel`` is the flow-lifecycle hook: when the event fires, workers
     stop claiming morsels and the driver raises ``FlowCancelled`` instead
     of blocking on upstream, so a CANCELled plan releases its threads,
     prefetchers, and spill files within a bounded delay."""
-    compiled = [(br, _finalize_ops(br.specs, backend)) for br in branches]
+    compiled = [(br, _finalize_ops(br.specs, backend, br.sdf.schema, agg)) for br in branches]
     sizer = _MorselSizer(
         cfg.initial_morsel_rows(),
         cfg.auto_morsels,
@@ -563,22 +678,27 @@ def _run_ordered(
         window=cfg.effective_window(),
         prefetch=cfg.prefetch_batches,
     )
+    plans = [cops[1] for _, cops in compiled if cops[1] is not None]
+    for pl in plans:
+        dev = cfg.devices[next(_device_rr) % len(cfg.devices)] if cfg.devices else None
+        pl.bind(sizer, dev)
     if stats is not None:
         stats.attach(sizer)  # live progress (flow STATUS) before the stage ends
 
     if cfg.num_workers <= 1:
         try:
-            for br, ops in compiled:
-                for batch in br.sdf.iter_batches():
-                    for m in _morsel_slices(batch, sizer):
-                        if cancel is not None and cancel.is_set():
-                            raise FlowCancelled("execution cancelled")
-                        t0 = time.perf_counter()
-                        out = make_item(ops, m)
-                        sizer.observe(m.num_rows, time.perf_counter() - t0)
-                        if out is not None:
-                            yield out
+            for br, cops in compiled:
+                for m in _branch_items(cops, br.sdf.iter_batches(), sizer, cfg, do_stage=False):
+                    if cancel is not None and cancel.is_set():
+                        raise FlowCancelled("execution cancelled")
+                    t0 = time.perf_counter()
+                    out = make_item(cops, m)
+                    sizer.observe(m.num_rows, time.perf_counter() - t0)
+                    if out is not None:
+                        yield out
         finally:
+            for pl in plans:
+                pl.clear_staged()
             if stats is not None:
                 stats.record(sizer)
         return
@@ -589,10 +709,9 @@ def _run_ordered(
         pf.start()  # all sources (incl. every exchange pull) activate now
 
     def morsels():
-        for (_, ops), pf in zip(compiled, prefetchers):
-            for batch in pf:
-                for m in _morsel_slices(batch, sizer):
-                    yield ops, m
+        for (_, cops), pf in zip(compiled, prefetchers):
+            for m in _branch_items(cops, pf, sizer, cfg, do_stage=True):
+                yield cops, m
 
     it = morsels()
     src_lock = threading.Lock()
@@ -615,7 +734,7 @@ def _run_ordered(
                 if state["total"] is not None:
                     return
                 try:
-                    ops, m = next(it)
+                    cops, m = next(it)
                 except StopIteration:
                     state["total"] = state["assigned"]
                     with cond:
@@ -632,7 +751,7 @@ def _run_ordered(
                 state["assigned"] = seq + 1
             try:
                 t0 = time.perf_counter()
-                out = make_item(ops, m)
+                out = make_item(cops, m)
                 sizer.observe(m.num_rows, time.perf_counter() - t0)
             except BaseException as e:  # noqa: BLE001 - surfaced to consumer
                 with cond:
@@ -674,6 +793,8 @@ def _run_ordered(
             cond.notify_all()
         for pf in prefetchers:
             pf.close()
+        for pl in plans:
+            pl.clear_staged()  # CANCEL/teardown: no leaked staged device buffers
         if stats is not None:
             stats.record(sizer)
 
@@ -681,9 +802,17 @@ def _run_ordered(
 # ---------------------------------------------------------------------------
 # op-spec finalization (backend binding + filter→select fusion)
 # ---------------------------------------------------------------------------
-def _finalize_ops(specs: list, backend: ComputeBackend) -> list:
-    """Turn compile-time op specs into morsel closures, peephole-fusing
-    adjacent filter+select into the backend's fused kernel."""
+def _finalize_ops(specs: list, backend: ComputeBackend, in_schema: Schema | None = None, agg=None) -> tuple:
+    """Turn compile-time op specs into ``(morsel closures, fused plan)``.
+
+    When the whole chain (and, for aggregate drives, the fold) fits the
+    fused-pipeline kernel envelope, ``plan`` is a
+    :class:`~repro.core.backend.FusedChainPlan` that executes everything in
+    ONE device launch per morsel; the per-op closures remain the fallback
+    for morsels outside the envelope.  Independently, adjacent
+    filter+select pairs are peephole-fused into the backend's two-op
+    kernel on the per-op path."""
+    plan = plan_fused_chain(specs, in_schema, agg=agg, backend=backend) if in_schema is not None else None
     ops: list = []
     i = 0
     while i < len(specs):
@@ -715,7 +844,7 @@ def _finalize_ops(specs: list, backend: ComputeBackend) -> list:
         else:  # pragma: no cover - compiler invariant
             raise PlanError(f"unknown morsel op {kind!r}")
         i += 1
-    return ops
+    return ops, plan
 
 
 class _Once:
@@ -858,8 +987,16 @@ class _Compiler:
                 stacklevel=2,
             )
 
-        def fold(ops, morsel):
-            b = _apply_ops(ops, morsel)
+        def fold(cops, morsel):
+            ops, plan = cops
+            if plan is not None:
+                # fused device-resident fold: filter → project → compact →
+                # segment fold in ONE launch, GroupState materialized from
+                # the kernel's per-group accumulators (byte-identical)
+                st = plan.fold(morsel)
+                if st is not FUSED_INELIGIBLE:
+                    return st
+            b = _apply_ops((ops, None), morsel)
             if b is None or b.num_rows == 0:
                 return None
             # backend-aware fold: eligible aggregates run on the
@@ -880,7 +1017,7 @@ class _Compiler:
             spiller = None
             reserved = 0
             try:
-                for st in _run_ordered(branches, cfg, backend, fold, stats, cancel):
+                for st in _run_ordered(branches, cfg, backend, fold, stats, cancel, agg=(keys, aggs, mode, in_schema)):
                     if spiller is not None:
                         spiller.spill_state(st)
                         continue

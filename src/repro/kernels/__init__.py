@@ -5,6 +5,8 @@
                         form the compute backend dispatches to
     project_arith     — fused project-arithmetic chains compiled from Exprs
     segment_reduce    — per-group sum/min/max/count partial aggregation
+    fused_pipeline    — whole-chain fusion: filter → project → segment fold
+                        in ONE launch per morsel (device-resident planes)
     flash_attention   — causal GQA prefill attention
     decode_attention  — split-K single-token decode (seq-shardable)
     ssd_scan          — Mamba2 SSD chunk scan
@@ -14,10 +16,9 @@
 from repro.kernels import ops, ref
 from repro.kernels.ops import (
     decode_attention,
-    filter_select,
     filter_select_planes,
-    filter_select_tiles,
     flash_attention,
+    fused_chain_tiles,
     mlstm_chunk,
     project_tiles,
     segment_minmax_tiles,
@@ -29,9 +30,8 @@ __all__ = [
     "ops",
     "ref",
     "decode_attention",
-    "filter_select",
-    "filter_select_tiles",
     "filter_select_planes",
+    "fused_chain_tiles",
     "project_tiles",
     "segment_sum_tiles",
     "segment_minmax_tiles",

@@ -14,25 +14,22 @@ back are ``selected_rows × selected_columns`` only.  Per row-tile:
 Scatter-free compaction through the systolic array is the hardware
 adaptation: TPUs have no efficient in-kernel scatter, but a (TILE, TILE)
 one-hot matmul at TILE=256 is ~2% of the per-row cost and keeps the whole
-operator on the MXU.  A cheap jnp epilogue (``ops.filter_select``)
+operator on the MXU.  A cheap host epilogue in ``repro.core.backend``
 concatenates tile fronts into the final compacted table.
 
-Two kernels live here:
-
-  * ``filter_select_tiles``  — the original all-float32 ``col > lit`` form
-    (f32 one-hot matmul); kept for the micro-benchmarks and kernel sweeps.
-  * ``filter_select_planes`` — the production form used by the compute
-    backend.  Columns arrive as **int32 bit-planes** (one plane per 4 bytes
-    of column width; ``repro.core.backend`` encodes/decodes) and compaction
-    is an *integer* one-hot matmul, which moves bit patterns verbatim: the
-    kernel is bit-exact for every fixed-width dtype including ``-0.0``,
-    NaN payloads, Inf, and full-range int64.  The predicate evaluates in
-    the column's native ordering: float32 via bitcast (IEEE compare, NaN
-    semantics preserved), int32 directly, int64 as a two-word hi/lo
-    compare (sign-flipped unsigned low word) — no 64-bit lanes needed.
-    All six comparisons (``lt le gt ge eq ne``) are supported, and a row
-    validity bound masks the ragged tail tile, so ``eq``-style predicates
-    never match padding.
+``filter_select_planes`` is the production form used by the compute
+backend (the legacy all-float32 ``filter_select_tiles`` it superseded is
+retired).  Columns arrive as **int32 bit-planes** (one plane per 4 bytes
+of column width; ``repro.core.backend`` encodes/decodes) and compaction
+is an *integer* one-hot matmul, which moves bit patterns verbatim: the
+kernel is bit-exact for every fixed-width dtype including ``-0.0``,
+NaN payloads, Inf, and full-range int64.  The predicate evaluates in
+the column's native ordering: float32 via bitcast (IEEE compare, NaN
+semantics preserved), int32 directly, int64 as a two-word hi/lo
+compare (sign-flipped unsigned low word) — no 64-bit lanes needed.
+All six comparisons (``lt le gt ge eq ne``) are supported, and a row
+validity bound masks the ragged tail tile, so ``eq``-style predicates
+never match padding.
 """
 
 from __future__ import annotations
@@ -41,10 +38,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
-__all__ = ["filter_select_tiles", "filter_select_planes"]
+__all__ = ["filter_select_planes"]
 
 _INT32_SIGN = -(2**31)  # xor flips the sign bit: signed cmp == unsigned cmp
 
@@ -141,53 +137,3 @@ def filter_select_planes(
         ],
         interpret=interpret,
     )(jnp.asarray(scalars, jnp.int32), pred_planes, table)
-
-
-# ---------------------------------------------------------------------------
-# legacy all-float32 col>lit kernel (micro-benchmarks / kernel sweeps)
-# ---------------------------------------------------------------------------
-def _kernel(tbl_ref, sel_ref, out_ref, cnt_ref, *, pred_col, threshold, tile):
-    block = tbl_ref[...]  # (tile, D)
-    sel_mat = sel_ref[...]  # (D, D_sel) one-hot selection
-    col = block[:, pred_col]
-    mask = col > threshold
-    # projection on the MXU
-    rows_sel = jax.lax.dot_general(
-        block, sel_mat.astype(block.dtype), (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )
-    # compaction matrix P[i, j] = (pos_i == j) & mask_i
-    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
-    cols_iota = jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 1)
-    p_mat = ((pos[:, None] == cols_iota) & mask[:, None]).astype(jnp.float32)
-    out = jax.lax.dot_general(p_mat, rows_sel, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    out_ref[...] = out.astype(out_ref.dtype)
-    cnt_ref[0] = mask.sum(dtype=jnp.int32)
-
-
-def filter_select_tiles(table, pred_col: int, threshold: float, sel_cols, tile: int = 256, interpret: bool = False):
-    """table: (N, D) f32 -> (per-tile-compacted (N, D_sel), counts (N//tile,))."""
-    n, d = table.shape
-    assert n % tile == 0, (n, tile)
-    sel_cols = list(sel_cols)
-    sel_mat = np.zeros((d, len(sel_cols)), np.float32)
-    for j, c in enumerate(sel_cols):
-        sel_mat[c, j] = 1.0
-    kernel = functools.partial(_kernel, pred_col=pred_col, threshold=float(threshold), tile=tile)
-    out, counts = pl.pallas_call(
-        kernel,
-        grid=(n // tile,),
-        in_specs=[
-            pl.BlockSpec((tile, d), lambda i: (i, 0)),
-            pl.BlockSpec((d, len(sel_cols)), lambda i: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((tile, len(sel_cols)), lambda i: (i, 0)),
-            pl.BlockSpec((1,), lambda i: (i,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((n, len(sel_cols)), table.dtype),
-            jax.ShapeDtypeStruct((n // tile,), jnp.int32),
-        ],
-        interpret=interpret,
-    )(table, jnp.asarray(sel_mat))
-    return out, counts

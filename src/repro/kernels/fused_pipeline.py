@@ -1,0 +1,294 @@
+"""Whole-chain fused pipeline kernel: filter → project → segment-reduce in
+ONE Pallas launch per morsel (DESIGN.md §3.2, the device-resident executor).
+
+The per-op kernels (``filter_select``, ``project_arith``,
+``segment_reduce``) each cross the host↔device boundary once per morsel:
+mask + compaction comes back to the host, the compacted table is re-padded
+and re-uploaded for projection, and the factorized fold is a third launch.
+This kernel keeps the morsel's bit-plane columns device-resident across all
+three stages — per row-tile, in a single grid step:
+
+  1. predicate mask on the filter column's int32 plane(s) (f32 bitcast /
+     i32 / two-word i64 compare — same ``_pred_mask`` as filter_select),
+  2. projection arithmetic on the *pre-filter* rows (element-wise, so the
+     surviving rows carry exactly the values the reference computes after
+     filtering), descriptors compiled like ``project_arith``,
+  3. integer one-hot compaction matmul of the passthrough planes + the
+     bitcast computed columns (+ the group-id column when a float sum needs
+     the host's f64 fold),
+  4. masked one-hot **segment fold** for the aggregate tail: 8-bit-limb
+     sums (passthrough columns arrive as host-built limb planes; computed
+     int32 columns are limb-decomposed in-kernel), group counts, f32/i32
+     masked min/max, and each group's minimum surviving row index — the
+     host reorders groups into first-seen-filtered order from it, which
+     makes the fused partial ``GroupState`` byte-identical to the
+     reference fold over the filtered batch.
+
+Everything stays int32/float32 in-kernel; the same exactness arguments as
+the per-op kernels apply (integer matmuls move bit patterns verbatim, limb
+sums stay below 2^26 under ``SUM_ROW_CAP``, min/max is comparison-only).
+Float sums are NOT folded in-kernel (f64 accumulation order matters); their
+source planes ride through the compaction output and the host folds them
+with ``np.add.at`` in row order — bit-identical to the reference.
+
+Static plan parameters (the lru-cached kernel signature):
+
+    op, kind       predicate comparison + column kind ("none" = no filter)
+    descrs_f/_i    project_arith descriptor trees over the f32 / i32 tables
+    csums          indices into ``descrs_i`` whose outputs are summed
+                   (4-limb in-kernel decomposition)
+    fns_f/_i       "min"/"max" per column of the f32 / i32 min/max tables
+    with_gidx      append the group-id column to the compaction table
+    segmented      run the segment fold (False = streaming chain: the group
+                   outputs are zero-filled dummies)
+    ngroups        padded group count (multiple of 8)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.filter_select import _pred_mask
+from repro.kernels.project_arith import _eval_descr
+
+__all__ = ["fused_chain_tiles"]
+
+_I32_MAX = 2**31 - 1
+_I32_MIN = -(2**31)
+
+
+def _mm_sentinels(fns, is_float: bool):
+    if is_float:
+        return tuple(jnp.inf if fn == "min" else -jnp.inf for fn in fns)
+    return tuple(_I32_MAX if fn == "min" else _I32_MIN for fn in fns)
+
+
+def _mm_fold(out_ref, vals, onehot, fns, sentinels):
+    """Masked per-group min/max of ``vals`` (tile, M) accumulated into
+    ``out_ref`` (G, M)."""
+    cur = out_ref[...]
+    cols = []
+    for j, fn in enumerate(fns):
+        masked = jnp.where(onehot, vals[:, j][None, :], sentinels[j])  # (G, tile)
+        red = masked.min(axis=1) if fn == "min" else masked.max(axis=1)
+        cols.append(jnp.minimum(cur[:, j], red) if fn == "min" else jnp.maximum(cur[:, j], red))
+    out_ref[...] = jnp.stack(cols, axis=1)
+
+
+def _kernel(
+    sc_ref,
+    pred_ref,
+    gidx_ref,
+    pass_ref,
+    limb_ref,
+    mmf_ref,
+    mmi_ref,
+    af_ref,
+    ai_ref,
+    ctab_ref,
+    cnt_ref,
+    gsum_ref,
+    gcnt_ref,
+    gmmf_ref,
+    gmmi_ref,
+    gfirst_ref,
+    *,
+    op,
+    kind,
+    descrs_f,
+    descrs_i,
+    csums,
+    fns_f,
+    fns_i,
+    with_gidx,
+    segmented,
+    ngroups,
+    tile,
+):
+    rows = pl.program_id(0) * tile + jax.lax.broadcasted_iota(jnp.int32, (tile,), 0)
+    valid = rows < sc_ref[0]
+    if kind == "none":
+        mask = valid
+    else:
+        mask = _pred_mask(pred_ref[...], sc_ref[1], sc_ref[2], op=op, kind=kind) & valid
+
+    # -- projection arithmetic on pre-filter rows (element-wise == the
+    #    reference's post-filter values on every surviving row)
+    fcols = [_eval_descr(d, af_ref[...]) for d in descrs_f]
+    icols = [_eval_descr(d, ai_ref[...]) for d in descrs_i]
+
+    # -- one-hot compaction of passthrough planes + computed columns
+    parts = [pass_ref[...]]
+    if fcols:
+        parts.append(jax.lax.bitcast_convert_type(jnp.stack(fcols, axis=1), jnp.int32))
+    if icols:
+        parts.append(jnp.stack(icols, axis=1))
+    if with_gidx:
+        parts.append(gidx_ref[...][:, None])
+    ctab = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    cols_iota = jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 1)
+    p_mat = ((pos[:, None] == cols_iota) & mask[:, None]).astype(jnp.int32)
+    ctab_ref[...] = jax.lax.dot_general(
+        p_mat, ctab, (((0,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    cnt_ref[0] = mask.sum(dtype=jnp.int32)
+
+    sent_f = _mm_sentinels(fns_f, True)
+    sent_i = _mm_sentinels(fns_i, False)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        gsum_ref[...] = jnp.zeros_like(gsum_ref)
+        gcnt_ref[...] = jnp.zeros_like(gcnt_ref)
+        gfirst_ref[...] = jnp.full_like(gfirst_ref, _I32_MAX)
+        gmmf_ref[...] = jnp.stack(
+            [jnp.full((ngroups,), sent_f[j], gmmf_ref.dtype) for j in range(len(fns_f))], axis=1
+        )
+        gmmi_ref[...] = jnp.stack(
+            [jnp.full((ngroups,), sent_i[j], gmmi_ref.dtype) for j in range(len(fns_i))], axis=1
+        )
+
+    if not segmented:
+        return
+
+    # -- masked segment fold (only surviving rows reach any group)
+    giota = jax.lax.broadcasted_iota(jnp.int32, (ngroups, tile), 0)
+    onehot = (gidx_ref[...][None, :] == giota) & mask[None, :]
+    oh32 = onehot.astype(jnp.int32)
+    limbs = limb_ref[...]
+    if csums:
+        extra = []
+        for k in csums:
+            v = icols[k]
+            extra += [(v >> (8 * s)) & 0xFF for s in range(3)]
+            extra.append(v >> 24)  # signed top limb (arithmetic shift)
+        limbs = jnp.concatenate([limbs, jnp.stack(extra, axis=1)], axis=1)
+    gsum_ref[...] += jax.lax.dot_general(
+        oh32, limbs, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    gcnt_ref[...] += oh32.sum(axis=1)
+    gfirst_ref[...] = jnp.minimum(
+        gfirst_ref[...], jnp.where(onehot, rows[None, :], _I32_MAX).min(axis=1)
+    )
+    _mm_fold(gmmf_ref, mmf_ref[...], onehot, fns_f, sent_f)
+    _mm_fold(gmmi_ref, mmi_ref[...], onehot, fns_i, sent_i)
+
+
+def fused_chain_tiles(
+    scalars,
+    pred,
+    gidx,
+    pass_tbl,
+    limb_tbl,
+    mmf,
+    mmi,
+    af,
+    ai,
+    *,
+    op: str,
+    kind: str,
+    descrs_f: tuple,
+    descrs_i: tuple,
+    csums: tuple,
+    fns_f: tuple,
+    fns_i: tuple,
+    with_gidx: bool,
+    segmented: bool,
+    ngroups: int,
+    tile: int = 256,
+    interpret: bool = False,
+):
+    """One launch over the whole morsel chain.
+
+    Inputs (all row tables padded to a multiple of ``tile``; unused tables
+    are width-1 zero dummies):
+
+        scalars   (4,)      int32  [n_rows, t_hi bits, t_lo bits, 0]
+        pred      (N, P)    int32  filter-column bit-planes
+        gidx      (N,)      int32  full-morsel group ids (zeros unsegmented)
+        pass_tbl  (N, Dp)   int32  compaction passthrough planes
+        limb_tbl  (N, L)    int32  passthrough sum-column 8-bit limb planes
+        mmf       (N, Mf)   f32    min/max float32 columns
+        mmi       (N, Mi)   i32    min/max int columns (widened)
+        af        (N, Af)   f32    projection-arithmetic input columns
+        ai        (N, Ai)   i32    projection-arithmetic input columns
+
+    Returns ``(ctab, counts, gsum, gcnt, gmmf, gmmi, gfirst)``: the
+    per-tile-compacted table ``[pass | computed f32 | computed i32 |
+    gidx?]`` with per-tile survivor counts, and per-group limb sums
+    ``[passthrough | in-kernel csums]``, counts, min/max extremes, and the
+    minimum surviving row index (``2^31-1`` for groups with no survivors).
+    """
+    n, dp = pass_tbl.shape
+    assert n % tile == 0, (n, tile)
+    assert ngroups % 8 == 0 and ngroups > 0, ngroups
+    p = pred.shape[1]
+    length = limb_tbl.shape[1]
+    mf, mi = mmf.shape[1], mmi.shape[1]
+    afw, aiw = af.shape[1], ai.shape[1]
+    dc = dp + len(descrs_f) + len(descrs_i) + (1 if with_gidx else 0)
+    ls = length + 4 * len(csums)
+    assert len(fns_f) == mf and len(fns_i) == mi, (fns_f, mf, fns_i, mi)
+    kernel = functools.partial(
+        _kernel,
+        op=op,
+        kind=kind,
+        descrs_f=descrs_f,
+        descrs_i=descrs_i,
+        csums=csums,
+        fns_f=fns_f,
+        fns_i=fns_i,
+        with_gidx=with_gidx,
+        segmented=segmented,
+        ngroups=ngroups,
+        tile=tile,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((4,), lambda i: (0,)),
+            pl.BlockSpec((tile, p), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile, dp), lambda i: (i, 0)),
+            pl.BlockSpec((tile, length), lambda i: (i, 0)),
+            pl.BlockSpec((tile, mf), lambda i: (i, 0)),
+            pl.BlockSpec((tile, mi), lambda i: (i, 0)),
+            pl.BlockSpec((tile, afw), lambda i: (i, 0)),
+            pl.BlockSpec((tile, aiw), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, dc), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((ngroups, ls), lambda i: (0, 0)),
+            pl.BlockSpec((ngroups,), lambda i: (0,)),
+            pl.BlockSpec((ngroups, mf), lambda i: (0, 0)),
+            pl.BlockSpec((ngroups, mi), lambda i: (0, 0)),
+            pl.BlockSpec((ngroups,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, dc), jnp.int32),
+            jax.ShapeDtypeStruct((n // tile,), jnp.int32),
+            jax.ShapeDtypeStruct((ngroups, ls), jnp.int32),
+            jax.ShapeDtypeStruct((ngroups,), jnp.int32),
+            jax.ShapeDtypeStruct((ngroups, mf), jnp.float32),
+            jax.ShapeDtypeStruct((ngroups, mi), jnp.int32),
+            jax.ShapeDtypeStruct((ngroups,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        jnp.asarray(scalars, jnp.int32),
+        pred,
+        gidx,
+        pass_tbl,
+        limb_tbl,
+        mmf,
+        mmi,
+        af,
+        ai,
+    )

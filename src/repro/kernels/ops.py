@@ -16,8 +16,8 @@ import jax.numpy as jnp
 from repro.kernels import ref as ref_mod
 from repro.kernels.decode_attention import decode_attention as _decode_attention
 from repro.kernels.filter_select import filter_select_planes as _filter_select_planes
-from repro.kernels.filter_select import filter_select_tiles as _filter_select_tiles
 from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.fused_pipeline import fused_chain_tiles as _fused_chain_tiles
 from repro.kernels.mlstm_chunk import mlstm_chunk as _mlstm_chunk
 from repro.kernels.project_arith import project_tiles as _project_tiles
 from repro.kernels.segment_reduce import SUM_ROW_CAP
@@ -31,9 +31,8 @@ __all__ = [
     "decode_attention",
     "ssd_scan",
     "mlstm_chunk",
-    "filter_select",
-    "filter_select_tiles",
     "filter_select_planes",
+    "fused_chain_tiles",
     "project_tiles",
     "segment_sum_tiles",
     "segment_minmax_tiles",
@@ -65,11 +64,6 @@ def mlstm_chunk(q, k, v, log_i, log_f, chunk: int = 256):
     return _mlstm_chunk(q, k, v, log_i, log_f, chunk=chunk, interpret=auto_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("pred_col", "threshold", "sel_cols", "tile"))
-def filter_select_tiles(table, pred_col: int, threshold: float, sel_cols: tuple, tile: int = 256):
-    return _filter_select_tiles(table, pred_col, threshold, list(sel_cols), tile=tile, interpret=auto_interpret())
-
-
 @functools.partial(jax.jit, static_argnames=("op", "kind", "tile"))
 def filter_select_planes(pred_planes, table, scalars, op: str, kind: str, tile: int = 256):
     # scalars = [n_rows, t_hi bits, t_lo bits] rides as traced data: a new
@@ -93,19 +87,69 @@ def project_tiles(table, descrs, tile: int = 256):
     return _project_tiles(table, descrs, tile=tile, interpret=auto_interpret())
 
 
-def filter_select(table, pred_col: int, threshold: float, sel_cols: tuple, tile: int = 256):
-    """Kernel + epilogue: returns (compacted (n_sel, D_sel) np-backed array,
-    n_sel).  The epilogue gathers each tile's front rows — O(n_sel) work."""
-    out, counts = filter_select_tiles(table, pred_col, threshold, tuple(sel_cols), tile)
-    out = jax.device_get(out)
-    counts = jax.device_get(counts)
-    parts = [out[i * tile : i * tile + int(c)] for i, c in enumerate(counts)]
-    import numpy as np
+_FUSED_STATIC = (
+    "op",
+    "kind",
+    "descrs_f",
+    "descrs_i",
+    "csums",
+    "fns_f",
+    "fns_i",
+    "with_gidx",
+    "segmented",
+    "ngroups",
+    "tile",
+)
 
-    if not parts:
-        return np.zeros((0, len(sel_cols)), out.dtype), 0
-    cat = np.concatenate(parts, axis=0)
-    return cat, int(counts.sum())
+
+@functools.partial(jax.jit, static_argnames=_FUSED_STATIC)
+def fused_chain_tiles(
+    scalars,
+    pred,
+    gidx,
+    pass_tbl,
+    limb_tbl,
+    mmf,
+    mmi,
+    af,
+    ai,
+    op: str,
+    kind: str,
+    descrs_f: tuple,
+    descrs_i: tuple,
+    csums: tuple,
+    fns_f: tuple,
+    fns_i: tuple,
+    with_gidx: bool,
+    segmented: bool,
+    ngroups: int,
+    tile: int = 256,
+):
+    # scalars[0:3] = [n_rows, t_hi bits, t_lo bits] ride as traced data:
+    # a new predicate literal / morsel row count reuses the compiled chain
+    return _fused_chain_tiles(
+        scalars,
+        pred,
+        gidx,
+        pass_tbl,
+        limb_tbl,
+        mmf,
+        mmi,
+        af,
+        ai,
+        op=op,
+        kind=kind,
+        descrs_f=descrs_f,
+        descrs_i=descrs_i,
+        csums=csums,
+        fns_f=fns_f,
+        fns_i=fns_i,
+        with_gidx=with_gidx,
+        segmented=segmented,
+        ngroups=ngroups,
+        tile=tile,
+        interpret=auto_interpret(),
+    )
 
 
 # re-export oracles next to the wrappers for test ergonomics

@@ -195,8 +195,12 @@ def test_float_literal_on_int_column_rewrites():
 
 
 def test_pallas_kernel_actually_dispatches():
-    """The all-float32 fused case must go through the Pallas kernel, not the
-    fallback (guards against the backend silently degrading to numpy)."""
+    """The all-float32 chain must execute device-resident: ONE fused launch
+    per morsel, zero per-op kernel calls (guards against the backend
+    silently degrading to numpy OR the fused planner silently bailing to
+    the per-op path)."""
+    from repro.core.executor import ExecutorStats
+
     backend = get_backend("pallas")
     batch = _random_batch(np.random.default_rng(7))
     bld = Dag.build()
@@ -205,8 +209,12 @@ def test_pallas_kernel_actually_dispatches():
     sel = bld.add("select", {"columns": ["f32_b", "f32_a"]}, [f])
     dag = bld.finish(sel)
     before = backend.kernel_calls
-    _run(dag, batch, "pallas")
-    assert backend.kernel_calls > before
+    stats = ExecutorStats()
+    cfg = ExecutorConfig(num_workers=2, morsel_rows=200, backend="pallas")
+    execute_parallel(dag, lambda n: _sdf(batch), cfg, stats=stats).collect()
+    prog = stats.progress()
+    assert prog["fused_launches"] > 0, "eligible chain did not fuse"
+    assert backend.kernel_calls == before, "fused chain still launched per-op kernels"
 
 
 def test_pallas_falls_back_on_unsupported_shapes():
@@ -570,3 +578,173 @@ def test_spill_composes_with_pallas_backend():
     assert backend.kernel_calls > before, "spilling disabled kernel dispatch"
     assert stats.to_dict()["spill"]["spills"] >= 1
     _assert_byte_identical(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# PR 7: device-resident fused pipelines (one launch per morsel chain)
+# ---------------------------------------------------------------------------
+def _fused_run(dag, batch, backend_name, **cfg_kw):
+    from repro.core.executor import ExecutorStats
+
+    stats = ExecutorStats()
+    cfg = ExecutorConfig(num_workers=2, morsel_rows=200, backend=backend_name, **cfg_kw)
+    out = execute_parallel(dag, lambda n: _sdf(batch), cfg, stats=stats).collect()
+    return out, stats
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_fused_chain_random_eligible_chains_parity(seed):
+    """Random eligible filter/select/project chains — filter leading or
+    mid-chain, computed-of-computed arithmetic, mixed-dtype passthrough —
+    run as ONE fused launch per morsel, byte-identical to numpy, with the
+    per-op kernels silent."""
+    rng = np.random.default_rng(100 + seed)
+    batch = _random_batch(np.random.default_rng(seed))
+    pc, thr = [
+        ("f32_a", float(rng.standard_normal())),
+        ("i32_e", int(rng.integers(0, 9))),
+        ("i64_d", int(rng.integers(-(2**61), 2**61))),
+    ][seed % 3]
+    cmp_op = ["lt", "le", "gt", "ge", "eq", "ne"][int(rng.integers(6))]
+    pred = getattr(col(pc), f"__{cmp_op}__")(thr)
+    # pow2 scale: the only mul shape allowed directly under add/sub (exact
+    # product — immune to XLA CPU's fmul+fadd → FMA contraction); arbitrary
+    # literals stay eligible away from add/sub, e.g. at the tree root
+    scale = float(2.0 ** int(rng.integers(-3, 4)))
+    exprs = {
+        "y": col("f32_a") * scale + col("f32_b"),
+        "z": (col("f32_a") - col("f32_b")) * float(rng.standard_normal()),
+        "w": col("i32_e") * int(rng.integers(1, 5)) - 3,
+    }
+    links = [
+        ("filter", {"predicate": pred}),
+        ("project", {"exprs": exprs, "keep": True}),
+        ("project", {"exprs": {"y2": col("y") * 0.5}, "keep": True}),  # computed-of-computed
+        ("select", {"columns": ["y", "y2", "z", "w", "f32_a", "i64_d", "u8_f", "f16_g", "bool_h"]}),
+    ]
+    if seed % 2:
+        links = [links[1], links[2], links[0], links[3]]  # filter mid-chain
+    bld = Dag.build()
+    node = bld.source("dacp://h:1/d")
+    for op, params in links:
+        node = bld.add(op, params, [node])
+    dag = bld.finish(node)
+    backend = get_backend("pallas")
+    before = backend.kernel_calls
+    got, stats = _fused_run(dag, batch, "pallas")
+    ref, _ = _fused_run(dag, batch, "numpy")
+    _assert_byte_identical(got, ref)
+    assert stats.progress()["fused_launches"] > 0, "eligible chain did not fuse"
+    assert backend.kernel_calls == before, "fused chain still launched per-op kernels"
+
+
+def test_fused_chain_nan_negzero_payload_parity():
+    """-0.0 / NaN / ±Inf payloads ride the fused compaction verbatim, and a
+    NaN-poisoned predicate column keeps IEEE comparison semantics."""
+    n = 600
+    a = np.asarray([1.0, -0.0, np.nan, -1.0, np.inf, 0.0] * (n // 6), np.float32)
+    b = np.asarray([-np.inf, np.nan, -0.0, 2.5, -2.5, np.nan] * (n // 6), np.float32)
+    batch = RecordBatch.from_pydict({"a": a, "b": b})
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    f = bld.add("filter", {"predicate": col("a") <= 0.0}, [s])
+    p = bld.add("project", {"exprs": {"c": col("b") * 2.0}, "keep": True}, [f])
+    dag = bld.finish(p)
+    got, stats = _fused_run(dag, batch, "pallas")
+    ref, _ = _fused_run(dag, batch, "numpy")
+    _assert_byte_identical(got, ref)
+    assert stats.progress()["fused_launches"] > 0
+
+
+def test_fused_chain_full_range_int64_parity():
+    """Full-range int64 payloads (both 32-bit words live) survive the
+    bit-plane passthrough unchanged; the int64 predicate compares as two
+    words."""
+    rng = np.random.default_rng(21)
+    v = rng.integers(-(2**63), 2**63 - 1, 640, dtype=np.int64)
+    v[:4] = [2**63 - 1, -(2**63), -1, 0]
+    k = rng.integers(0, 9, 640).astype(np.int32)
+    batch = RecordBatch.from_pydict({"v": v, "k": k})
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    f = bld.add("filter", {"predicate": col("v") > -(2**62)}, [s])
+    dag = bld.finish(bld.add("select", {"columns": ["v", "k"]}, [f]))
+    got, stats = _fused_run(dag, batch, "pallas")
+    ref, _ = _fused_run(dag, batch, "numpy")
+    _assert_byte_identical(got, ref)
+    assert stats.progress()["fused_launches"] > 0
+
+
+def test_fused_aggregate_single_launch_per_morsel():
+    """filter → project → group-by folds in the SAME launch: the fused
+    counter ticks exactly once per morsel and the per-op kernels (filter,
+    project, segment-reduce) stay silent."""
+    from repro.core.executor import ExecutorStats
+
+    batch = _random_batch(np.random.default_rng(23))
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    f = bld.add("filter", {"predicate": col("f32_a") > -0.25}, [s])
+    p = bld.add("project", {"exprs": {"c": (col("f32_a") - 0.5) * 3.0}, "keep": True}, [f])
+    a = bld.add(
+        "aggregate",
+        {
+            "keys": ["i32_e"],
+            "aggs": {
+                "n": {"fn": "count"},
+                "s64": {"fn": "sum", "column": "i64_d"},
+                "sc": {"fn": "sum", "column": "c"},
+                "m": {"fn": "mean", "column": "f64_c"},
+                "lo": {"fn": "min", "column": "f32_b"},
+                "hi": {"fn": "max", "column": "u8_f"},
+            },
+        },
+        [p],
+    )
+    dag = bld.finish(a)
+    backend = get_backend("pallas")
+    before = backend.kernel_calls
+    got, stats = _fused_run(dag, batch, "pallas")
+    ref, _ = _fused_run(dag, batch, "numpy")
+    _assert_byte_identical(got, ref)
+    assert stats.progress()["fused_launches"] == 4  # 700 rows / 200-row morsels
+    assert backend.kernel_calls == before, "fused fold still launched per-op kernels"
+
+
+def test_fused_chain_composes_with_spill(monkeypatch):
+    """Fused folds × grace-hash spill (DACP_MEMORY_BUDGET=256KB): per-morsel
+    partials come off the fused launch, the merged state crosses the budget
+    and spills, and the result stays byte-identical to the in-memory numpy
+    run."""
+    from repro.core.executor import ExecutorStats
+
+    rng = np.random.default_rng(24)
+    n = 4000
+    batch = RecordBatch.from_pydict(
+        {
+            "g": rng.permutation(n).astype(np.int64),  # ~200 fresh groups per morsel
+            "v": rng.integers(-(2**40), 2**40, n),
+            "x": rng.standard_normal(n).astype(np.float32),
+        }
+    )
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    f = bld.add("filter", {"predicate": col("x") > -2.5}, [s])
+    a = bld.add(
+        "aggregate",
+        {
+            "keys": ["g"],
+            "aggs": {"n": {"fn": "count"}, "sv": {"fn": "sum", "column": "v"}, "lo": {"fn": "min", "column": "x"}},
+        },
+        [f],
+    )
+    dag = bld.finish(a)
+    ref, _ = _fused_run(dag, batch, "numpy")
+    monkeypatch.setenv("DACP_MEMORY_BUDGET", "256KB")
+    stats = ExecutorStats()
+    cfg = ExecutorConfig(num_workers=2, morsel_rows=200, backend="pallas")
+    assert cfg.memory_budget == 256 * 1024
+    got = execute_parallel(dag, lambda nn: _sdf(batch), cfg, stats=stats).collect()
+    _assert_byte_identical(got, ref)
+    assert stats.progress()["fused_launches"] > 0, "spill run did not use the fused path"
+    assert stats.to_dict()["spill"]["spills"] >= 1, "budget never triggered a spill"

@@ -547,3 +547,84 @@ def test_dense_factorization_narrow_signed_keys():
         st.update(b)
         assert st.key_rows == [(-100,), (100,), (50,)], (vec, st.key_rows)
         assert st.acc["n"].tolist() == [2, 2, 1]
+
+
+# ---------------------------------------------------------------------------
+# micro-morsel batching (PR 7)
+# ---------------------------------------------------------------------------
+def test_micromorsel_coalescing_preserves_order():
+    """Adaptive mode coalesces runs of tiny source batches into one morsel;
+    only *consecutive* batches merge, so the output stays in exact input
+    order across a multi-worker pool."""
+    from repro.core.executor import ExecutorStats
+
+    n = 30_000
+    full = RecordBatch.from_pydict({"seq": np.arange(n), "x": np.ones(n, np.float32)})
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    f = bld.add("filter", {"predicate": col("x") > 0.0}, [s])
+    dag = bld.finish(f)
+
+    stats = ExecutorStats()
+    cfg = ExecutorConfig(num_workers=4, morsel_rows="auto", backend="numpy")
+    # 150-row fragments: far below AUTO_MORSEL_MIN, so runs of them coalesce
+    got = execute_parallel(dag, lambda nn: _sdf(full, rows=150), cfg, stats=stats).collect()
+    assert np.array_equal(got.column("seq").to_numpy(), np.arange(n))
+    assert stats.progress()["micromorsels_coalesced"] > 0, "tiny batches never coalesced"
+
+
+def test_cancel_mid_batch_clears_staged_buffers(monkeypatch):
+    """CANCEL with coalesced morsels in flight on the fused path: the
+    teardown sweeps every staged device buffer, including one staged by a
+    worker racing the sweep."""
+    from repro.core import backend as backend_mod
+    from repro.core.errors import FlowCancelled
+
+    plans = []
+    orig_bind = backend_mod.FusedChainPlan.bind
+
+    def spy_bind(self, sizer, device_index=None):
+        plans.append(self)
+        return orig_bind(self, sizer, device_index)
+
+    high_water = []
+    orig_stage = backend_mod.FusedChainPlan.stage
+
+    def spy_stage(self, batch):
+        orig_stage(self, batch)
+        high_water.append(self.staged_count)
+
+    monkeypatch.setattr(backend_mod.FusedChainPlan, "bind", spy_bind)
+    monkeypatch.setattr(backend_mod.FusedChainPlan, "stage", spy_stage)
+
+    n = 60_000
+    full = RecordBatch.from_pydict(
+        {"x": np.random.default_rng(3).standard_normal(n).astype(np.float32), "k": np.arange(n, dtype=np.int64)}
+    )
+    bld = Dag.build()
+    s = bld.source("dacp://h:1/d")
+    f = bld.add("filter", {"predicate": col("x") > -3.0}, [s])
+    dag = bld.finish(bld.add("select", {"columns": ["x", "k"]}, [f]))
+
+    cancel = threading.Event()
+    base = threading.active_count()
+    cfg = ExecutorConfig(num_workers=4, morsel_rows="auto", backend="pallas")
+    out = execute_parallel(dag, lambda nn: _sdf(full, rows=150), cfg, cancel=cancel)
+    it = out.iter_batches()
+    next(it)  # first morsel out: later morsels are staged/coalesced in flight
+    cancel.set()
+    with pytest.raises(FlowCancelled):
+        for _ in it:
+            pass
+    deadline = time.time() + 5
+    while time.time() < deadline and threading.active_count() > base:
+        time.sleep(0.05)  # workers/prefetchers wind down before we inspect
+    assert plans, "chain did not compile to a fused plan"
+    assert max(high_water, default=0) > 0, "double-buffering never staged a morsel"
+    deadline = time.time() + 5
+    while time.time() < deadline and any(p.staged_count for p in plans):
+        time.sleep(0.05)
+    assert all(p.staged_count == 0 for p in plans), "staged device buffers leaked past CANCEL"
+    # a straggler worker staging after the sweep must be refused, not leaked
+    plans[0].stage(full.slice(0, 150))
+    assert plans[0].staged_count == 0

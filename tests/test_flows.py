@@ -265,6 +265,11 @@ def test_cancel_cross_domain_reaches_child_submits(tmp_path):
     # wait until THIS plan's child fragment is registered at f2
     assert _poll(lambda: set(s2.flows.flow_ids()) - stale)
     child_ids = sorted(set(s2.flows.flow_ids()) - stale)
+    # the child shows up at f2 before the coordinator's scheduler records the
+    # registration — wait for the coordinator's view too, or CANCEL can land
+    # in the gap and report zero children
+    co = s1.flows.get(fl.flow_id)
+    assert _poll(lambda: co.scheduler is not None and co.scheduler.children())
     resp = fl.cancel(deadline=5.0)
     assert resp["released"] is True
     assert resp["state"] == "CANCELLED"

@@ -66,23 +66,104 @@ def test_mlstm_chunk_sweep(s, chunk, d):
     assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=5e-4)
 
 
-@pytest.mark.parametrize("n,d,tile", [(512, 8, 128), (1024, 16, 256)])
-def test_filter_select_sweep(n, d, tile):
-    table = jnp.asarray(R.normal(size=(n, d)).astype(np.float32))
-    sel = (0, d // 2, d - 1)
-    got, gcnt = ops.filter_select_tiles(table, 1, 0.0, sel, tile=tile)
-    want, wcnt = ref.filter_select_ref(table, 1, 0.0, sel, tile)
-    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
-    assert (np.asarray(gcnt) == np.asarray(wcnt)).all()
+@pytest.mark.parametrize("n,d,tile", [(512, 4, 128), (1024, 8, 256)])
+@pytest.mark.parametrize("op", ["gt", "le", "eq"])
+def test_filter_select_planes_sweep(n, d, tile, op):
+    """Bit-plane kernel compaction == numpy boolean indexing, bit-exact."""
+    vals = R.normal(size=(n, d)).astype(np.float32)
+    vals[::37, 0] = -0.0
+    thr = np.float32(0.1)
+    planes = vals.view(np.int32)
+    t_hi = np.array([thr], np.float32).view(np.int32)[0]
+    scalars = np.array([n, t_hi, 0], np.int32)
+    got, counts = ops.filter_select_planes(
+        jnp.asarray(planes[:, :1]), jnp.asarray(planes), scalars, op=op, kind="f32", tile=tile
+    )
+    got, counts = np.asarray(got), np.asarray(counts)
+    cmp = {"gt": np.greater, "le": np.less_equal, "eq": np.equal}[op]
+    mask = cmp(vals[:, 0], thr)
+    front = np.concatenate([got[i * tile : i * tile + c] for i, c in enumerate(counts)])
+    assert counts.sum() == mask.sum()
+    np.testing.assert_array_equal(front.view(np.float32), vals[mask])
 
 
-def test_filter_select_global_compaction():
-    table = jnp.asarray(R.normal(size=(512, 6)).astype(np.float32))
-    compacted, nsel = ops.filter_select(table, 2, 0.5, (0, 1), tile=128)
-    tb = np.asarray(table)
-    mask = tb[:, 2] > 0.5
-    assert nsel == mask.sum()
-    assert_allclose(compacted, tb[mask][:, [0, 1]], rtol=1e-6)
+def test_filter_select_planes_i64_two_word():
+    """int64 predicates compare as two int32 words — full-range exact."""
+    n, tile = 512, 128
+    v = R.integers(-(2**62), 2**62, size=n, dtype=np.int64)
+    v[: tile // 2] = np.array([2**62 + 7, -(2**62) - 7], np.int64).repeat(tile // 4)
+    target = np.int64(2**62 + 7)
+    hi = (v >> 32).astype(np.int32)
+    lo = (v & 0xFFFFFFFF).astype(np.uint64).astype(np.uint32).view(np.int32)
+    pred = np.stack([hi, lo], axis=1)
+    t_hi = np.int32(target >> 32)
+    t_lo = np.int32(np.uint32(target & 0xFFFFFFFF).view(np.int32) ^ np.int32(-(2**31)))
+    scalars = np.array([n, t_hi, t_lo], np.int32)
+    got, counts = ops.filter_select_planes(
+        jnp.asarray(pred), jnp.asarray(pred), scalars, op="gt", kind="i64", tile=tile
+    )
+    got, counts = np.asarray(got), np.asarray(counts)
+    mask = v > target
+    front = np.concatenate([got[i * tile : i * tile + c] for i, c in enumerate(counts)])
+    assert counts.sum() == mask.sum()
+    back = (front[:, 0].astype(np.int64) << 32) | front[:, 1].view(np.uint32).astype(np.int64)
+    np.testing.assert_array_equal(back, v[mask])
+
+
+def test_fused_chain_tiles_matches_numpy():
+    """One-launch chain (filter → arith → compact → segment fold) == numpy."""
+    from repro.kernels.fused_pipeline import fused_chain_tiles as raw_fused
+
+    n, tile, ng = 512, 128, 8
+    x = R.normal(size=n).astype(np.float32)
+    iv = R.integers(-500, 500, size=n).astype(np.int32)
+    g = R.integers(0, 5, size=n).astype(np.int32)
+    thr = np.float32(0.0)
+    scalars = np.array([n, np.array([thr], np.float32).view(np.int32)[0], 0, 0], np.int32)
+    v64 = iv.astype(np.int64)
+    limbs = np.stack(
+        [((v64 >> (8 * k)) & 0xFF).astype(np.int32) for k in range(7)] + [(v64 >> 56).astype(np.int32)],
+        axis=1,
+    )
+    zcol = np.zeros((n, 1), np.int32)
+    out = raw_fused(
+        jnp.asarray(scalars),
+        jnp.asarray(x.view(np.int32).reshape(n, 1)),
+        jnp.asarray(g),
+        jnp.asarray(zcol),
+        jnp.asarray(limbs),
+        jnp.asarray(x.reshape(n, 1)),
+        jnp.asarray(iv.reshape(n, 1)),
+        jnp.asarray(x.reshape(n, 1)),
+        jnp.asarray(zcol),
+        op="gt",
+        kind="f32",
+        descrs_f=(("mul", ("col", 0), ("lit", 2.0)),),
+        descrs_i=(),
+        csums=(),
+        fns_f=("max",),
+        fns_i=("min",),
+        with_gidx=False,
+        segmented=True,
+        ngroups=ng,
+        tile=tile,
+        interpret=True,
+    )
+    ctab, counts, gsum, gcnt, gmmf, gmmi, gfirst = [np.asarray(o) for o in out]
+    mask = x > thr
+    front = np.concatenate([ctab[i * tile : i * tile + c] for i, c in enumerate(counts)])
+    np.testing.assert_array_equal(front[:, 1].view(np.float32), (x * np.float32(2.0))[mask])
+    for gi in range(5):
+        m = mask & (g == gi)
+        assert gcnt[gi] == m.sum()
+        tot = sum(int(gsum[gi, k]) << (8 * k) for k in range(7)) + (int(gsum[gi, 7]) << 56)
+        assert np.int64(np.uint64(tot & (2**64 - 1))) == v64[m].sum()
+        if m.any():
+            assert gmmf[gi, 0] == x[m].max()
+            assert gmmi[gi, 0] == iv[m].min()
+            assert gfirst[gi] == np.flatnonzero(m)[0]
+        else:
+            assert gfirst[gi] == 2**31 - 1
 
 
 def test_mlstm_kernel_matches_model_cell():

@@ -107,8 +107,14 @@ def test_filter_select_kernel_property(vals):
     arr = np.zeros((n, 4), np.float32)
     arr[: len(vals), 0] = vals
     arr[:, 1] = np.arange(n)
-    table = jnp.asarray(arr)
-    compacted, nsel = ops.filter_select(table, 0, 1.5, (1,), tile=8)
-    mask = arr[:, 0] > 1.5
-    assert nsel == mask.sum()
-    np.testing.assert_allclose(compacted[:, 0], arr[mask][:, 1], rtol=1e-6)
+    planes = arr.view(np.int32)
+    thr = np.float32(1.5)
+    scalars = np.array([n, np.array([thr], np.float32).view(np.int32)[0], 0], np.int32)
+    out, counts = ops.filter_select_planes(
+        jnp.asarray(planes[:, :1]), jnp.asarray(planes), scalars, op="gt", kind="f32", tile=8
+    )
+    out, counts = np.asarray(out), np.asarray(counts)
+    mask = arr[:, 0] > thr
+    assert counts.sum() == mask.sum()
+    front = np.concatenate([out[i * 8 : i * 8 + c] for i, c in enumerate(counts)])
+    np.testing.assert_array_equal(front[:, 1].view(np.float32), arr[mask][:, 1])
