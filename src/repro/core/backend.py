@@ -52,7 +52,6 @@ interpret-mode Pallas on CPU is for correctness tests, not speed.
 from __future__ import annotations
 
 import math
-import os
 import threading
 import warnings
 from typing import Callable
@@ -60,6 +59,7 @@ from typing import Callable
 import numpy as np
 
 from repro.core.batch import Column, RecordBatch
+from repro.core.env import env_str
 from repro.core.expr import Expr
 
 __all__ = [
@@ -1446,7 +1446,7 @@ def get_backend(name: str | None = None) -> ComputeBackend:
     """Resolve a backend by name.  ``auto`` (default, or env
     ``DACP_BACKEND``) picks pallas only on a real TPU; ``pallas`` without
     jax still resolves — its kernels just fall back to numpy."""
-    name = name or os.environ.get("DACP_BACKEND", "auto")
+    name = name or env_str("DACP_BACKEND")
     if name == "auto":
         name = "pallas" if _jax_tpu() else "numpy"
     if name not in BACKENDS:

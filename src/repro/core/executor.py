@@ -68,7 +68,6 @@ or closed.
 from __future__ import annotations
 
 import itertools
-import os
 import queue
 import threading
 import time
@@ -79,6 +78,7 @@ from typing import Callable, Iterator
 from repro.core.backend import FUSED_INELIGIBLE, ComputeBackend, get_backend, plan_fused_chain
 from repro.core.batch import RecordBatch, concat_batches
 from repro.core.dag import Dag, Node
+from repro.core.env import env_bytes, env_devices, env_dir, env_int, env_morsel_rows, env_str, knob_default
 from repro.core.errors import FlowCancelled, PlanError, SchemaError
 from repro.core.operators import (
     GroupState,
@@ -112,7 +112,7 @@ __all__ = [
     "get_last_stats",
 ]
 
-DEFAULT_MORSEL_ROWS = 65536
+DEFAULT_MORSEL_ROWS = knob_default("DACP_MORSEL_ROWS")
 # adaptive ("auto") morsel sizing envelope: EWMA of observed per-morsel
 # latency steers the size toward AUTO_TARGET_S per morsel, clamped.
 AUTO_MORSEL_MIN = 4096
@@ -122,99 +122,8 @@ AUTO_TARGET_S = 1e-3
 _STREAMING_OPS = ("filter", "select", "project", "map")
 
 
-def _env_int(name: str, default: int, minimum: int) -> int:
-    """Validated integer env override: a garbage or out-of-range value logs
-    a warning and falls back to ``default`` instead of raising deep inside
-    engine construction."""
-    raw = os.environ.get(name)
-    if raw is None or raw == "":
-        return default
-    try:
-        v = int(raw)
-    except ValueError:
-        warnings.warn(f"{name}={raw!r} is not an integer; using {default}", stacklevel=2)
-        return default
-    if v < minimum:
-        warnings.warn(f"{name}={v} is below the minimum {minimum}; using {default}", stacklevel=2)
-        return default
-    return v
-
-
-_BYTE_SUFFIX = {"k": 1 << 10, "m": 1 << 20, "g": 1 << 30}
-
-
-def _env_bytes(name: str, default: int) -> int:
-    """Validated byte-size env override: plain integers or ``256k`` /
-    ``256KB`` / ``0.5m`` / ``1g`` style suffixes.  Garbage or negative
-    values warn and fall back to ``default`` (the PR-3 env-knob pattern)."""
-    raw = os.environ.get(name)
-    if raw is None or raw.strip() == "":
-        return default
-    s = raw.strip().lower()
-    if s.endswith("b"):
-        s = s[:-1]
-    mult = 1
-    if s and s[-1] in _BYTE_SUFFIX:
-        mult = _BYTE_SUFFIX[s[-1]]
-        s = s[:-1]
-    try:
-        v = float(s) if "." in s else int(s)
-    except ValueError:
-        warnings.warn(f"{name}={raw!r} is not a byte size; using {default}", stacklevel=2)
-        return default
-    if v < 0:
-        warnings.warn(f"{name}={raw!r} is negative; using {default}", stacklevel=2)
-        return default
-    return int(v * mult)
-
-
-def _env_spill_dir() -> str | None:
-    """Validated spill-dir env override: a missing or unwritable directory
-    warns at config construction and falls back to the system temp dir
-    (None) instead of failing the first over-budget query mid-flight."""
-    raw = os.environ.get("DACP_SPILL_DIR")
-    if not raw:
-        return None
-    if not os.path.isdir(raw) or not os.access(raw, os.W_OK):
-        warnings.warn(
-            f"DACP_SPILL_DIR={raw!r} is not a writable directory; using the system temp dir",
-            stacklevel=2,
-        )
-        return None
-    return raw
-
-
-def _env_morsel_rows():
-    raw = os.environ.get("DACP_MORSEL_ROWS")
-    if raw is not None and raw.strip().lower() == "auto":
-        return "auto"
-    return _env_int("DACP_MORSEL_ROWS", DEFAULT_MORSEL_ROWS, 1)
-
-
-def _env_devices():
-    """Validated ``DACP_DEVICES`` override: a comma-separated list of jax
-    device indices that fused-pipeline stages round-robin their staged
-    uploads across.  Garbage warns and falls back to None (default device);
-    out-of-range indices warn at first use and fall back too."""
-    raw = os.environ.get("DACP_DEVICES")
-    if raw is None or raw.strip() == "":
-        return None
-    try:
-        vals = tuple(int(p) for p in raw.split(",") if p.strip() != "")
-    except ValueError:
-        warnings.warn(
-            f"DACP_DEVICES={raw!r} is not a comma-separated list of device indices; ignoring",
-            stacklevel=2,
-        )
-        return None
-    if not vals or any(v < 0 for v in vals):
-        warnings.warn(f"DACP_DEVICES={raw!r} must list non-negative device indices; ignoring", stacklevel=2)
-        return None
-    return vals
-
-
 def default_workers() -> int:
-    return _env_int("DACP_EXECUTOR_WORKERS", min(4, os.cpu_count() or 1), 0)
+    return env_int("DACP_EXECUTOR_WORKERS")
 
 
 @dataclass
@@ -250,16 +159,16 @@ class ExecutorConfig:
     """
 
     num_workers: int = field(default_factory=default_workers)
-    morsel_rows: int | str = field(default_factory=_env_morsel_rows)
-    backend: str = field(default_factory=lambda: os.environ.get("DACP_BACKEND", "auto"))
+    morsel_rows: int | str = field(default_factory=lambda: env_morsel_rows("DACP_MORSEL_ROWS"))
+    backend: str = field(default_factory=lambda: env_str("DACP_BACKEND"))
     window: int = 0
     prefetch_batches: int = 4
     stream_depth: int = 4
-    scan_workers: int = field(default_factory=lambda: _env_int("DACP_SCAN_WORKERS", 4, 1))
-    memory_budget: int = field(default_factory=lambda: _env_bytes("DACP_MEMORY_BUDGET", 0))
-    spill_dir: str | None = field(default_factory=_env_spill_dir)
+    scan_workers: int = field(default_factory=lambda: env_int("DACP_SCAN_WORKERS"))
+    memory_budget: int = field(default_factory=lambda: env_bytes("DACP_MEMORY_BUDGET"))
+    spill_dir: str | None = field(default_factory=lambda: env_dir("DACP_SPILL_DIR"))
     spill_fanout: int = 8
-    devices: tuple | None = field(default_factory=_env_devices)
+    devices: tuple | None = field(default_factory=lambda: env_devices("DACP_DEVICES"))
 
     def __post_init__(self) -> None:
         mr = self.morsel_rows

@@ -32,43 +32,14 @@ from __future__ import annotations
 
 import heapq
 import itertools
-import os
 import threading
 import time
-import warnings
 
-from repro.core.executor import _env_bytes, _env_int
+from repro.core.env import env_bytes, env_int, env_weights, parse_weights
 
 __all__ = ["AdmissionController", "parse_weights"]
 
 _EWMA_ALPHA = 0.2
-
-
-def parse_weights(raw: str | None) -> dict:
-    """``"alice=4,bob=1"`` → {"alice": 4.0, "bob": 1.0}; malformed entries
-    warn and fall back to weight 1 (the env-knob validation pattern)."""
-    out: dict = {}
-    if not raw or not raw.strip():
-        return out
-    for part in raw.split(","):
-        part = part.strip()
-        if not part:
-            continue
-        name, eq, val = part.partition("=")
-        try:
-            if not eq:
-                raise ValueError("missing '='")
-            w = float(val)
-            if w <= 0:
-                raise ValueError("weight must be > 0")
-        except ValueError as e:
-            warnings.warn(
-                f"DACP_FLOW_QUOTA_WEIGHTS entry {part!r} is invalid ({e}); using weight 1",
-                stacklevel=2,
-            )
-            continue
-        out[name.strip()] = w
-    return out
 
 
 class AdmissionController:
@@ -83,16 +54,16 @@ class AdmissionController:
     ):
         # 0 = unlimited for every quota knob (the default)
         self.total_slots = (
-            total_slots if total_slots is not None else _env_int("DACP_FLOW_QUOTA_SLOTS", 0, 0)
+            total_slots if total_slots is not None else env_int("DACP_FLOW_QUOTA_SLOTS")
         )
         self.concurrency = (
-            concurrency if concurrency is not None else _env_int("DACP_FLOW_QUOTA_CONCURRENCY", 0, 0)
+            concurrency if concurrency is not None else env_int("DACP_FLOW_QUOTA_CONCURRENCY")
         )
         self.bytes_quota = (
-            bytes_quota if bytes_quota is not None else _env_bytes("DACP_FLOW_QUOTA_BYTES", 0)
+            bytes_quota if bytes_quota is not None else env_bytes("DACP_FLOW_QUOTA_BYTES")
         )
         self.weights = (
-            dict(weights) if weights is not None else parse_weights(os.environ.get("DACP_FLOW_QUOTA_WEIGHTS"))
+            dict(weights) if weights is not None else env_weights("DACP_FLOW_QUOTA_WEIGHTS")
         )
         self._lock = threading.Lock()
         self._running: dict = {}  # tenant -> live producer count

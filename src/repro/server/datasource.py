@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core import dtypes
 from repro.core.batch import Column, RecordBatch
+from repro.core.env import env_int
 from repro.core.errors import ResourceNotFound, SchemaError
 from repro.core.expr import Expr
 from repro.core.schema import Field, Schema
@@ -50,7 +51,9 @@ __all__ = ["scan_path", "scan_bytes", "write_sdf_dataset", "DEFAULT_BATCH_ROWS",
 
 DEFAULT_BATCH_ROWS = 65536
 DEFAULT_CHUNK_BYTES = 4 << 20
-DEFAULT_SCAN_WORKERS = int(os.environ.get("DACP_SCAN_WORKERS", "4"))
+# validated read: a garbage DACP_SCAN_WORKERS warns and falls back instead
+# of crashing this module's import (the raw int() here used to do exactly that)
+DEFAULT_SCAN_WORKERS = env_int("DACP_SCAN_WORKERS")
 
 STRUCTURED_EXTS = {".csv", ".jsonl", ".npz", ".npy"}
 

@@ -80,8 +80,9 @@ import threading
 import time
 
 from repro.core.batch import RecordBatch
+from repro.core.env import env_bytes, env_float
 from repro.core.errors import DacpError, FlowCancelled, ResourceNotFound
-from repro.core.executor import ExecutorStats, _env_bytes
+from repro.core.executor import ExecutorStats
 from repro.server.admission import AdmissionController
 from repro.server.plancache import PlanCache
 
@@ -92,20 +93,6 @@ FLOW_STATES = ("PLANNED", "QUEUED", "RUNNING", "DRAINING", "DONE", "CANCELLED", 
 # live TTL for published (SUBMIT) fragments awaiting activation — unchanged
 # from the pre-flow engine table
 FLOW_TTL_S = 600.0
-
-
-def _env_float(name: str, default: float) -> float:
-    raw = os.environ.get(name)
-    if raw is None or raw.strip() == "":
-        return default
-    try:
-        v = float(raw)
-    except ValueError:
-        import warnings
-
-        warnings.warn(f"{name}={raw!r} is not a number; using {default}", stacklevel=2)
-        return default
-    return v if v > 0 else default
 
 
 class FlowRecord:
@@ -224,11 +211,11 @@ class FlowManager:
         self.authority = authority
         # per-flow unacked-byte budget; the producer blocks past it
         self.buffer_bytes = (
-            buffer_bytes if buffer_bytes is not None else _env_bytes("DACP_FLOW_BUFFER", 32 << 20)
+            buffer_bytes if buffer_bytes is not None else env_bytes("DACP_FLOW_BUFFER")
         )
         # terminal flows (and their buffers) are reaped after this long
         self.retain_ttl_s = (
-            retain_ttl_s if retain_ttl_s is not None else _env_float("DACP_FLOW_TTL", 60.0)
+            retain_ttl_s if retain_ttl_s is not None else env_float("DACP_FLOW_TTL")
         )
         self.idle_ttl_s = idle_ttl_s
         self.admission = admission if admission is not None else AdmissionController()
@@ -687,7 +674,7 @@ class FlowManager:
                 return ("error", fl.error)
             if fl.state == "CANCELLED" or fl.cancel.is_set():
                 return ("error", FlowCancelled(f"flow {fl.flow_id} cancelled").to_wire())
-            fl.cond.wait(timeout=timeout)
+            fl.cond.wait(timeout=timeout)  # dacpcheck: ignore[blocking] reason=timed poll contract; caller loops and re-checks cursor/state on None
             return None
 
     def mark_delivered(self, fl: FlowRecord) -> None:

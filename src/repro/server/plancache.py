@@ -38,8 +38,8 @@ import threading
 import time
 
 from repro.core.dag import Dag
+from repro.core.env import env_bytes, env_float
 from repro.core.expr import Expr
-from repro.core.executor import _env_bytes
 from repro.core.pushdown import optimize
 
 __all__ = ["PlanCache", "fingerprint"]
@@ -150,9 +150,9 @@ class PlanCache:
 
     def __init__(self, budget_bytes: int | None = None, ttl_s: float | None = None):
         self.budget_bytes = (
-            budget_bytes if budget_bytes is not None else _env_bytes("DACP_PLAN_CACHE_BYTES", 64 << 20)
+            budget_bytes if budget_bytes is not None else env_bytes("DACP_PLAN_CACHE_BYTES")
         )
-        self.ttl_s = ttl_s if ttl_s is not None else _env_float_ttl("DACP_PLAN_CACHE_TTL", 600.0)
+        self.ttl_s = ttl_s if ttl_s is not None else env_float("DACP_PLAN_CACHE_TTL")
         self._table: dict = {}  # fp -> _Entry
         self._lock = threading.Lock()
         self.hits = 0
@@ -243,19 +243,3 @@ class PlanCache:
                 "evictions": self.evictions,
                 "invalidations": self.invalidations,
             }
-
-
-def _env_float_ttl(name: str, default: float) -> float:
-    import os
-
-    raw = os.environ.get(name)
-    if raw is None or raw.strip() == "":
-        return default
-    try:
-        v = float(raw)
-    except ValueError:
-        import warnings
-
-        warnings.warn(f"{name}={raw!r} is not a number; using {default}", stacklevel=2)
-        return default
-    return v if v > 0 else default

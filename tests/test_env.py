@@ -1,0 +1,98 @@
+"""The central DACP_* env-knob registry (repro.core.env).
+
+Covers the accessor/validation contract (warn-and-fallback, suffix forms,
+unregistered-name refusal) and the regression that motivated it: a garbage
+``DACP_SCAN_WORKERS`` used to crash ``repro.server.datasource`` at import
+time through a raw module-level ``int(os.environ.get(...))``.
+"""
+
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import env
+
+
+def test_every_knob_is_dacp_prefixed_and_documented():
+    assert env.REGISTRY, "registry must not be empty"
+    for name, knob in env.REGISTRY.items():
+        assert name.startswith("DACP_")
+        assert knob.name == name
+        assert knob.doc.strip(), name
+        assert knob.forms(), name  # every kind renders an accepted-forms note
+
+
+def test_unregistered_name_raises_immediately():
+    with pytest.raises(KeyError, match="not a registered"):
+        env.env_int("DACP_NO_SUCH_KNOB")
+    with pytest.raises(KeyError, match="kind"):
+        env.env_int("DACP_BACKEND")  # registered, but as a str knob
+
+
+def test_int_knob_warn_and_fallback(monkeypatch):
+    monkeypatch.setenv("DACP_SCAN_WORKERS", "7")
+    assert env.env_int("DACP_SCAN_WORKERS") == 7
+    monkeypatch.setenv("DACP_SCAN_WORKERS", "zero")
+    with pytest.warns(UserWarning, match="not an integer"):
+        assert env.env_int("DACP_SCAN_WORKERS") == 4
+    monkeypatch.setenv("DACP_SCAN_WORKERS", "0")  # below minimum=1
+    with pytest.warns(UserWarning, match="below the minimum"):
+        assert env.env_int("DACP_SCAN_WORKERS") == 4
+    monkeypatch.delenv("DACP_SCAN_WORKERS")
+    assert env.env_int("DACP_SCAN_WORKERS") == 4
+
+
+def test_bytes_knob_suffix_forms(monkeypatch):
+    for raw, expect in [("262144", 262144), ("256KB", 262144), ("0.5m", 524288), ("1g", 1 << 30)]:
+        monkeypatch.setenv("DACP_MEMORY_BUDGET", raw)
+        assert env.env_bytes("DACP_MEMORY_BUDGET") == expect, raw
+    monkeypatch.setenv("DACP_MEMORY_BUDGET", "-5m")
+    with pytest.warns(UserWarning, match="not a byte size"):
+        assert env.env_bytes("DACP_MEMORY_BUDGET") == 0
+
+
+def test_float_knob_rejects_nonpositive(monkeypatch):
+    monkeypatch.setenv("DACP_FLOW_TTL", "2.5")
+    assert env.env_float("DACP_FLOW_TTL") == 2.5
+    monkeypatch.setenv("DACP_FLOW_TTL", "-1")
+    assert env.env_float("DACP_FLOW_TTL") == 60.0
+    monkeypatch.setenv("DACP_FLOW_TTL", "soon")
+    with pytest.warns(UserWarning, match="not a number"):
+        assert env.env_float("DACP_FLOW_TTL") == 60.0
+
+
+def test_bool_knob_forms(monkeypatch):
+    for raw, expect in [("1", True), ("true", True), ("YES", True), ("on", True), ("0", False), ("off", False), ("", False)]:
+        monkeypatch.setenv("DACP_LOCKCHECK", raw)
+        assert env.env_bool("DACP_LOCKCHECK") is expect, raw
+    monkeypatch.delenv("DACP_LOCKCHECK")
+    assert env.env_bool("DACP_LOCKCHECK") is False
+
+
+def test_callable_default_evaluates_per_read(monkeypatch):
+    monkeypatch.delenv("DACP_EXECUTOR_WORKERS", raising=False)
+    v = env.env_int("DACP_EXECUTOR_WORKERS")
+    assert 1 <= v <= 4
+
+
+def test_markdown_table_covers_every_knob():
+    table = env.markdown_table()
+    for name in env.REGISTRY:
+        assert f"`{name}`" in table, name
+
+
+def test_datasource_imports_with_garbage_scan_workers():
+    """Regression: DEFAULT_SCAN_WORKERS was a raw module-level int() parse,
+    so `DACP_SCAN_WORKERS=abc` raised ValueError at import time."""
+    proc = subprocess.run(
+        [sys.executable, "-W", "ignore", "-c",
+         "import repro.server.datasource as d; print(d.DEFAULT_SCAN_WORKERS)"],
+        env={"DACP_SCAN_WORKERS": "abc", "PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=str(__import__("pathlib").Path(__file__).resolve().parent.parent),
+        capture_output=True,
+        text=True,
+        timeout=60,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert proc.stdout.strip() == "4"
