@@ -9,6 +9,15 @@ import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# DACP_LOCKCHECK=1: patch the threading factories *before* any repro module
+# is imported, so module- and instance-level locks are created tracked.  The
+# observed acquisition-order graph is dumped at exit (DACP_LOCKCHECK_OUT)
+# and unioned with the static graph by `python -m tools.dacpcheck`.
+if os.environ.get("DACP_LOCKCHECK", "").strip().lower() in ("1", "true", "yes", "on"):
+    from repro.core import lockcheck
+
+    lockcheck.install_if_enabled()
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -1,0 +1,540 @@
+"""The dacpcheck analyzer itself: seeded violations per rule, negatives,
+pragma suppression, and the DACP_LOCKCHECK runtime recorder.
+
+Fixture trees are written to tmp_path and analyzed with the real passes —
+the same code path as ``python -m tools.dacpcheck src/repro``.
+"""
+
+import json
+import os
+import sys
+import textwrap
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from tools.dacpcheck import blocking, envknobs, lockorder, resources  # noqa: E402
+from tools.dacpcheck.core import Project  # noqa: E402
+
+# minimal registry so the env pass has something to parse in every fixture
+ENV_MODULE = """
+REGISTRY = {}
+
+def _register(name, kind, default, doc, minimum=None):
+    REGISTRY[name] = (kind, default, doc)
+    return name
+
+_register("DACP_REAL", "int", 1, "a registered knob")
+_register("DACP_UNDOCUMENTED", "int", 2, "registered but not in the README")
+"""
+
+
+def _analyze(tmp_path, files, runtime_graph=None, readme=None):
+    files = {"core/env.py": ENV_MODULE, **files}
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    project = Project(str(tmp_path))
+    edges = lockorder.run(project, runtime_graph=runtime_graph)
+    blocking.run(project)
+    resources.run(project)
+    envknobs.run(project, readme=readme)
+    return project, edges
+
+
+def _live(project, rule=None):
+    return [f for f in project.findings if not f.suppressed and (rule is None or f.rule == rule)]
+
+
+# ---------------------------------------------------------------- lock-order
+
+
+def test_lock_order_cycle_detected(tmp_path):
+    project, _ = _analyze(tmp_path, {"cyc.py": """
+        import threading
+
+        class A:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+
+            def m1(self):
+                with self._a:
+                    with self._b:
+                        pass
+
+            def m2(self):
+                with self._b:
+                    with self._a:
+                        pass
+    """})
+    msgs = [f.message for f in _live(project, "lock-order")]
+    assert any("cycle" in m and "A._a" in m and "A._b" in m for m in msgs), msgs
+
+
+def test_lock_order_cycle_through_call_chain(tmp_path):
+    project, _ = _analyze(tmp_path, {"chain.py": """
+        import threading
+
+        class B:
+            def __init__(self):
+                self._x = threading.Lock()
+                self._y = threading.Lock()
+
+            def helper(self):
+                with self._x:
+                    pass
+
+            def m1(self):
+                with self._x:
+                    with self._y:
+                        pass
+
+            def m2(self):
+                with self._y:
+                    self.helper()
+    """})
+    msgs = [f.message for f in _live(project, "lock-order")]
+    assert any("cycle" in m for m in msgs), msgs
+    assert any("helper" in m for m in msgs), msgs  # witness names the chain
+
+
+def test_lock_order_self_deadlock_and_cross_instance(tmp_path):
+    project, _ = _analyze(tmp_path, {"selfd.py": """
+        import threading
+
+        class C:
+            def __init__(self):
+                self._m = threading.Lock()
+
+            def self_deadlock(self):
+                with self._m:
+                    with self._m:
+                        pass
+
+            def cross(self, other: "C"):
+                with self._m:
+                    with other._m:
+                        pass
+    """})
+    msgs = [f.message for f in _live(project, "lock-order")]
+    assert any("non-reentrant" in m for m in msgs), msgs
+    assert any("cross-instance" in m for m in msgs), msgs
+
+
+def test_lock_order_negative_consistent_order_and_rlock(tmp_path):
+    project, _ = _analyze(tmp_path, {"okorder.py": """
+        import threading
+
+        class D:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+                self._r = threading.RLock()
+
+            def m1(self):
+                with self._a:
+                    with self._b:
+                        pass
+
+            def m2(self):
+                with self._a:
+                    with self._b:
+                        pass
+
+            def reentrant(self):
+                with self._r:
+                    with self._r:
+                        pass
+    """})
+    assert _live(project, "lock-order") == []
+
+
+def test_lock_order_pragma_removes_edge(tmp_path):
+    project, _ = _analyze(tmp_path, {"cycp.py": """
+        import threading
+
+        class E:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+
+            def m1(self):
+                with self._a:
+                    with self._b:
+                        pass
+
+            def m2(self):
+                with self._b:
+                    with self._a:  # dacpcheck: ignore[lock-order] reason=fixture proves edge removal
+                        pass
+    """})
+    assert _live(project, "lock-order") == []
+
+
+def test_runtime_graph_union_creates_cycle(tmp_path):
+    rt = tmp_path / "observed.json"
+    rt.write_text(json.dumps({"edges": [["F._b", "F._a"]], "cross_instance": []}))
+    project, _ = _analyze(tmp_path, {"half.py": """
+        import threading
+
+        class F:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+
+            def m1(self):
+                with self._a:
+                    with self._b:
+                        pass
+    """}, runtime_graph=str(rt))
+    msgs = [f.message for f in _live(project, "lock-order")]
+    assert any("cycle" in m for m in msgs), msgs
+
+
+def test_runtime_cross_instance_reported(tmp_path):
+    rt = tmp_path / "observed.json"
+    rt.write_text(json.dumps({"edges": [], "cross_instance": [["G._m", "G._m"]]}))
+    project, _ = _analyze(tmp_path, {"g.py": "x = 1\n"}, runtime_graph=str(rt))
+    msgs = [f.message for f in _live(project, "lock-order")]
+    assert any("cross-instance" in m for m in msgs), msgs
+
+
+# ------------------------------------------------------------------ blocking
+
+
+def test_blocking_ops_under_lock(tmp_path):
+    project, _ = _analyze(tmp_path, {"blk.py": """
+        import queue
+        import threading
+        import time
+
+        class H:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._q = queue.Queue()
+
+            def sleepy(self):
+                with self._lock:
+                    time.sleep(0.5)
+
+            def sendy(self, ch):
+                with self._lock:
+                    ch.send(b"x")
+
+            def queuey(self):
+                with self._lock:
+                    return self._q.get()
+    """})
+    msgs = [f.message for f in _live(project, "blocking")]
+    assert any("time.sleep" in m for m in msgs), msgs
+    assert any("ch.send" in m for m in msgs), msgs
+    assert any("_q.get" in m for m in msgs), msgs
+
+
+def test_blocking_transitive_through_call(tmp_path):
+    project, _ = _analyze(tmp_path, {"trans.py": """
+        import threading
+        import time
+
+        class I:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def slow(self):
+                time.sleep(1.0)
+
+            def outer(self):
+                with self._lock:
+                    self.slow()
+    """})
+    msgs = [f.message for f in _live(project, "blocking")]
+    assert any("may block" in m and "slow" in m for m in msgs), msgs
+
+
+def test_blocking_send_lock_allowance_and_timeouts(tmp_path):
+    project, _ = _analyze(tmp_path, {"oksend.py": """
+        import queue
+        import threading
+
+        class J:
+            def __init__(self):
+                self._send_lock = threading.Lock()
+                self._lock = threading.Lock()
+                self._q = queue.Queue()
+
+            def framed_send(self, ch, payload):
+                with self._send_lock:
+                    ch.send(payload)
+
+            def timed_get(self):
+                with self._lock:
+                    return self._q.get(timeout=0.25)
+    """})
+    assert _live(project, "blocking") == []
+
+
+def test_condition_wait_predicate_loop(tmp_path):
+    project, _ = _analyze(tmp_path, {"cw.py": """
+        import threading
+
+        class K:
+            def __init__(self):
+                self.cond = threading.Condition()
+                self.ready = False
+
+            def bad_wait(self):
+                with self.cond:
+                    self.cond.wait(0.1)
+
+            def good_wait(self):
+                with self.cond:
+                    while not self.ready:
+                        self.cond.wait()
+    """})
+    msgs = [f.message for f in _live(project, "blocking")]
+    assert len([m for m in msgs if "predicate loop" in m]) == 1, msgs
+    assert project.findings and all(f.line != 0 for f in _live(project, "blocking"))
+
+
+# ------------------------------------------------------------------ resource
+
+
+def test_resource_leaks_flagged(tmp_path):
+    project, _ = _analyze(tmp_path, {"leak.py": """
+        from concurrent.futures import ThreadPoolExecutor
+
+        def leak_file(path):
+            f = open(path)
+            data = f.read()
+            print(data)
+
+        def leak_pool(work):
+            ex = ThreadPoolExecutor(2)
+            ex.submit(work)
+    """})
+    msgs = [f.message for f in _live(project, "resource")]
+    assert any("open" in m and "`f`" in m for m in msgs), msgs
+    assert any("ThreadPoolExecutor" in m for m in msgs), msgs
+
+
+def test_resource_negatives(tmp_path):
+    project, _ = _analyze(tmp_path, {"okres.py": """
+        from concurrent.futures import ThreadPoolExecutor
+
+        def with_stmt(path):
+            with open(path) as f:
+                return f.read()
+
+        def finally_close(path):
+            f = open(path)
+            try:
+                return f.read()
+            finally:
+                f.close()
+
+        def transfer(path):
+            f = open(path)
+            return f
+
+        class Holder:
+            def __init__(self, path):
+                self.f = open(path)
+
+            def close(self):
+                self.f.close()
+    """})
+    assert _live(project, "resource") == []
+
+
+def test_resource_thread_daemon_rule(tmp_path):
+    project, _ = _analyze(tmp_path, {"thr.py": """
+        import threading
+
+        def spawn(fn):
+            t = threading.Thread(target=fn)
+            t.start()
+            return t
+    """, "throk.py": """
+        import threading
+
+        def spawn(fn):
+            t = threading.Thread(target=fn, daemon=True)
+            t.start()
+            return t
+    """})
+    msgs = [(f.path, f.message) for f in _live(project, "resource")]
+    assert len(msgs) == 1 and "thr.py" in msgs[0][0] and "daemon" in msgs[0][1], msgs
+
+
+# ----------------------------------------------------------------------- env
+
+
+def test_env_raw_read_and_typo(tmp_path):
+    project, _ = _analyze(tmp_path, {"app.py": """
+        import os
+        from core.env import env_int
+
+        RAW = os.environ.get("DACP_RAW_READ", "1")
+        OK = env_int("DACP_REAL")
+        TYPO = env_int("DACP_TYPO")
+    """})
+    msgs = [f.message for f in _live(project, "env")]
+    assert any("raw environment read" in m and "DACP_RAW_READ" in m for m in msgs), msgs
+    assert any("DACP_TYPO" in m and "not a registered" in m for m in msgs), msgs
+    assert not any("DACP_REAL" in m for m in msgs), msgs
+
+
+def test_env_readme_cross_check(tmp_path):
+    readme = tmp_path / "README.md"
+    readme.write_text("| `DACP_REAL` | a registered knob |\n")
+    project, _ = _analyze(tmp_path, {"noop.py": "x = 1\n"}, readme=str(readme))
+    msgs = [f.message for f in _live(project, "env")]
+    assert any("DACP_UNDOCUMENTED" in m and "README" in m for m in msgs), msgs
+    assert not any("DACP_REAL" in m for m in msgs), msgs
+
+
+# -------------------------------------------------------------------- pragma
+
+
+def test_pragma_suppresses_with_reason_only(tmp_path):
+    project, _ = _analyze(tmp_path, {"prag.py": """
+        import threading
+        import time
+
+        class P:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def allowed(self):
+                with self._lock:
+                    time.sleep(0.1)  # dacpcheck: ignore[blocking] reason=fixture exercises suppression
+
+            def missing_reason(self):
+                with self._lock:
+                    time.sleep(0.1)  # dacpcheck: ignore[blocking]
+
+            def unknown_rule(self):
+                with self._lock:
+                    time.sleep(0.1)  # dacpcheck: ignore[nonsense] reason=whatever
+    """})
+    suppressed = [f for f in project.findings if f.suppressed]
+    assert len(suppressed) == 1 and suppressed[0].rule == "blocking"
+    pragma = _live(project, "pragma")
+    assert any("no reason" in f.message for f in pragma), pragma
+    assert any("unknown rule" in f.message for f in pragma), pragma
+    # the two badly-suppressed sleeps still count as live blocking findings
+    assert len(_live(project, "blocking")) == 2
+
+
+# ------------------------------------------------------- runtime lockcheck
+
+
+def _exec_repro_module(tmp_path, name, src):
+    p = tmp_path / "repro" / f"{name}.py"
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(src))
+    code = compile(p.read_text(), str(p), "exec")
+    ns = {}
+    exec(code, ns)
+    return ns
+
+
+def test_lockcheck_records_edges_and_names(tmp_path):
+    from repro.core import lockcheck
+
+    assert lockcheck.install(out_path=str(tmp_path / "obs.json"))
+    try:
+        _exec_repro_module(tmp_path, "fakemod", """
+            import threading
+
+            a = threading.Lock()
+            b = threading.Lock()
+            with a:
+                with b:
+                    pass
+        """)
+        obs = lockcheck.observed()
+        assert ["fakemod.a", "fakemod.b"] in obs["edges"]
+        assert ["fakemod.b", "fakemod.a"] not in obs["edges"]
+    finally:
+        lockcheck.uninstall()
+
+
+def test_lockcheck_class_attr_names_and_cross_instance(tmp_path):
+    from repro.core import lockcheck
+
+    lockcheck.install(out_path=str(tmp_path / "obs.json"))
+    try:
+        ns = _exec_repro_module(tmp_path, "fakecls", """
+            import threading
+
+            class Mgr:
+                def __init__(self):
+                    self._lock = threading.Lock()
+
+            def pair():
+                return Mgr(), Mgr()
+        """)
+        m1, m2 = ns["pair"]()
+        with m1._lock:
+            with m2._lock:
+                pass
+        obs = lockcheck.observed()
+        assert ["Mgr._lock", "Mgr._lock"] in obs["cross_instance"]
+    finally:
+        lockcheck.uninstall()
+
+
+def test_lockcheck_untracked_outside_repro_and_dump_union(tmp_path):
+    import threading
+
+    from repro.core import lockcheck
+
+    out = tmp_path / "obs.json"
+    out.write_text(json.dumps({"edges": [["Seed.x", "Seed.y"]], "cross_instance": []}))
+    lockcheck.install(out_path=str(out))
+    try:
+        lk = threading.Lock()  # created from a test frame: not tracked
+        assert not hasattr(lk, "dacp_name")
+        path = lockcheck.dump(str(out))
+        data = json.loads(open(path).read())
+        assert ["Seed.x", "Seed.y"] in data["edges"]  # union keeps prior runs
+    finally:
+        lockcheck.uninstall()
+
+
+def test_condition_wait_releases_hold(tmp_path):
+    from repro.core import lockcheck
+
+    lockcheck.install(out_path=str(tmp_path / "obs.json"))
+    try:
+        ns = _exec_repro_module(tmp_path, "fakecond", """
+            import threading
+
+            class W:
+                def __init__(self):
+                    self.cond = threading.Condition()
+                    self.other = threading.Lock()
+        """)
+        w = ns["W"]()
+        import threading as _t
+
+        def waker():
+            with w.cond:
+                w.cond.notify_all()
+
+        with w.cond:
+            t = _t.Thread(target=waker)
+            t.start()
+            w.cond.wait(timeout=5)
+            t.join()
+        with w.cond:
+            with w.other:
+                pass
+        obs = lockcheck.observed()
+        assert ["W.cond", "W.other"] in obs["edges"]
+    finally:
+        lockcheck.uninstall()

@@ -1,0 +1,16 @@
+"""dacpcheck — concurrency & invariant analyzer for the DACP faird server.
+
+Four passes over the target tree (see ``python -m tools.dacpcheck --help``):
+
+  lock-order   static lock-order graph + cycle detection, unioned with a
+               runtime-observed graph from ``DACP_LOCKCHECK=1``
+  blocking     blocking operations (network, queue, I/O, join, sleep)
+               while a lock is held; Condition.wait predicate loops
+  resource     acquire sites must be dominated by a release path
+  env          DACP_* reads must go through repro.core.env and be registered
+
+Suppress a finding on its line with ``# dacpcheck: ignore[rule] reason=...``
+— the reason is mandatory.
+"""
+
+from .core import Project, Finding  # noqa: F401

@@ -1,0 +1,54 @@
+"""CLI: ``python -m tools.dacpcheck src/repro [options]``.
+
+Exit status 0 iff there are no unsuppressed findings.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import blocking, envknobs, lockorder, resources
+from .core import Project
+
+RULE_ORDER = ("pragma", "lock-order", "blocking", "resource", "env")
+
+
+def main(argv: list | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="dacpcheck", description=__doc__)
+    ap.add_argument("root", help="directory (or single file) to analyze, e.g. src/repro")
+    ap.add_argument("--runtime-graph", metavar="JSON",
+                    help="observed lock-order graph from a DACP_LOCKCHECK=1 run; "
+                    "unioned with the static graph before cycle detection")
+    ap.add_argument("--readme", metavar="PATH",
+                    help="cross-check that every registered knob appears in this README")
+    ap.add_argument("--dump-graph", action="store_true",
+                    help="print the live lock-order edges after analysis")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also print findings silenced by pragmas")
+    args = ap.parse_args(argv)
+
+    project = Project(args.root)
+    edges = lockorder.run(project, runtime_graph=args.runtime_graph)
+    blocking.run(project)
+    resources.run(project)
+    envknobs.run(project, readme=args.readme)
+
+    live = [f for f in project.findings if not f.suppressed]
+    shown = project.findings if args.show_suppressed else live
+    for f in sorted(shown, key=lambda f: (RULE_ORDER.index(f.rule) if f.rule in RULE_ORDER else 99, f.path, f.line)):
+        print(f.render())
+
+    if args.dump_graph:
+        print(f"-- lock-order graph ({len(edges)} edges) --")
+        for e in sorted({(e.src, e.dst) for e in edges}):
+            print(f"  {e[0]} -> {e[1]}")
+
+    n_sup = sum(1 for f in project.findings if f.suppressed)
+    print(f"dacpcheck: {len(live)} finding(s), {n_sup} suppressed, "
+          f"{len(project.locks)} locks, {len(project.functions)} functions analyzed")
+    return 1 if live else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,195 @@
+"""Pass 2: blocking operations while a lock is held.
+
+Flags — directly or through any resolvable call chain — while a
+Lock/RLock/Condition is held:
+
+  * channel/socket sends and recvs (``.send``/``.recv``/``.sendall``/
+    ``.accept``/``.connect``, frame reader/writer calls),
+  * blocking ``queue.put``/``queue.get`` (no ``timeout=``, not
+    ``block=False``, not the ``_nowait`` forms) on queue-typed receivers,
+  * file I/O (builtin ``open``),
+  * ``.join()`` with no timeout,
+  * ``time.sleep``,
+  * untimed ``.acquire()`` on semaphores / unresolved receivers (a lock
+    receiver is the lock-order pass's job),
+  * untimed ``.wait()`` on events or unknown receivers.
+
+Exemption: a blocking *send* under a lock whose name ends in
+``send_lock`` is the frame-serialization idiom (a DACP frame is several
+writes; interleaving them mid-frame corrupts the stream) and is allowed.
+
+Independently of held locks, ``Condition.wait`` must sit inside a
+``while`` predicate loop (``wait_for`` has the predicate built in);
+a timed poll-style wait gets a pragma, not a loop.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+
+from .core import SEND_SERIALIZATION_RE, FunctionInfo, Project, _expr_text
+from .lockorder import _body_nodes, _walk_no_defs
+
+_NET_SEND = {"send", "sendall", "sendto", "write_frame", "send_sdf"}
+_NET_OTHER = {"recv", "recvfrom", "accept", "connect", "read_frame", "recv_sdf", "makefile"}
+
+
+@dataclass
+class BlockOp:
+    kind: str  # send | net | queue | io | join | sleep | acquire | wait
+    line: int
+    desc: str
+
+
+def _has_kw(call: ast.Call, name: str) -> bool:
+    return any(k.arg == name for k in call.keywords)
+
+
+def _nonblocking_flag(call: ast.Call) -> bool:
+    for k in call.keywords:
+        if k.arg in ("block", "blocking") and isinstance(k.value, ast.Constant) and k.value.value is False:
+            return True
+    return False
+
+
+def direct_ops(project: Project, fi: FunctionInfo) -> list:
+    """Blocking operations appearing directly in this function's body."""
+    ops: list = []
+    for node in _walk_no_defs(fi.node):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Name):
+            if f.id == "open":
+                ops.append(BlockOp("io", node.lineno, "open()"))
+            elif f.id in _NET_SEND:
+                ops.append(BlockOp("send", node.lineno, f"{f.id}()"))
+            elif f.id in _NET_OTHER:
+                ops.append(BlockOp("net", node.lineno, f"{f.id}()"))
+            continue
+        if not isinstance(f, ast.Attribute):
+            continue
+        recv_txt = _expr_text(f.value)
+        if f.attr in _NET_SEND:
+            ops.append(BlockOp("send", node.lineno, f"{recv_txt}.{f.attr}()"))
+        elif f.attr in _NET_OTHER:
+            ops.append(BlockOp("net", node.lineno, f"{recv_txt}.{f.attr}()"))
+        elif f.attr in ("put", "get"):
+            if project.resolve_aux_kind(fi, f.value) == "queue" and not _has_kw(node, "timeout") and not _nonblocking_flag(node):
+                ops.append(BlockOp("queue", node.lineno, f"blocking {recv_txt}.{f.attr}() (no timeout)"))
+        elif f.attr == "join" and not node.args and not _has_kw(node, "timeout"):
+            ops.append(BlockOp("join", node.lineno, f"{recv_txt}.join() with no timeout"))
+        elif f.attr == "sleep" and isinstance(f.value, ast.Name) and f.value.id == "time":
+            ops.append(BlockOp("sleep", node.lineno, "time.sleep()"))
+        elif f.attr == "acquire":
+            if project.resolve_lock(fi, f.value) is not None:
+                continue  # lock-order pass's territory
+            if not _has_kw(node, "timeout") and not _nonblocking_flag(node):
+                ops.append(BlockOp("acquire", node.lineno, f"untimed {recv_txt}.acquire()"))
+        elif f.attr == "wait":
+            li = project.resolve_lock(fi, f.value)
+            if li is not None and li.kind == "cond":
+                continue  # waiting a held condition is the idiom (predicate rule below)
+            if not node.args and not _has_kw(node, "timeout"):
+                ops.append(BlockOp("wait", node.lineno, f"untimed {recv_txt}.wait()"))
+    return ops
+
+
+def may_block(project: Project, direct: dict) -> dict:
+    """fkey -> (BlockOp, chain) for functions that may block transitively."""
+    may: dict = {}
+    for key, ops in direct.items():
+        if ops:
+            may[key] = (ops[0], "")
+    changed = True
+    while changed:
+        changed = False
+        for key, fi in project.functions.items():
+            if key in may:
+                continue
+            for cs in fi.calls:
+                g = project.resolve_call(fi, cs.node)
+                if g is None or g.key not in may:
+                    continue
+                op, chain = may[g.key]
+                callee = f"{g.key[0]}.{g.key[1]}"
+                may[key] = (op, f"via {callee}" + (f" {chain}" if chain else ""))
+                changed = True
+                break
+    return may
+
+
+def _send_allowed(lock_name: str, receiver: str) -> bool:
+    return bool(SEND_SERIALIZATION_RE.search(lock_name)) or bool(SEND_SERIALIZATION_RE.search(receiver))
+
+
+def run(project: Project) -> None:
+    direct = {key: direct_ops(project, fi) for key, fi in project.functions.items()}
+    may = may_block(project, direct)
+
+    for key, fi in project.functions.items():
+        ops_by_line: dict = {}
+        for op in direct[key]:
+            ops_by_line.setdefault(op.line, []).append(op)
+
+        for acq in fi.acquires:
+            held = acq.lock
+            reported: set = set()
+            for node in _body_nodes(acq.body):
+                if not isinstance(node, ast.Call):
+                    continue
+                for op in ops_by_line.get(node.lineno, ()):
+                    if op.kind == "send" and _send_allowed(held.name, acq.receiver):
+                        continue
+                    if op.kind == "wait" and node.lineno in reported:
+                        continue
+                    tag = (node.lineno, op.desc)
+                    if tag in reported:
+                        continue
+                    reported.add(tag)
+                    project.add_finding(
+                        "blocking", fi.module.path, node.lineno,
+                        f"{op.desc} while {acq.receiver} ({held.name}) is held")
+                if not ops_by_line.get(node.lineno):
+                    g = project.resolve_call(fi, node)
+                    if g is None or g.key == key or g.key not in may:
+                        continue
+                    op, chain = may[g.key]
+                    if op.kind == "send" and _send_allowed(held.name, acq.receiver):
+                        continue
+                    callee = f"{g.key[0]}.{g.key[1]}"
+                    tag = (node.lineno, callee)
+                    if tag in reported:
+                        continue
+                    reported.add(tag)
+                    via = f" ({chain})" if chain else ""
+                    project.add_finding(
+                        "blocking", fi.module.path, node.lineno,
+                        f"call {callee}() may block — {op.desc} at {g.module.path}:{op.line}{via} — "
+                        f"while {acq.receiver} ({held.name}) is held")
+
+        # Condition.wait predicate-loop rule (held or not)
+        _wait_predicate_rule(project, fi)
+
+
+def _wait_predicate_rule(project: Project, fi: FunctionInfo) -> None:
+    while_bodies: list = []
+    for node in _walk_no_defs(fi.node):
+        if isinstance(node, ast.While):
+            while_bodies.append(set(_body_nodes(node.body)))
+    for node in _walk_no_defs(fi.node):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if not (isinstance(f, ast.Attribute) and f.attr == "wait"):
+            continue
+        li = project.resolve_lock(fi, f.value)
+        if li is None or li.kind != "cond":
+            continue
+        if any(node in body for body in while_bodies):
+            continue
+        project.add_finding(
+            "blocking", fi.module.path, node.lineno,
+            f"{_expr_text(f.value)}.wait() is not inside a `while` predicate loop "
+            "(wakeups are spurious; use `while not pred: cond.wait()` or `wait_for`)")

@@ -1,0 +1,472 @@
+"""Shared model for the dacpcheck passes.
+
+The analyzer is deliberately *specific to this codebase*: it knows the
+repo's lock idioms (`self._lock = threading.Lock()` attributes, module-
+level locks, function-local send locks), resolves cross-module calls
+through the repo's own import style (`from repro.server.admission import
+AdmissionController`), and names lock nodes exactly the way the runtime
+recorder (`repro.core.lockcheck`) names them, so the static and observed
+graphs union cleanly:
+
+    ClassName.attr          self._lock = threading.Lock()  in a method
+    stem.var                LOCK = threading.Lock()        at module level
+    stem.func.var           lock = threading.Lock()        in a function
+
+Suppression pragma (reason required, same line as the finding):
+
+    # dacpcheck: ignore[rule] reason=why this is safe
+
+A pragma without a reason is itself a finding and cannot be suppressed.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+
+RULES = ("lock-order", "blocking", "resource", "env", "pragma")
+
+# Lock-kinded threading factories (graph nodes) and the non-lock threading
+# objects whose type we still track for the blocking pass.
+LOCK_KINDS = {"Lock": "lock", "RLock": "rlock", "Condition": "cond"}
+AUX_KINDS = {"Event": "event", "Semaphore": "sem", "BoundedSemaphore": "sem"}
+
+# Parameter-name type hints for this codebase: call sites that pass these
+# canonically-named objects without annotations.
+NAME_TYPES = {
+    "fl": "FlowRecord",
+    "flow": "FlowRecord",
+    "victim": "FlowRecord",
+}
+
+# Locks whose sole purpose is serializing frame writes on a shared channel:
+# a blocking `send` under one of these is the *point*, not a finding.
+SEND_SERIALIZATION_RE = re.compile(r"send_lock$")
+
+
+@dataclass
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+    suppressed: bool = False
+
+    def render(self) -> str:
+        flag = " (suppressed)" if self.suppressed else ""
+        return f"{self.path}:{self.line}: [{self.rule}]{flag} {self.message}"
+
+
+@dataclass
+class Pragma:
+    rules: tuple
+    reason: str
+    line: int
+
+
+_PRAGMA_RE = re.compile(r"#\s*dacpcheck:\s*ignore\[([a-zA-Z, -]*)\]\s*(.*)$")
+_REASON_RE = re.compile(r"reason\s*=\s*(\S.*)$")
+
+
+def parse_pragmas(text: str, path: str, findings: list) -> dict:
+    """line -> Pragma.  Pragmas missing a non-empty reason are reported as
+    `pragma` findings (which no pragma can suppress)."""
+    out: dict = {}
+    for i, line in enumerate(text.splitlines(), start=1):
+        m = _PRAGMA_RE.search(line)
+        if m is None:
+            if "dacpcheck:" in line and "#" in line and "ignore" in line:
+                findings.append(Finding("pragma", path, i, "malformed dacpcheck pragma (expected `# dacpcheck: ignore[rule] reason=...`)"))
+            continue
+        rules = tuple(r.strip() for r in m.group(1).split(",") if r.strip())
+        bad = [r for r in rules if r not in RULES]
+        if not rules or bad:
+            findings.append(Finding("pragma", path, i, f"pragma names unknown rule(s) {bad or '<none>'}; known: {', '.join(RULES)}"))
+            continue
+        rm = _REASON_RE.search(m.group(2))
+        if rm is None or not rm.group(1).strip():
+            findings.append(Finding("pragma", path, i, f"pragma suppressing [{', '.join(rules)}] has no reason= — a reason is required"))
+            continue
+        out[i] = Pragma(rules, rm.group(1).strip(), i)
+    return out
+
+
+@dataclass
+class LockInfo:
+    name: str  # canonical node name (matches the runtime recorder)
+    kind: str  # lock | rlock | cond
+    path: str
+    line: int
+
+
+@dataclass
+class Acquire:
+    lock: LockInfo
+    line: int
+    receiver: str  # source text of the acquired expression ("self._lock", "fl.cond")
+    body: list  # statements executed while held
+
+
+@dataclass
+class CallSite:
+    node: ast.Call
+    line: int
+
+
+@dataclass
+class FunctionInfo:
+    key: tuple  # (module_stem, qualname)
+    clazz: str | None
+    node: ast.FunctionDef
+    module: "ModuleInfo"
+    acquires: list = field(default_factory=list)  # every with-acquire, any depth
+    calls: list = field(default_factory=list)
+    types: dict = field(default_factory=dict)  # local/param name -> class name
+    aux_types: dict = field(default_factory=dict)  # local name -> event|sem|queue
+
+
+@dataclass
+class ClassInfo:
+    name: str
+    module: "ModuleInfo"
+    locks: dict = field(default_factory=dict)  # attr -> LockInfo
+    attr_types: dict = field(default_factory=dict)  # attr -> class name
+    aux_attrs: dict = field(default_factory=dict)  # attr -> event|sem|queue
+
+
+@dataclass
+class ModuleInfo:
+    path: str
+    stem: str
+    tree: ast.Module
+    text: str
+    pragmas: dict
+    imports: dict = field(default_factory=dict)  # local name -> dotted origin
+    classes: dict = field(default_factory=dict)
+    functions: dict = field(default_factory=dict)  # qual -> FunctionInfo
+    module_locks: dict = field(default_factory=dict)  # var -> LockInfo
+
+
+def _expr_text(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:
+        return "<expr>"
+
+
+def _threading_factory(call: ast.AST) -> str | None:
+    """`threading.Lock()` / `Lock()` (imported) -> kind, else None."""
+    if not isinstance(call, ast.Call):
+        return None
+    f = call.func
+    name = None
+    if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) and f.value.id == "threading":
+        name = f.attr
+    elif isinstance(f, ast.Name):
+        name = f.id
+    if name in LOCK_KINDS:
+        return LOCK_KINDS[name]
+    if name in AUX_KINDS:
+        return AUX_KINDS[name]
+    return None
+
+
+def _queue_ctor(call: ast.AST) -> bool:
+    if not isinstance(call, ast.Call):
+        return False
+    f = call.func
+    if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) and f.value.id == "queue":
+        return f.attr in ("Queue", "LifoQueue", "PriorityQueue", "SimpleQueue")
+    return isinstance(f, ast.Name) and f.id in ("Queue", "LifoQueue", "PriorityQueue", "SimpleQueue")
+
+
+def _ctor_class_name(value: ast.AST) -> str | None:
+    """First plausible constructor call in `value` (handles the
+    `x if x is not None else Ctor()` idiom): returns the called name."""
+    for node in ast.walk(value):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Name) and f.id[:1].isupper():
+                return f.id
+            if isinstance(f, ast.Attribute) and f.attr[:1].isupper():
+                return f.attr
+    return None
+
+
+class Project:
+    """Whole-target model: every module parsed, every class's locks and
+    attribute types discovered, every function's acquires/calls recorded,
+    with cross-module call resolution."""
+
+    def __init__(self, root: str):
+        self.root = root
+        self.modules: list[ModuleInfo] = []
+        self.findings: list[Finding] = []
+        self.classes: dict[str, ClassInfo] = {}  # class name -> info (names unique in-repo)
+        self.functions: dict[tuple, FunctionInfo] = {}
+        self.locks: dict[str, LockInfo] = {}
+        self._load()
+        self._discover()
+        self._typecheck_functions()
+
+    # -- loading -----------------------------------------------------------
+    def _load(self) -> None:
+        paths = []
+        if os.path.isfile(self.root):
+            paths = [self.root]
+        else:
+            for dirpath, _dirnames, filenames in os.walk(self.root):
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        paths.append(os.path.join(dirpath, fn))
+        for path in sorted(paths):
+            with open(path, encoding="utf-8") as f:
+                text = f.read()
+            try:
+                tree = ast.parse(text, filename=path)
+            except SyntaxError as e:
+                self.findings.append(Finding("env", path, e.lineno or 1, f"unparseable module: {e.msg}"))
+                continue
+            rel = os.path.relpath(path)
+            mod = ModuleInfo(rel, os.path.splitext(os.path.basename(path))[0], tree, text, {})
+            mod.pragmas = parse_pragmas(text, rel, self.findings)
+            for node in ast.walk(tree):
+                if isinstance(node, ast.ImportFrom) and node.module:
+                    for alias in node.names:
+                        mod.imports[alias.asname or alias.name] = f"{node.module}.{alias.name}"
+                elif isinstance(node, ast.Import):
+                    for alias in node.names:
+                        mod.imports[alias.asname or alias.name.split(".")[0]] = alias.name
+            self.modules.append(mod)
+
+    # -- discovery ---------------------------------------------------------
+    def _discover(self) -> None:
+        for mod in self.modules:
+            for node in mod.tree.body:
+                if isinstance(node, ast.ClassDef):
+                    self._discover_class(mod, node)
+                elif isinstance(node, ast.Assign):
+                    self._module_assign(mod, node)
+                elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    self._register_function(mod, node, None, node.name)
+
+    def _module_assign(self, mod: ModuleInfo, node: ast.Assign) -> None:
+        kind = _threading_factory(node.value)
+        if kind in ("lock", "rlock", "cond"):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    li = LockInfo(f"{mod.stem}.{t.id}", kind, mod.path, node.lineno)
+                    mod.module_locks[t.id] = li
+                    self.locks[li.name] = li
+
+    def _discover_class(self, mod: ModuleInfo, cnode: ast.ClassDef) -> None:
+        ci = ClassInfo(cnode.name, mod)
+        self.classes.setdefault(cnode.name, ci)
+        mod.classes[cnode.name] = ci
+        for item in cnode.body:
+            if not isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            self._register_function(mod, item, cnode.name, f"{cnode.name}.{item.name}")
+            for sub in ast.walk(item):
+                if not isinstance(sub, ast.Assign):
+                    continue
+                for t in sub.targets:
+                    if not (isinstance(t, ast.Attribute) and isinstance(t.value, ast.Name) and t.value.id == "self"):
+                        continue
+                    kind = _threading_factory(sub.value)
+                    if kind in ("lock", "rlock", "cond"):
+                        li = LockInfo(f"{cnode.name}.{t.attr}", kind, mod.path, sub.lineno)
+                        ci.locks[t.attr] = li
+                        self.locks[li.name] = li
+                    elif kind in ("event", "sem"):
+                        ci.aux_attrs[t.attr] = kind
+                    elif _queue_ctor(sub.value):
+                        ci.aux_attrs[t.attr] = "queue"
+                    else:
+                        ctor = _ctor_class_name(sub.value)
+                        if ctor is not None:
+                            ci.attr_types.setdefault(t.attr, ctor)
+
+    def _register_function(self, mod: ModuleInfo, fnode, clazz: str | None, qual: str) -> None:
+        fi = FunctionInfo((mod.stem, qual), clazz, fnode, mod)
+        mod.functions[qual] = fi
+        self.functions[fi.key] = fi
+        # nested defs become their own entries (resolvable by bare name
+        # within the parent's module scope)
+        for item in fnode.body:
+            for sub in ast.walk(item):
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) and sub is not fnode:
+                    nested_qual = f"{qual}.{sub.name}"
+                    if nested_qual not in mod.functions:
+                        self._register_function(mod, sub, clazz, nested_qual)
+
+    # -- per-function typing + acquires/calls ------------------------------
+    def _typecheck_functions(self) -> None:
+        for fi in list(self.functions.values()):
+            self._build_types(fi)
+            self._collect_body(fi)
+
+    def _build_types(self, fi: FunctionInfo) -> None:
+        args = fi.node.args
+        for a in list(args.args) + list(args.kwonlyargs) + list(args.posonlyargs or []):
+            t = self._annotation_class(a.annotation)
+            if t is not None:
+                fi.types[a.arg] = t
+            elif a.arg in NAME_TYPES and NAME_TYPES[a.arg] in self.classes:
+                fi.types[a.arg] = NAME_TYPES[a.arg]
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 and isinstance(node.targets[0], ast.Name):
+                name = node.targets[0].id
+                kind = _threading_factory(node.value)
+                if kind in ("lock", "rlock", "cond"):
+                    li = LockInfo(f"{fi.module.stem}.{fi.node.name}.{name}", kind, fi.module.path, node.lineno)
+                    fi.types[name] = li  # a LockInfo value marks a local lock
+                    self.locks[li.name] = li
+                elif kind in ("event", "sem"):
+                    fi.aux_types[name] = kind
+                elif _queue_ctor(node.value):
+                    fi.aux_types[name] = "queue"
+                else:
+                    t = self._value_class(fi, node.value)
+                    if t is not None:
+                        fi.types.setdefault(name, t)
+            elif isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+                t = self._annotation_class(node.annotation)
+                if t is not None:
+                    fi.types[node.target.id] = t
+                elif _queue_ctor_annotation(node.annotation):
+                    fi.aux_types[node.target.id] = "queue"
+
+    def _annotation_class(self, ann) -> str | None:
+        if ann is None:
+            return None
+        for node in ast.walk(ann):
+            if isinstance(node, ast.Name) and node.id in self.classes:
+                return node.id
+            if isinstance(node, ast.Constant) and isinstance(node.value, str):
+                # string annotation: "FlowRecord" / "FlowRecord | None"
+                for cname in self.classes:
+                    if re.search(rf"\b{re.escape(cname)}\b", node.value):
+                        return cname
+        return None
+
+    def _value_class(self, fi: FunctionInfo, value: ast.AST) -> str | None:
+        # x = Ctor(...) — or x = self.attr with a known attr type
+        ctor = _ctor_class_name(value)
+        if ctor in self.classes:
+            return ctor
+        if isinstance(value, ast.Attribute) and isinstance(value.value, ast.Name) and value.value.id == "self" and fi.clazz:
+            ci = self.classes.get(fi.clazz)
+            if ci is not None:
+                return ci.attr_types.get(value.attr)
+        return None
+
+    def _collect_body(self, fi: FunctionInfo) -> None:
+        """Record every with-acquire and call site in this function's own
+        body (nested defs/lambdas are analyzed as their own functions)."""
+
+        def visit(node):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                    continue
+                if isinstance(child, ast.With):
+                    for item in child.items:
+                        li = self.resolve_lock(fi, item.context_expr)
+                        if li is not None:
+                            fi.acquires.append(
+                                Acquire(li, child.lineno, _expr_text(item.context_expr), child.body)
+                            )
+                if isinstance(child, ast.Call):
+                    fi.calls.append(CallSite(child, child.lineno))
+                visit(child)
+
+        visit(fi.node)
+
+    # -- resolution --------------------------------------------------------
+    def resolve_lock(self, fi: FunctionInfo, expr: ast.AST) -> LockInfo | None:
+        """`self._lock` / `fl.cond` / `send_lock` -> LockInfo (or None)."""
+        if isinstance(expr, ast.Name):
+            t = fi.types.get(expr.id)
+            if isinstance(t, LockInfo):
+                return t
+            return fi.module.module_locks.get(expr.id)
+        if isinstance(expr, ast.Attribute):
+            base_cls = self.resolve_type(fi, expr.value)
+            if base_cls is not None:
+                ci = self.classes.get(base_cls)
+                if ci is not None:
+                    return ci.locks.get(expr.attr)
+        return None
+
+    def resolve_type(self, fi: FunctionInfo, expr: ast.AST) -> str | None:
+        """Class name of an expression, or None."""
+        if isinstance(expr, ast.Name):
+            if expr.id == "self":
+                return fi.clazz
+            t = fi.types.get(expr.id)
+            return t if isinstance(t, str) else None
+        if isinstance(expr, ast.Attribute):
+            base = self.resolve_type(fi, expr.value)
+            if base is not None:
+                ci = self.classes.get(base)
+                if ci is not None:
+                    return ci.attr_types.get(expr.attr)
+        return None
+
+    def resolve_aux_kind(self, fi: FunctionInfo, expr: ast.AST) -> str | None:
+        """event | sem | queue for a receiver expression, else None."""
+        if isinstance(expr, ast.Name):
+            return fi.aux_types.get(expr.id)
+        if isinstance(expr, ast.Attribute):
+            base = self.resolve_type(fi, expr.value)
+            if base is not None:
+                ci = self.classes.get(base)
+                if ci is not None:
+                    return ci.aux_attrs.get(expr.attr)
+        return None
+
+    def resolve_call(self, fi: FunctionInfo, call: ast.Call) -> FunctionInfo | None:
+        f = call.func
+        if isinstance(f, ast.Name):
+            # same-module function, nested function of this one, or import
+            target = fi.module.functions.get(f.id) or fi.module.functions.get(f"{fi.key[1]}.{f.id}")
+            if target is not None:
+                return target
+            origin = fi.module.imports.get(f.id)
+            if origin and origin.startswith("repro."):
+                stem = origin.split(".")[-2] if origin.count(".") >= 2 else None
+                fname = origin.split(".")[-1]
+                if stem is not None:
+                    return self.functions.get((stem, fname))
+            return None
+        if isinstance(f, ast.Attribute):
+            base_cls = self.resolve_type(fi, f.value)
+            if base_cls is not None:
+                ci = self.classes.get(base_cls)
+                if ci is not None:
+                    return ci.module.functions.get(f"{base_cls}.{f.attr}")
+        return None
+
+    # -- suppression -------------------------------------------------------
+    def suppressed(self, mod_path: str, line: int, rule: str) -> bool:
+        for mod in self.modules:
+            if mod.path == mod_path:
+                p = mod.pragmas.get(line)
+                return p is not None and rule in p.rules
+        return False
+
+    def add_finding(self, rule: str, path: str, line: int, message: str) -> None:
+        f = Finding(rule, path, line, message)
+        f.suppressed = self.suppressed(path, line, rule)
+        self.findings.append(f)
+
+
+def _queue_ctor_annotation(ann) -> bool:
+    for node in ast.walk(ann) if ann is not None else []:
+        if isinstance(node, ast.Attribute) and node.attr == "Queue":
+            return True
+        if isinstance(node, ast.Name) and node.id == "Queue":
+            return True
+    return False

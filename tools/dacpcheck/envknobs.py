@@ -1,0 +1,122 @@
+"""Pass 4: the DACP_* env-knob registry.
+
+Three invariants:
+
+  * every ``DACP_*`` environment read goes through ``repro.core.env``
+    (no raw ``os.environ`` / ``os.getenv`` outside ``core/env.py``),
+  * every ``DACP_*`` string literal passed to an env accessor
+    (``env_int("DACP_X")``, ``knob_default``, ``getenv``, ...) names a
+    registered knob — catches typos like ``DACP_PLANCACHE_BYTES``
+    (bare ``DACP_*`` strings elsewhere, e.g. wire error codes, are not
+    env reads and are left alone),
+  * with ``--readme``, every registered knob appears in the README env
+    table and the table has no stale rows.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .core import Project, _expr_text
+from .lockorder import _walk_no_defs
+
+ENV_MODULE_SUFFIX = "core/env.py"
+
+
+def registered_knobs(project: Project) -> set:
+    """Knob names parsed from core/env.py's `_register("NAME", ...)` calls."""
+    knobs: set = set()
+    for mod in project.modules:
+        if not mod.path.replace("\\", "/").endswith(ENV_MODULE_SUFFIX):
+            continue
+        for node in ast.walk(mod.tree):
+            if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                    and node.func.id == "_register" and node.args
+                    and isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[0].value, str)):
+                knobs.add(node.args[0].value)
+    return knobs
+
+
+def _is_raw_env_read(node: ast.AST) -> ast.AST | None:
+    """Returns the key expression of a raw environ access, else None."""
+    if isinstance(node, ast.Call):
+        f = node.func
+        # os.getenv("X") / getenv("X")
+        if ((isinstance(f, ast.Attribute) and f.attr == "getenv")
+                or (isinstance(f, ast.Name) and f.id == "getenv")):
+            return node.args[0] if node.args else node
+        # os.environ.get("X")
+        if (isinstance(f, ast.Attribute) and f.attr in ("get", "pop", "setdefault")
+                and isinstance(f.value, ast.Attribute) and f.value.attr == "environ"):
+            return node.args[0] if node.args else node
+    # os.environ["X"]
+    if (isinstance(node, ast.Subscript) and isinstance(node.value, ast.Attribute)
+            and node.value.attr == "environ"):
+        return node.slice
+    return None
+
+
+def _accessor_knob_literals(node: ast.AST):
+    """Yield (knob_name, line) for DACP_* string literals in env-read
+    positions: first argument of env_* / knob_default / getenv / environ.get
+    calls, or an os.environ[...] subscript key."""
+    if isinstance(node, ast.Call):
+        f = node.func
+        fname = f.attr if isinstance(f, ast.Attribute) else (f.id if isinstance(f, ast.Name) else "")
+        if fname.startswith("env_") or fname in ("knob_default", "getenv") or (
+                fname in ("get", "pop", "setdefault") and isinstance(f, ast.Attribute)
+                and isinstance(f.value, ast.Attribute) and f.value.attr == "environ"):
+            if node.args and isinstance(node.args[0], ast.Constant) and isinstance(node.args[0].value, str):
+                v = node.args[0].value
+                if v.startswith("DACP_"):
+                    yield v, node.lineno
+    elif (isinstance(node, ast.Subscript) and isinstance(node.value, ast.Attribute)
+          and node.value.attr == "environ" and isinstance(node.slice, ast.Constant)
+          and isinstance(node.slice.value, str) and node.slice.value.startswith("DACP_")):
+        yield node.slice.value, node.lineno
+
+
+def run(project: Project, readme: str | None = None) -> None:
+    knobs = registered_knobs(project)
+    if not knobs:
+        project.add_finding("env", "src/repro/core/env.py", 0,
+                            "could not parse any _register(...) calls — registry missing from the tree")
+        return
+
+    for mod in project.modules:
+        is_env_mod = mod.path.replace("\\", "/").endswith(ENV_MODULE_SUFFIX)
+        for node in ast.walk(mod.tree):
+            if not is_env_mod:
+                key = _is_raw_env_read(node)
+                if key is not None:
+                    key_txt = _expr_text(key)
+                    if "DACP_" in key_txt:
+                        project.add_finding(
+                            "env", mod.path, node.lineno,
+                            f"raw environment read of {key_txt} — route it through repro.core.env "
+                            "(validated warn-and-fallback parsing)")
+            for name, line in _accessor_knob_literals(node):
+                if name not in knobs:
+                    project.add_finding(
+                        "env", mod.path, line,
+                        f"'{name}' is not a registered DACP env knob "
+                        "(register it in repro.core.env or fix the name)")
+
+    if readme is not None:
+        _check_readme(project, knobs, readme)
+
+
+def _check_readme(project: Project, knobs: set, readme: str) -> None:
+    try:
+        with open(readme, encoding="utf-8") as f:
+            text = f.read()
+    except OSError as exc:
+        project.add_finding("env", readme, 0, f"cannot read README for env-table check: {exc}")
+        return
+    for name in sorted(knobs):
+        if f"`{name}`" not in text and name not in text:
+            project.add_finding(
+                "env", readme, 0,
+                f"registered knob {name} is missing from the README env table "
+                "(regenerate with `python -m repro.core.env`)")

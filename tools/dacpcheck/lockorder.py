@@ -1,0 +1,239 @@
+"""Pass 1: the lock-order graph.
+
+Builds a directed graph over lock nodes — an edge A -> B means "B is (or
+may be, through a call chain) acquired while A is held" — then fails on
+cycles.  Call edges are interprocedural: a `with self._lock:` block that
+calls `self._reap_locked()` inherits every lock that function may
+transitively acquire (FlowManager -> AdmissionController -> PlanCache is
+three modules, one edge set).
+
+An observed-at-runtime graph (``DACP_LOCKCHECK=1`` +
+``--runtime-graph``) unions into the static one before cycle detection,
+so the static pass can stay conservative without being the only line of
+defense.
+
+A `# dacpcheck: ignore[lock-order] reason=...` pragma on the inner
+acquisition site removes that edge from the graph.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+from dataclasses import dataclass
+
+from .core import Acquire, FunctionInfo, Project, _expr_text
+
+
+@dataclass
+class Edge:
+    src: str
+    dst: str
+    path: str
+    line: int
+    detail: str
+
+
+def _walk_no_defs(node):
+    yield node
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue
+        yield from _walk_no_defs(child)
+
+
+def _body_nodes(body):
+    for st in body:
+        yield from _walk_no_defs(st)
+
+
+def may_acquire(project: Project) -> dict:
+    """fkey -> {lock name: (path, line, via-chain)} over all call chains."""
+    may: dict = {}
+    for key, fi in project.functions.items():
+        may[key] = {}
+        for acq in fi.acquires:
+            may[key].setdefault(acq.lock.name, (fi.module.path, acq.line, ""))
+    changed = True
+    while changed:
+        changed = False
+        for key, fi in project.functions.items():
+            for cs in fi.calls:
+                g = project.resolve_call(fi, cs.node)
+                if g is None or g.key not in may:
+                    continue
+                for lname, (p, ln, via) in may[g.key].items():
+                    if lname not in may[key]:
+                        chain = f"via {g.key[0]}.{g.key[1]}"
+                        if via:
+                            chain = f"{chain} {via}"
+                        may[key][lname] = (p, ln, chain)
+                        changed = True
+    return may
+
+
+def _acquire_edges(project: Project, fi: FunctionInfo, acq: Acquire, may: dict, edges: list) -> None:
+    held = acq.lock
+    for node in _body_nodes(acq.body):
+        if isinstance(node, ast.With):
+            for item in node.items:
+                inner = project.resolve_lock(fi, item.context_expr)
+                if inner is None:
+                    continue
+                edges.append(
+                    Edge(held.name, inner.name, fi.module.path, node.lineno,
+                         f"{_expr_text(item.context_expr)} acquired while {acq.receiver} held "
+                         f"({fi.key[0]}.{fi.key[1]})")
+                )
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr == "acquire":
+                inner = project.resolve_lock(fi, f.value)
+                if inner is not None:
+                    edges.append(
+                        Edge(held.name, inner.name, fi.module.path, node.lineno,
+                             f"{_expr_text(f.value)}.acquire() while {acq.receiver} held")
+                    )
+                    continue
+            g = project.resolve_call(fi, node)
+            if g is None:
+                continue
+            for lname, (p, ln, via) in may.get(g.key, {}).items():
+                callee = f"{g.key[0]}.{g.key[1]}"
+                chain = f"call {callee}() may acquire {lname} ({p}:{ln}"
+                chain += f", {via})" if via else ")"
+                edges.append(Edge(held.name, lname, fi.module.path, node.lineno,
+                                  f"{chain} while {acq.receiver} held"))
+
+
+def build_edges(project: Project, may: dict) -> list:
+    edges: list = []
+    for fi in project.functions.values():
+        for acq in fi.acquires:
+            _acquire_edges(project, fi, acq, may, edges)
+    return edges
+
+
+def load_runtime_edges(path: str) -> tuple:
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    edges = [Edge(a, b, path, 0, "observed at runtime (DACP_LOCKCHECK)") for a, b in data.get("edges", [])]
+    cross = [tuple(p) for p in data.get("cross_instance", [])]
+    return edges, cross
+
+
+def _sccs(nodes, adj):
+    """Tarjan strongly-connected components (iterative)."""
+    index: dict = {}
+    low: dict = {}
+    on_stack: set = set()
+    stack: list = []
+    out: list = []
+    counter = [0]
+
+    for root in nodes:
+        if root in index:
+            continue
+        work = [(root, iter(adj.get(root, ())))]
+        index[root] = low[root] = counter[0]
+        counter[0] += 1
+        stack.append(root)
+        on_stack.add(root)
+        while work:
+            v, it = work[-1]
+            advanced = False
+            for w in it:
+                if w not in index:
+                    index[w] = low[w] = counter[0]
+                    counter[0] += 1
+                    stack.append(w)
+                    on_stack.add(w)
+                    work.append((w, iter(adj.get(w, ()))))
+                    advanced = True
+                    break
+                if w in on_stack:
+                    low[v] = min(low[v], index[w])
+            if advanced:
+                continue
+            work.pop()
+            if work:
+                pv = work[-1][0]
+                low[pv] = min(low[pv], low[v])
+            if low[v] == index[v]:
+                comp = []
+                while True:
+                    w = stack.pop()
+                    on_stack.discard(w)
+                    comp.append(w)
+                    if w == v:
+                        break
+                out.append(comp)
+    return out
+
+
+def run(project: Project, runtime_graph: str | None = None) -> list:
+    """Report self-deadlocks and lock-order cycles; returns the live edge
+    list (for --dump-graph)."""
+    may = may_acquire(project)
+    edges = build_edges(project, may)
+
+    live: list = []
+    for e in edges:
+        if project.suppressed(e.path, e.line, "lock-order"):
+            continue
+        if e.src == e.dst:
+            kind = project.locks[e.src].kind if e.src in project.locks else "lock"
+            if kind == "rlock":
+                continue  # reentrant by design; cross-instance left to runtime
+            # same receiver text => reentrant use of one instance
+            if _same_receiver(e):
+                if kind in ("cond",):
+                    continue
+                project.add_finding(
+                    "lock-order", e.path, e.line,
+                    f"non-reentrant {e.src} re-acquired while already held ({e.detail})")
+                continue
+            project.add_finding(
+                "lock-order", e.path, e.line,
+                f"{e.src} acquired while another {e.src} instance is held — "
+                f"cross-instance ordering hazard ({e.detail})")
+            continue
+        live.append(e)
+
+    if runtime_graph is not None:
+        rt_edges, cross = load_runtime_edges(runtime_graph)
+        live.extend(e for e in rt_edges if e.src != e.dst)
+        for a, b in cross:
+            project.add_finding(
+                "lock-order", runtime_graph, 0,
+                f"runtime: {b} acquired while another {a} instance held (cross-instance self-edge)")
+
+    adj: dict = {}
+    for e in live:
+        adj.setdefault(e.src, set()).add(e.dst)
+    nodes = set(adj)
+    for tgts in adj.values():
+        nodes |= tgts
+    for comp in _sccs(sorted(nodes), {k: sorted(v) for k, v in adj.items()}):
+        if len(comp) < 2:
+            continue
+        comp_set = set(comp)
+        witnesses = [e for e in live if e.src in comp_set and e.dst in comp_set]
+        site = next((e for e in witnesses if e.line), witnesses[0])
+        detail = "; ".join(f"{e.src} -> {e.dst} ({e.detail})" for e in witnesses[:6])
+        project.add_finding(
+            "lock-order", site.path, site.line,
+            f"lock-order cycle over {{{', '.join(sorted(comp_set))}}}: {detail}")
+    return live
+
+
+def _same_receiver(e: Edge) -> bool:
+    """True when a self-edge's inner acquisition is on the same receiver
+    expression as the outer hold (reentrant single-instance use)."""
+    first = e.detail.split(" acquired while ", 1)
+    if len(first) == 2:
+        inner = first[0].strip()
+        outer = first[1].split(" held", 1)[0].strip()
+        return inner == outer
+    # call-chain self-edge on `self.X` style receivers: assume same instance
+    return " while self." in e.detail

@@ -1,0 +1,187 @@
+"""Pass 3: resource acquire/release pairing.
+
+Every site that creates a closeable resource must be dominated by a
+release path: a ``with`` statement, a ``try/finally`` whose finally
+calls the release method, or an *escape* — the resource is returned,
+yielded, stored on ``self``/a container, or handed to another call
+(ownership transferred; the receiver's pairing is checked at *its*
+site).
+
+Also: ``threading.Thread(...)`` without ``daemon=True`` must be joined
+somewhere in the same module (a non-daemon thread with no join keeps
+the process alive on shutdown).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .core import FunctionInfo, Project, _expr_text
+from .lockorder import _walk_no_defs
+
+# constructor name -> release method
+RESOURCE_CTORS = {
+    "open": "close",
+    "SpillFile": "close",
+    "SpillSet": "close",
+    "ThreadPoolExecutor": "shutdown",
+    "NamedTemporaryFile": "close",
+    "TemporaryFile": "close",
+    "socket": "close",
+}
+
+
+def _ctor_name(call: ast.Call) -> str | None:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id if f.id in RESOURCE_CTORS else None
+    if isinstance(f, ast.Attribute):
+        return f.attr if f.attr in RESOURCE_CTORS else None
+    return None
+
+
+def _with_item_calls(fi: FunctionInfo) -> set:
+    out: set = set()
+    for node in _walk_no_defs(fi.node):
+        if isinstance(node, ast.With):
+            for item in node.items:
+                for sub in ast.walk(item.context_expr):
+                    if isinstance(sub, ast.Call):
+                        out.add(id(sub))
+    return out
+
+
+def _assigned_name(stmt: ast.stmt, call: ast.Call) -> str | None:
+    """`x = ctor()` / `x: T = ctor()` -> "x" when the call is the value."""
+    if isinstance(stmt, ast.Assign) and stmt.value is call and len(stmt.targets) == 1:
+        t = stmt.targets[0]
+        if isinstance(t, ast.Name):
+            return t.id
+        if isinstance(t, ast.Attribute):
+            return _expr_text(t)  # self.f — ownership escapes to the instance
+    if isinstance(stmt, ast.AnnAssign) and stmt.value is call and isinstance(stmt.target, ast.Name):
+        return stmt.target.id
+    return None
+
+
+def _stmt_of(fi: FunctionInfo, call: ast.Call) -> ast.stmt | None:
+    for node in _walk_no_defs(fi.node):
+        if isinstance(node, ast.stmt):
+            for sub in ast.iter_child_nodes(node):
+                if sub is call:
+                    return node
+    return None
+
+
+def _name_escapes(fi: FunctionInfo, name: str) -> bool:
+    """The bound resource leaves this function: returned, yielded, stored
+    on an attribute/subscript, appended to a container, or passed as an
+    argument to another call."""
+    for node in _walk_no_defs(fi.node):
+        if isinstance(node, (ast.Return, ast.Yield, ast.YieldFrom)) and node.value is not None:
+            for sub in ast.walk(node.value):
+                if isinstance(sub, ast.Name) and sub.id == name:
+                    return True
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, (ast.Attribute, ast.Subscript)):
+                    for sub in ast.walk(node.value):
+                        if isinstance(sub, ast.Name) and sub.id == name:
+                            return True
+        elif isinstance(node, ast.Call):
+            f = node.func
+            # x.close()/x.shutdown() is a release, not an escape; any other
+            # call that receives `name` as an argument takes ownership.
+            for arg in list(node.args) + [k.value for k in node.keywords]:
+                for sub in ast.walk(arg):
+                    if isinstance(sub, ast.Name) and sub.id == name:
+                        return True
+            if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) and f.value.id == name:
+                if f.attr not in ("close", "shutdown", "release", "read", "write", "flush", "seek", "readline", "readinto"):
+                    # method call on the resource: fine either way
+                    pass
+    return False
+
+
+def _released_in_finally(fi: FunctionInfo, call: ast.Call, name: str | None, release: str) -> bool:
+    """Some `try` in this function has a finally that calls
+    `<name>.<release>()` — covering both `f = open(); try: ... finally:
+    f.close()` and the call-inside-try shape.  Nameless resources require
+    the creating call to be inside the try body."""
+    for node in _walk_no_defs(fi.node):
+        if not isinstance(node, ast.Try) or not node.finalbody:
+            continue
+        if name is None:
+            in_try = any(call in list(ast.walk(st)) for st in node.body)
+            if not in_try:
+                continue
+        for st in node.finalbody:
+            for sub in ast.walk(st):
+                if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Attribute) and sub.func.attr == release:
+                    if name is None:
+                        return True
+                    v = sub.func.value
+                    if isinstance(v, ast.Name) and v.id == name:
+                        return True
+                    if _expr_text(v) == name:
+                        return True
+    return False
+
+
+def run(project: Project) -> None:
+    for fi in project.functions.values():
+        with_calls = _with_item_calls(fi)
+        for node in _walk_no_defs(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            ctor = _ctor_name(node)
+            if ctor is None or id(node) in with_calls:
+                continue
+            release = RESOURCE_CTORS[ctor]
+            stmt = _stmt_of(fi, node)
+            name = _assigned_name(stmt, node) if stmt is not None else None
+            if name is not None and (name.startswith("self.") or "." in name):
+                continue  # stored on the instance: lifetime owned by the class
+            if name is None:
+                # bare expression / nested in another call: treat a nested
+                # position as ownership transfer, a bare statement as a leak
+                if stmt is not None and isinstance(stmt, ast.Expr) and stmt.value is node:
+                    if not _released_in_finally(fi, node, None, release):
+                        project.add_finding(
+                            "resource", fi.module.path, node.lineno,
+                            f"{ctor}(...) result is discarded — no `with`, no `{release}()` on any path")
+                continue
+            if _released_in_finally(fi, node, name, release):
+                continue
+            if _name_escapes(fi, name):
+                continue
+            project.add_finding(
+                "resource", fi.module.path, node.lineno,
+                f"{ctor}(...) bound to `{name}` has no guaranteed release: wrap in `with` "
+                f"or call `{name}.{release}()` in a finally")
+
+        _thread_rule(project, fi)
+
+
+def _thread_rule(project: Project, fi: FunctionInfo) -> None:
+    for node in _walk_no_defs(fi.node):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        is_thread = (isinstance(f, ast.Name) and f.id == "Thread") or (
+            isinstance(f, ast.Attribute) and f.attr == "Thread")
+        if not is_thread:
+            continue
+        daemon_true = any(
+            k.arg == "daemon" and isinstance(k.value, ast.Constant) and k.value.value is True
+            for k in node.keywords)
+        if daemon_true:
+            continue
+        if "join" in fi.module.text:
+            # some join exists in this module; pairing threads to joins
+            # precisely is out of scope — module-level heuristic
+            continue
+        project.add_finding(
+            "resource", fi.module.path, node.lineno,
+            "Thread(...) is neither daemon=True nor joined anywhere in this module — "
+            "it can pin the process at shutdown")
