@@ -114,9 +114,12 @@ class _Call:
     def release(self) -> None:
         if not self._released:
             self._released = True
-            self._session._release(self.rid)
+            # free the in-flight slot before touching the session lock: a
+            # thread holding that lock may be blocked in sem.acquire(), and
+            # taking the lock first would complete the hold-and-wait cycle
             if self._sem is not None:
                 self._sem.release()
+            self._session._release(self.rid)
 
     def close(self) -> None:  # channel-duck-typing for flight helpers
         self.release()
@@ -203,8 +206,8 @@ class DacpSession:
             ch = self._factory()
             self.connects += 1
             try:
-                ch.send(framing.REQUEST, self._hello_header())
-                ftype, resp, _ = ch.recv(timeout=timeout)
+                ch.send(framing.REQUEST, self._hello_header())  # dacpcheck: ignore[blocking] reason=single-flight HELLO; nothing can use the session before it exists
+                ftype, resp, _ = ch.recv(timeout=timeout)  # dacpcheck: ignore[blocking] reason=single-flight HELLO; connect takes no other lock so no ordering cycle
             except DacpError:
                 self._retire(ch)
                 raise
@@ -247,41 +250,52 @@ class DacpSession:
 
     def _refresh_token(self, force: bool = False) -> str:
         """Mint/renew the session token; on v2 the re-HELLO rides the live
-        session channel (no reconnect)."""
+        session channel (no reconnect).
+
+        The refresh round-trip runs with the session lock *released*.  The
+        old shape held ``_lock`` across ``_begin``, which blocks on the
+        in-flight semaphore — but a slot only frees via ``_Call.release``,
+        which needs ``_lock``: with ``max_inflight`` requests outstanding a
+        token refresh deadlocked the whole session.  (The v1 branch also did
+        a full network round-trip under the lock, stalling every other
+        thread for a peer round-trip.)
+        """
         with self._lock:
             if self.v2 is None:
-                self.connect()
+                self.connect()  # dacpcheck: ignore[blocking] reason=first-use HELLO; no caller holds a slot before the session exists
                 return self._token
             if not force and self._token_fresh():
                 return self._token
-            if self.v2:
-                if self._ch is None:
-                    # session channel died: re-establish (fresh HELLO included)
-                    self.v2 = None
-                    self.connect()
-                    return self._token
-                call = self._begin(self._hello_header())
-            else:
-                ch = self._factory()
-                self.connects += 1
-                try:
-                    ch.send(framing.REQUEST, self._hello_header())
-                    ftype, resp, _ = ch.recv()
-                    if ftype == framing.ERROR:
-                        raise DacpError.from_wire(resp)
-                    self._store_token(resp)
-                finally:
-                    self._retire(ch)
+            if self.v2 and self._ch is None:
+                # session channel died: re-establish (fresh HELLO included)
+                self.v2 = None
+                self.connect()  # dacpcheck: ignore[blocking] reason=dead-channel recovery; pending calls already got transport errors, no slot is held
                 return self._token
-        # v2 re-HELLO completes outside the lock (reader thread must run)
-        try:
-            ftype, resp, _ = call.recv()
-            if ftype == framing.ERROR:
-                raise DacpError.from_wire(resp)
+            v2 = self.v2
+        if v2:
+            # rides the live session channel; recv outside the lock (the
+            # reader thread and slot holders must be able to make progress)
+            call = self._begin(self._hello_header())
+            try:
+                ftype, resp, _ = call.recv()
+                if ftype == framing.ERROR:
+                    raise DacpError.from_wire(resp)
+            finally:
+                call.release()
+        else:
+            ch = self._factory()
+            try:
+                ch.send(framing.REQUEST, self._hello_header())
+                ftype, resp, _ = ch.recv()
+                if ftype == framing.ERROR:
+                    raise DacpError.from_wire(resp)
+            finally:
+                with self._lock:
+                    self.connects += 1
+                    self._retire(ch)
+        with self._lock:
             self._store_token(resp)
-        finally:
-            call.release()
-        return self._token
+            return self._token
 
     # -- request plumbing (v2) -----------------------------------------------------
     def _begin(self, header: dict, body=b"") -> _Call:
@@ -291,7 +305,7 @@ class DacpSession:
         with self._lock:
             if self._ch is None:
                 self.v2 = None
-                self.connect()
+                self.connect()  # dacpcheck: ignore[blocking] reason=lazy reconnect before any slot is taken; connect holds only _lock
                 if not self.v2:
                     raise TransportError(f"peer {self.authority} no longer speaks v2")
             sem = self._inflight_sem

@@ -1,0 +1,123 @@
+"""Regression: token refresh must not hold the session lock across waits.
+
+The old ``_refresh_token`` held ``DacpSession._lock`` while ``_begin``
+blocked on the in-flight semaphore — but a slot only frees via
+``_Call.release``, which needed the same lock: with ``max_inflight``
+requests outstanding, a refresh deadlocked the whole session.  The v1
+branch also performed a full HELLO round-trip under the lock.  dacpcheck's
+blocking pass reports both shapes on the pre-fix tree.
+
+Scripted peers over ``channel_pair`` pin the timing precisely; every join
+uses a timeout so the old code *fails* instead of hanging the suite.
+"""
+
+import threading
+import time
+
+from repro.client.session import DacpSession
+from repro.transport import channel_pair
+from repro.transport import framing
+
+
+def _serve_v2_peer(server_ch, stop, hold_rids):
+    """Minimal v2 faird: answers HELLOs (rid-tagged after the first),
+    never answers verbs in `hold_rids` (pins their in-flight slot)."""
+    # initial HELLO rides the raw channel, pre-session: no rid
+    _ftype, hdr, _ = server_ch.recv(timeout=10)
+    assert hdr["verb"] == "HELLO"
+    server_ch.send(framing.OK, {
+        "token": "t0", "expires": time.time() + 3600,
+        "proto": framing.PROTOCOL_VERSION, "max_inflight": 1,
+    })
+    while not stop.is_set():
+        try:
+            _ftype, hdr, _ = server_ch.recv(timeout=0.5)
+        except Exception:
+            continue
+        rid = hdr.get("rid")
+        if hdr.get("verb") == "HELLO":
+            server_ch.send(framing.OK, {
+                "token": f"t{rid}", "expires": time.time() + 3600,
+                "proto": framing.PROTOCOL_VERSION, "max_inflight": 1,
+                "rid": rid,
+            })
+        elif hdr.get("verb") in hold_rids:
+            pass  # swallow: the slot stays occupied until the caller releases
+
+
+def test_v2_refresh_does_not_deadlock_against_full_inflight_window():
+    client_ch, server_ch = channel_pair()
+    stop = threading.Event()
+    peer = threading.Thread(
+        target=_serve_v2_peer, args=(server_ch, stop, {"PING"}), daemon=True)
+    peer.start()
+
+    session = DacpSession(lambda: client_ch, "peer:0")
+    session.connect()
+    assert session.v2 is True and session.max_inflight == 1
+
+    # occupy the only in-flight slot with a request the peer never answers
+    pinned = session._begin({"verb": "PING", "token": session._token})
+
+    refreshed = threading.Event()
+
+    def refresher():
+        session._refresh_token(force=True)
+        refreshed.set()
+
+    t = threading.Thread(target=refresher, daemon=True)
+    t.start()
+    time.sleep(0.2)  # let the refresher reach the in-flight semaphore
+    assert not refreshed.is_set()  # it is genuinely queued behind the slot
+
+    # releasing the pinned call must unblock the refresh; pre-fix, release()
+    # needed _lock (held by the refresher) before freeing the semaphore —
+    # this join timed out
+    releaser = threading.Thread(target=pinned.release, daemon=True)
+    releaser.start()
+    releaser.join(timeout=5)
+    assert not releaser.is_alive(), "release() deadlocked against the refresh"
+    assert refreshed.wait(timeout=5), "token refresh deadlocked on the in-flight window"
+    assert session._token.startswith("t") and session._token != "t0"
+    stop.set()
+
+
+def test_v1_refresh_round_trip_runs_outside_the_session_lock():
+    reply_delay = [0.0]  # mutated per-HELLO below
+
+    def factory():
+        a, b = channel_pair()
+        delay = reply_delay[0]
+
+        def serve():
+            _ftype, hdr, _ = b.recv(timeout=10)
+            assert hdr["verb"] == "HELLO"
+            time.sleep(delay)
+            b.send(framing.OK, {"token": f"tok{time.monotonic_ns()}",
+                                "expires": time.time() + 3600})  # no proto => v1
+
+        threading.Thread(target=serve, daemon=True).start()
+        return a
+
+    session = DacpSession(factory, "legacy:0")
+    session.connect()
+    assert session.v2 is False
+
+    reply_delay[0] = 1.0  # the next HELLO answers slowly
+    started = threading.Event()
+
+    def refresher():
+        started.set()
+        session._refresh_token(force=True)
+
+    t = threading.Thread(target=refresher, daemon=True)
+    t.start()
+    started.wait(timeout=5)
+    time.sleep(0.2)  # refresher is now mid-round-trip
+
+    # pre-fix the whole round-trip ran under _lock, so this timed out
+    acquired = session._lock.acquire(timeout=0.5)
+    assert acquired, "session lock is held across the v1 refresh round-trip"
+    session._lock.release()
+    t.join(timeout=5)
+    assert not t.is_alive()
