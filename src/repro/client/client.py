@@ -95,7 +95,7 @@ class Flow:
                     while True:
                         attempts += 1
                         if attempts >= self.max_attempts:
-                            raise err
+                            raise err from None
                         time.sleep(self.backoff_s * (2**attempts))
                         try:
                             _schema, frs = self._fetch()

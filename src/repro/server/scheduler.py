@@ -221,7 +221,7 @@ class CrossDomainScheduler:
                 )
                 self._note(st.id, domain=self.coordinator.authority, flow_id=st.id, token=tok, state="local")
                 self._log("publish_local", st.id)
-            for sid, e in errors.items():
+            for e in errors.values():
                 raise e
             flow_tokens.update(results)
 

@@ -60,7 +60,7 @@ def test_concat_and_iter_rows():
 
 def test_type_mismatch_rejected():
     sch = Schema([("x", "float32")])
-    with pytest.raises(Exception):
+    with pytest.raises(SchemaError):
         RecordBatch(sch, [Column.from_values(dtypes.INT64, [1, 2])])
 
 

@@ -225,7 +225,7 @@ def test_error_propagates_from_workers():
     f = bld.add("filter", {"predicate": col("nope") > 0.0}, [s])
     dag = bld.finish(f)
     out = execute_parallel(dag, lambda n: _sdf(full), _cfg(4))
-    with pytest.raises(Exception):
+    with pytest.raises(SchemaError):
         out.collect()
 
 
