@@ -1,0 +1,153 @@
+"""Federated catalog mesh — discovery latency + partition-parallel scans.
+
+Three mutually-peered faird servers on a LocalNetwork:
+
+  * ``federated_list_cold_us``   — federated LIST with a cold mesh cache
+    (scatter-gather over both peers)
+  * ``federated_list_cached_us`` — the same LIST answered from the TTL
+    cache (no peer traffic)
+  * ``local_list_us``            — ``scope="local"`` baseline (one catalog)
+  * ``partition_single_s`` / ``partition_parallel_s`` — one columnar
+    aggregate scan executed as a single flow vs split into K
+    partition-parallel child flows (``DACP_PARTITION_PARALLEL``)
+  * ``partition_speedup``        — single / parallel wall-clock ratio,
+    with the merged stream checked byte-identical before timing counts
+
+All metrics here are report-only for the CI gate: discovery timings are
+host-dependent, and the partition ratio depends on core count (a 2-core
+CI runner may not beat the single flow).  The committed baseline tracks
+them for the human delta table.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import emit, timer
+from repro.client import LocalNetwork
+from repro.core import col
+from repro.core.executor import ExecutorConfig
+from repro.server import FairdServer, write_sdf_dataset
+
+AUTHS = ["dcA:3101", "dcB:3101", "dcC:3101"]
+K = 4
+
+
+def _col_bytes(batch, name):
+    c = batch.column(name)
+    if c.dtype.is_varwidth:
+        return c.offsets.tobytes() + c.data.tobytes()
+    return c.values.tobytes()
+
+
+def _make_cluster(root: str, rows: int):
+    from repro.core.sdf import StreamingDataFrame
+
+    rng = np.random.default_rng(5)
+    events = StreamingDataFrame.from_pydict(
+        {
+            "k": rng.integers(0, 64, rows),
+            "v": rng.standard_normal(rows),
+        },
+        batch_rows=max(1, rows // 8),  # one part file per batch -> 8 parts
+    )
+    write_sdf_dataset(os.path.join(root, "events"), events)
+    aux = StreamingDataFrame.from_pydict({"id": np.arange(1000, dtype=np.int64)}, batch_rows=500)
+    write_sdf_dataset(os.path.join(root, "aux"), aux)
+
+    net = LocalNetwork()
+    servers = {}
+    for auth in AUTHS:
+        s = FairdServer(
+            auth,
+            peers=[p for p in AUTHS if p != auth],
+            executor=ExecutorConfig(num_workers=4, morsel_rows=1 << 14, backend="numpy"),
+        )
+        servers[auth] = s
+        net.register(s)
+    servers["dcA:3101"].catalog.register_path("events", os.path.join(root, "events"))
+    servers["dcB:3101"].catalog.register_path("aux", os.path.join(root, "aux"))
+    servers["dcC:3101"].catalog.register_path("aux2", os.path.join(root, "aux"))
+    return net, servers
+
+
+def _best_list_s(client, repeats: int, cold_mesh=None) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        if cold_mesh is not None:
+            cold_mesh.invalidate_local()  # force a real scatter each repeat
+        with timer() as t:
+            client.list()
+        best = min(best, t.s)
+    return best
+
+
+def run(rows: int = 200_000, verbose: bool = True) -> dict:
+    root = tempfile.mkdtemp(prefix="dacp_mesh_")
+    net, servers = _make_cluster(root, rows)
+    coordinator = servers["dcA:3101"]
+    client = net.client_for("dcA:3101")
+    repeats = 10
+
+    results: dict = {"rows": rows, "k": K}
+
+    # -- discovery latency -----------------------------------------------------
+    cold = _best_list_s(client, repeats, cold_mesh=coordinator.mesh)
+    cached = _best_list_s(client, repeats)
+    with timer() as t:
+        for _ in range(repeats):
+            client.list(scope="local")
+    local = t.s / repeats
+    results["federated_list_cold_us"] = cold * 1e6
+    results["federated_list_cached_us"] = cached * 1e6
+    results["local_list_us"] = local * 1e6
+
+    # -- partition-parallel scan ----------------------------------------------
+    dag = (
+        client.open("dacp://dcA:3101/events")
+        .filter(col("v") > 0.0)
+        .group_by("k")
+        .agg(total=("sum", "v"), n="count")
+        .dag()
+    )
+    os.environ.pop("DACP_PARTITION_PARALLEL", None)
+    single_res = coordinator.plan_and_schedule(dag.copy())[0].collect()
+    with timer() as t:
+        single_again = coordinator.plan_and_schedule(dag.copy())[0].collect()
+    single_s = t.s
+    os.environ["DACP_PARTITION_PARALLEL"] = str(K)
+    try:
+        parallel_res = coordinator.plan_and_schedule(dag.copy())[0].collect()
+        with timer() as t:
+            coordinator.plan_and_schedule(dag.copy())[0].collect()
+        parallel_s = t.s
+    finally:
+        del os.environ["DACP_PARTITION_PARALLEL"]
+
+    identical = single_res.num_rows == parallel_res.num_rows and all(
+        _col_bytes(single_res, n) == _col_bytes(parallel_res, n) for n in single_res.schema.names
+    )
+    assert identical, "partition-parallel stream diverged from the single flow"
+    del single_again
+    results["partition_single_s"] = single_s
+    results["partition_parallel_s"] = parallel_s
+    results["partition_speedup"] = single_s / max(parallel_s, 1e-9)
+    results["partition_byte_identical"] = 1.0
+
+    if verbose:
+        emit("mesh_federated_list_cold", results["federated_list_cold_us"], "scatter 2 peers")
+        emit("mesh_federated_list_cached", results["federated_list_cached_us"], "TTL cache hit")
+        emit("mesh_local_list", results["local_list_us"], "scope=local")
+        emit(
+            "mesh_partition_parallel",
+            parallel_s * 1e6,
+            f"{results['partition_speedup']:.2f}x vs single flow, K={K}, byte-identical",
+        )
+
+    for s in servers.values():
+        s.shutdown()
+    net.close_all()
+    return results

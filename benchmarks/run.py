@@ -15,6 +15,8 @@ One section per paper figure/claim:
     flows         — flow lifecycle: time-to-first-batch for START+FETCH vs
                     blocking COOK, and START-ack latency
     kernels       — §IV-B hot-spot kernels (interpret-mode indicative)
+    mesh          — federated catalog mesh: LIST scatter/cache latency +
+                    partition-parallel scan vs the single-flow plan
 
 Results additionally land in benchmarks/results/benchmarks.json.
 """
@@ -36,6 +38,7 @@ def main() -> None:
         executor,
         flows_bench,
         kernels_bench,
+        mesh_bench,
         pushdown,
         session_reuse,
         structured,
@@ -52,6 +55,7 @@ def main() -> None:
     out["executor"] = executor.run(rows=100_000 if quick else 400_000)
     out["flows"] = flows_bench.run(rows=50_000 if quick else 200_000)
     out["kernels"] = kernels_bench.run()
+    out["mesh"] = mesh_bench.run(rows=50_000 if quick else 200_000)
 
     res_dir = os.path.join(os.path.dirname(__file__), "results")
     os.makedirs(res_dir, exist_ok=True)
@@ -85,6 +89,12 @@ def main() -> None:
     print(
         f"#  flow lifecycle: first batch in {fb['ttfb_start_fetch_s']*1e3:.1f} ms via START+FETCH "
         f"vs {fb['ttfb_cook_s']*1e3:.1f} ms blocking COOK; START acks in {fb['start_ack_s']*1e3:.1f} ms"
+    )
+    me = out["mesh"]
+    print(
+        f"#  catalog mesh: federated LIST {me['federated_list_cold_us']/1e3:.1f} ms cold / "
+        f"{me['federated_list_cached_us']/1e3:.2f} ms cached; partition-parallel scan "
+        f"{me['partition_speedup']:.2f}x vs single flow (byte-identical, K={me['k']})"
     )
 
 

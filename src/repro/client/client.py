@@ -201,13 +201,25 @@ class DacpClient:
         """Internal (scheduler): register a plan fragment; returns pull token."""
         return self.session.submit(fragment, flow_id, exchange_tokens)
 
-    def list(self, prefix: str | None = None, offset: int = 0, limit: int | None = None) -> dict:
-        """Enumerate the peer's catalog (paged).  Metadata only — no data moves."""
-        return self.session.list(prefix=prefix, offset=offset, limit=limit)
+    def list(
+        self,
+        prefix: str | None = None,
+        offset: int = 0,
+        limit: int | None = None,
+        scope: str | None = None,
+    ) -> dict:
+        """Enumerate the peer's catalog (paged).  Metadata only — no data
+        moves.  When the server is part of a catalog mesh the default answer
+        is federated (entries carry an ``authority`` field and unreachable
+        peers are flagged in ``degraded``); ``scope="local"`` pins it to the
+        server's own catalog."""
+        return self.session.list(prefix=prefix, offset=offset, limit=limit, scope=scope)
 
-    def describe(self, uri: str) -> dict:
-        """Schema + stats + policy for a URI, without streaming any data."""
-        return self.session.describe(uri)
+    def describe(self, uri: str, scope: str | None = None) -> dict:
+        """Schema + stats + policy for a URI, without streaming any data.
+        A URI owned by a mesh peer is forwarded there transparently unless
+        ``scope="local"``."""
+        return self.session.describe(uri, scope=scope)
 
     def ping(self, timeout: float = 5.0) -> dict:
         return self.session.ping(timeout=timeout)

@@ -665,22 +665,38 @@ class DacpSession:
             return self._roundtrip(hdr, body)["token"]
         return self._legacy_roundtrip(hdr, body)["token"]
 
-    def list(self, prefix: str | None = None, offset: int = 0, limit: int | None = None) -> dict:
-        """Catalog enumeration with paging (LIST)."""
+    def list(
+        self,
+        prefix: str | None = None,
+        offset: int = 0,
+        limit: int | None = None,
+        scope: str | None = None,
+    ) -> dict:
+        """Catalog enumeration with paging (LIST).
+
+        ``scope``: ``None`` lets the server pick (federated when it has a
+        mesh), ``"local"`` pins the answer to that server's own catalog,
+        ``"mesh"`` requests the federation explicitly."""
         hdr = {"verb": "LIST", "offset": int(offset)}
         if prefix is not None:
             hdr["prefix"] = prefix
         if limit is not None:
             hdr["limit"] = int(limit)
+        if scope is not None:
+            hdr["scope"] = scope
         if self.v2 is None:
             self.connect()
         if self.v2:
             return self._roundtrip(hdr)
         return self._legacy_roundtrip(hdr)
 
-    def describe(self, uri: str) -> dict:
-        """Schema + stats + policy for a URI (DESCRIBE) — no data movement."""
+    def describe(self, uri: str, scope: str | None = None) -> dict:
+        """Schema + stats + policy for a URI (DESCRIBE) — no data movement.
+        ``scope="local"`` stops the server from forwarding a peer-owned URI
+        through its mesh."""
         hdr = {"verb": "DESCRIBE", "uri": str(uri)}
+        if scope is not None:
+            hdr["scope"] = scope
         if self.v2 is None:
             self.connect()
         if self.v2:

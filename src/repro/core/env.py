@@ -43,6 +43,7 @@ __all__ = [
     "knob_default",
     "parse_weights",
     "markdown_table",
+    "check_table",
 ]
 
 
@@ -182,6 +183,50 @@ _register(
     "float",
     600.0,
     "Seconds a committed cache entry may serve before expiry.",
+)
+# --- federated catalog mesh ------------------------------------------------
+_register(
+    "DACP_PEERS",
+    "str",
+    "",
+    "Comma-separated peer authorities (`h2:3101,h3:3101`) forming this "
+    "server's catalog mesh; empty disables federation.",
+)
+_register(
+    "DACP_MESH_CACHE_TTL",
+    "float",
+    10.0,
+    "Seconds a federated LIST/DESCRIBE answer may be served from the "
+    "mesh cache before peers are re-queried.",
+)
+_register(
+    "DACP_MESH_TIMEOUT",
+    "float",
+    2.0,
+    "Per-peer deadline for mesh scatter-gather and heartbeat probes; a "
+    "peer that misses it is reported degraded, not waited for.",
+)
+_register(
+    "DACP_MESH_HEARTBEAT",
+    "float",
+    5.0,
+    "Seconds between background heartbeat probes of mesh peers.",
+)
+_register(
+    "DACP_MESH_DOWN_AFTER",
+    "int",
+    3,
+    "Consecutive failed probes before a peer transitions DEGRADED -> DOWN.",
+    minimum=1,
+)
+_register(
+    "DACP_PARTITION_PARALLEL",
+    "int",
+    0,
+    "Split an eligible columnar scan into up to K partition-parallel child "
+    "flows over disjoint part ranges (`0`/`1` = off); results stay "
+    "byte-identical to the single-flow plan.",
+    minimum=0,
 )
 # --- diagnostics -----------------------------------------------------------
 _register(
@@ -412,7 +457,8 @@ def _default_str(k: Knob) -> str:
 
 
 def markdown_table() -> str:
-    """The README "Environment knobs" table, generated from the registry."""
+    """The docs "Environment knobs" table, generated from the registry
+    (lives between the markers in docs/operations.md)."""
     lines = [
         "| Variable | Default | Accepted forms | Meaning |",
         "|---|---|---|---|",
@@ -423,5 +469,38 @@ def markdown_table() -> str:
     return "\n".join(lines)
 
 
+ENV_TABLE_BEGIN = "<!-- env-table:begin -->"
+ENV_TABLE_END = "<!-- env-table:end -->"
+
+
+def check_table(path: str) -> str | None:
+    """None when the table between the markers in ``path`` matches the
+    registry, else a human-readable reason — the CI docs-staleness gate."""
+    try:
+        with open(path) as f:
+            text = f.read()
+    except OSError as e:
+        return f"cannot read {path}: {e}"
+    lo = text.find(ENV_TABLE_BEGIN)
+    hi = text.find(ENV_TABLE_END)
+    if lo < 0 or hi < 0 or hi < lo:
+        return f"{path} is missing the {ENV_TABLE_BEGIN} / {ENV_TABLE_END} markers"
+    if text[lo + len(ENV_TABLE_BEGIN) : hi].strip() != markdown_table().strip():
+        return (
+            f"the env-knob table in {path} is stale; regenerate it with "
+            "`PYTHONPATH=src python -m repro.core.env` and paste between the markers"
+        )
+    return None
+
+
 if __name__ == "__main__":
-    print(markdown_table())
+    import sys
+
+    if len(sys.argv) >= 3 and sys.argv[1] == "--check":
+        reason = check_table(sys.argv[2])
+        if reason is not None:
+            print(reason, file=sys.stderr)
+            raise SystemExit(1)
+        print(f"{sys.argv[2]}: env-knob table matches the registry")
+    else:
+        print(markdown_table())

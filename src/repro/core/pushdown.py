@@ -148,6 +148,14 @@ def _split_aggregate_below_union(dag: Dag) -> bool:
         child = dag.nodes.get(child_id)
         if child is None or child.op != "union" or not _single_consumer(dag, child_id):
             continue
+        if child.params.get("partition"):
+            # a partition-parallel reassembly union: its branches are
+            # disjoint part ranges of ONE scan, ordered so the merged stream
+            # is byte-identical to the unsplit plan.  Splitting the
+            # aggregate here would change the float fold order vs the
+            # single-flow plan, breaking that guarantee for zero shipping
+            # benefit (the branches are same-domain exchanges).
+            continue
         keys = list(n.params["keys"])
         aggs = n.params["aggs"]
         new_inputs = []

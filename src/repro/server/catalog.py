@@ -79,6 +79,10 @@ class Catalog:
         self._lock = threading.Lock()
         self._schema_cache: dict = {}  # path -> (mtime, size, Schema | None)
         self._stats_cache: dict = {}  # root -> (expires_at, stats dict)
+        # invalidation fan-out: the mesh layer (and anything else caching
+        # derived answers) registers a callback fired after a local write
+        # drops the stats cache, so federated answers never outlive a PUT
+        self._invalidation_listeners: list = []
 
     def register(self, ds: Dataset) -> Dataset:
         with self._lock:
@@ -176,12 +180,23 @@ class Catalog:
             self._stats_cache[ds.root] = (now + STATS_TTL_S, stats)
         return dict(stats)
 
+    def on_invalidate(self, listener) -> None:
+        """Register ``listener(dataset_name)`` to fire after a local write
+        invalidates a dataset's cached stats (mesh caches hook in here)."""
+        with self._lock:
+            self._invalidation_listeners.append(listener)
+
     def invalidate_stats(self, ds: Dataset) -> None:
         """Drop the cached walk for a dataset (called after a PUT lands).
         Without this, a write inside the STATS_TTL_S window would leave the
-        plan cache fingerprinting — and serving — the pre-write version."""
+        plan cache fingerprinting — and serving — the pre-write version.
+        Listeners (the mesh layer's federated-answer cache) fire after the
+        drop, outside the lock — a listener may take its own locks."""
         with self._lock:
             self._stats_cache.pop(ds.root, None)
+            listeners = list(self._invalidation_listeners)
+        for fn in listeners:
+            fn(ds.name)
 
     def list_entries(self, prefix: str | None = None, offset: int = 0, limit: int | None = None) -> dict:
         """Paged catalog enumeration (the LIST verb's payload).
@@ -248,6 +263,13 @@ class Catalog:
         if os.path.isdir(path):
             stats = self.dataset_stats(Dataset(ds.name, path))
             schema, rows = self._dir_schema(path)
+            from repro.server.datasource import columnar_part_count
+
+            parts = columnar_part_count(path)
+            if parts is not None:
+                # partition-parallel eligibility: a remote coordinator reads
+                # the part count from DESCRIBE instead of walking the tree
+                stats["parts"] = parts
         else:
             st = os.stat(path)
             stats = {"n_files": 1, "bytes": st.st_size, "mtime": st.st_mtime}

@@ -47,7 +47,14 @@ from repro.core.expr import Expr
 from repro.core.schema import Field, Schema
 from repro.core.sdf import StreamingDataFrame
 
-__all__ = ["scan_path", "scan_bytes", "write_sdf_dataset", "DEFAULT_BATCH_ROWS", "STRUCTURED_EXTS"]
+__all__ = [
+    "scan_path",
+    "scan_bytes",
+    "write_sdf_dataset",
+    "columnar_part_count",
+    "DEFAULT_BATCH_ROWS",
+    "STRUCTURED_EXTS",
+]
 
 DEFAULT_BATCH_ROWS = 65536
 DEFAULT_CHUNK_BYTES = 4 << 20
@@ -78,6 +85,7 @@ def scan_path(
     chunk_bytes: int = DEFAULT_CHUNK_BYTES,
     strict_columns: bool = True,
     scan_workers: int = DEFAULT_SCAN_WORKERS,
+    part_range=None,
 ) -> StreamingDataFrame:
     """Open any path (file or directory) as an SDF with pushdown applied.
 
@@ -89,12 +97,18 @@ def scan_path(
     ``scan_workers > 1`` reads multi-file sources (columnar dataset parts,
     file-list blob content) with a bounded reader pool, emitting batches in
     the same order as the sequential scan.
+
+    ``part_range=(lo, hi)`` restricts a columnar-dataset scan to the sorted
+    part files ``parts[lo:hi]`` — the partition-parallel planner's split
+    unit.  Batches never span part files, so disjoint contiguous ranges
+    concatenated in order reproduce the full scan byte-identically.  Other
+    source kinds ignore it (the planner only splits columnar scans).
     """
     if not os.path.exists(path):
         raise ResourceNotFound(f"no such path: {path}")
     if os.path.isdir(path):
         if _is_columnar_dataset(path):
-            sdf = _scan_columnar_dataset(path, batch_rows, scan_workers)
+            sdf = _scan_columnar_dataset(path, batch_rows, scan_workers, part_range=part_range)
         else:
             sdf = _scan_filelist(path, columns, predicate, batch_rows, strict_columns, scan_workers)
             return sdf  # filelist applies pushdown internally
@@ -488,10 +502,25 @@ def _is_columnar_dataset(path: str) -> bool:
     return os.path.exists(os.path.join(path, "_schema.json"))
 
 
-def _scan_columnar_dataset(root: str, batch_rows: int, scan_workers: int = DEFAULT_SCAN_WORKERS) -> StreamingDataFrame:
+def columnar_part_count(path: str) -> int | None:
+    """Number of part files in a columnar dataset directory, or None when
+    the path is not one.  Metadata only (``os.listdir``) — the planner uses
+    this to decide partition-parallel eligibility, and DESCRIBE reports it
+    so remote coordinators can decide without walking the tree."""
+    if not os.path.isdir(path) or not _is_columnar_dataset(path):
+        return None
+    return sum(1 for p in os.listdir(path) if p.startswith("part-") and p.endswith(".npz"))
+
+
+def _scan_columnar_dataset(
+    root: str, batch_rows: int, scan_workers: int = DEFAULT_SCAN_WORKERS, part_range=None
+) -> StreamingDataFrame:
     with open(os.path.join(root, "_schema.json")) as f:
         schema = Schema.from_json(json.load(f))
     parts = sorted(p for p in os.listdir(root) if p.startswith("part-") and p.endswith(".npz"))
+    if part_range is not None:
+        lo, hi = int(part_range[0]), int(part_range[1])
+        parts = parts[lo:hi]
 
     def _cast(batch: RecordBatch) -> RecordBatch:
         # npz inference loses STRING-vs-BINARY and column order; restore both

@@ -70,6 +70,7 @@ class SDFEngine:
         predicate=None,
         batch_rows: int | None = None,
         strict_columns: bool = True,
+        part_range=None,
     ) -> StreamingDataFrame:
         uri = parse_uri(uri_str)
         if uri.segments and uri.segments[0] == ".flow":
@@ -88,6 +89,7 @@ class SDFEngine:
             predicate=predicate,
             strict_columns=strict_columns,
             scan_workers=self.executor.scan_workers,
+            part_range=part_range,
             **kwargs,
         )
 
@@ -112,6 +114,7 @@ class SDFEngine:
                     columns=node.params.get("columns"),
                     predicate=node.params.get("predicate"),
                     strict_columns=False,  # optimizer-pruned hints, not user input
+                    part_range=node.params.get("part_range"),
                 )
             if node.op == "exchange":
                 return self._remote(node)

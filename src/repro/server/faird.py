@@ -44,16 +44,19 @@ import threading
 import time
 
 from repro.core.dag import Dag
+from repro.core.env import env_int, env_str
 from repro.core.errors import DacpError, PermissionDenied, ResourceNotFound, TokenError, TransportError
 from repro.core.executor import ExecutorConfig, prefetch_sdf
 from repro.core.expr import Expr
+from repro.core.planner import partition_plan
 from repro.core.planner import plan as plan_dag
 from repro.core.pushdown import optimize
 from repro.core.tokens import TokenAuthority
 from repro.core.uri import parse as parse_uri
 from repro.server.catalog import Catalog
-from repro.server.datasource import write_sdf_dataset
+from repro.server.datasource import columnar_part_count, write_sdf_dataset
 from repro.server.engine import SDFEngine
+from repro.server.mesh import MeshRegistry
 from repro.server.plancache import fingerprint as plan_fingerprint
 from repro.transport import framing
 from repro.transport.channel import TaggedChannel
@@ -74,6 +77,8 @@ class FairdServer:
         network=None,
         protocol_version: int = framing.PROTOCOL_VERSION,
         executor: ExecutorConfig | None = None,
+        peers=None,
+        mesh: MeshRegistry | None = None,
     ):
         self.authority = authority
         self.aliases = {authority}  # addresses under which peers reach us
@@ -97,6 +102,24 @@ class FairdServer:
             executor=self.executor,
         )
         self.flows = self.engine.flows  # lifecycle owner of every COOK/SUBMIT
+        # federated catalog mesh: explicit peer list, or DACP_PEERS, or none.
+        # The network_fn is late-bound because the cluster wires
+        # ``server.network`` after construction; the catalog invalidation
+        # listener keeps federated answers from outliving a local PUT.
+        if mesh is None:
+            if peers is None:
+                peers = [p.strip() for p in env_str("DACP_PEERS").split(",") if p.strip()]
+            if peers:
+                mesh = MeshRegistry(
+                    authority,
+                    self.catalog,
+                    lambda: self.network,
+                    peers,
+                    local_load_fn=lambda: self.flows.stats()["active"],
+                )
+        self.mesh = mesh
+        if self.mesh is not None:
+            self.catalog.on_invalidate(self.mesh.invalidate_local)
         self.started_at = time.time()
         self.stats = {
             "get": 0,
@@ -237,16 +260,16 @@ class FairdServer:
             channel.send(framing.OK, self._hello(header))
             return False
         if verb == "PING":
-            channel.send(
-                framing.OK,
-                {
-                    "authority": self.authority,
-                    "uptime": time.time() - self.started_at,
-                    "stats": self.stats,
-                    "executor": self.engine.executor_stats(),
-                    "flows": self.flows.stats(),
-                },
-            )
+            pong = {
+                "authority": self.authority,
+                "uptime": time.time() - self.started_at,
+                "stats": self.stats,
+                "executor": self.engine.executor_stats(),
+                "flows": self.flows.stats(),
+            }
+            if self.mesh is not None:
+                pong["mesh"] = {"peers": self.mesh.peer_states()}
+            channel.send(framing.OK, pong)
             return False
         if verb == "GET":
             self._authorize(header, "GET")
@@ -355,9 +378,21 @@ class FairdServer:
             channel.send(framing.OK, {"flow_id": flow_id, "token": pull_token})
             return False
         if verb == "LIST":
-            # discovery: catalog enumeration with paging — no data files opened
+            # discovery: catalog enumeration with paging — no data files
+            # opened.  With a mesh configured the default scope is the whole
+            # federation (scope="local" answers from this catalog only — the
+            # scatter recursion guard and the explicit opt-out)
             self._authorize(header, "GET")
             self.stats["list"] += 1
+            scope = header.get("scope") or ("mesh" if self.mesh is not None else "local")
+            if scope == "mesh" and self.mesh is not None:
+                page = self.mesh.federated_list(
+                    prefix=header.get("prefix"),
+                    offset=int(header.get("offset", 0)),
+                    limit=header.get("limit"),
+                )
+                channel.send(framing.OK, page)
+                return False
             page = self.catalog.list_entries(
                 prefix=header.get("prefix"),
                 offset=int(header.get("offset", 0)),
@@ -366,9 +401,22 @@ class FairdServer:
             channel.send(framing.OK, {"authority": self.authority, **page})
             return False
         if verb == "DESCRIBE":
-            # discovery: schema + stats + policy from catalog metadata only
+            # discovery: schema + stats + policy from catalog metadata only.
+            # A URI owned by a mesh peer is forwarded there (TTL-cached) —
+            # mesh-transparent DESCRIBE — unless the client pinned
+            # scope="local"
             subject = self._authorize(header, "GET")
             self.stats["describe"] += 1
+            uri = parse_uri(header["uri"])
+            if (
+                self.mesh is not None
+                and header.get("scope") != "local"
+                and uri.authority
+                and uri.authority not in self.aliases
+                and uri.authority in self.mesh.peers
+            ):
+                channel.send(framing.OK, self.mesh.federated_describe(header["uri"], uri.authority))
+                return False
             channel.send(framing.OK, self.engine.describe_uri(header["uri"], subject=subject))
             return False
         if verb == "BYE":
@@ -391,11 +439,43 @@ class FairdServer:
         from repro.server.scheduler import CrossDomainScheduler
 
         dag = optimize(dag)
-        the_plan = plan_dag(dag, client_domain=self.authority)
+        placement = self.mesh.choose_domain if self.mesh is not None else None
+        the_plan = plan_dag(dag, client_domain=self.authority, placement=placement)
+        k = env_int("DACP_PARTITION_PARALLEL")
+        if k >= 2 and self.network is not None:
+            # partition-parallel SUBMIT: split eligible columnar scans into
+            # K child flows over disjoint part ranges (byte-identical merge
+            # through the ordered partition union — see planner.partition_plan)
+            the_plan = partition_plan(the_plan, self._part_count, k)
         sched = CrossDomainScheduler(coordinator=self, network=self.network, cancel=cancel)
         if attach is not None:
             attach(sched)
         return sched.run(the_plan, stats=stats), sched
+
+    def _part_count(self, uri_str: str) -> int | None:
+        """Part count of a columnar dataset for partition-parallel
+        eligibility: local datasets via the catalog path, peer datasets via
+        the mesh's cached federated DESCRIBE; None = ineligible."""
+        try:
+            uri = parse_uri(uri_str)
+        except Exception:  # noqa: BLE001 - the plan will surface the bad uri itself
+            return None
+        if not uri.segments or uri.segments[0] == ".flow":
+            return None
+        if uri.authority in self.aliases:
+            try:
+                _ds, path = self.catalog.resolve_uri(uri)
+            except ResourceNotFound:
+                return None
+            return columnar_part_count(path) if path else None
+        if self.mesh is not None and uri.authority in self.mesh.peers:
+            try:
+                d = self.mesh.federated_describe(uri_str, uri.authority)
+            except (DacpError, OSError):
+                return None
+            parts = (d.get("stats") or {}).get("parts")
+            return int(parts) if parts is not None else None
+        return None
 
     def _flow_runner(self, dag: Dag):
         """Producer entry point for a cook flow (START / blocking COOK)."""
@@ -547,10 +627,24 @@ class FairdServer:
                 t.start()
 
         threading.Thread(target=loop, daemon=True).start()
+        if self.mesh is not None:
+            self.mesh.start()  # standalone deployment: heartbeat from boot
         return actual_port
 
     def shutdown(self) -> None:
+        import socket
+
+        if self.mesh is not None:
+            self.mesh.stop()
         if self._tcp_server is not None:
+            # close() alone does not wake a thread already blocked in
+            # accept(): the syscall pins the kernel socket, so the listener
+            # keeps accepting one more connection after "shutdown".
+            # shutdown(SHUT_RDWR) aborts the blocked accept immediately.
+            try:
+                self._tcp_server.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
             try:
                 self._tcp_server.close()
             except OSError:

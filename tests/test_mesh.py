@@ -1,0 +1,396 @@
+"""Federated catalog mesh + partition-parallel planner tests.
+
+Covers the mesh failure modes the operations guide documents: a peer down
+at LIST time degrades the answer instead of failing it; a peer dying
+mid-heartbeat walks UP -> DEGRADED -> DOWN and its entries reappear after
+the federated cache expires; placement falls back to the client domain
+when no stats are recorded.  Plus the byte-identity contract of
+partition-parallel SUBMIT (K child flows over disjoint part ranges merge
+into the exact single-flow stream).
+"""
+
+import re
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.client import LocalNetwork
+from repro.core import StreamingDataFrame, col
+from repro.core.dag import Dag
+from repro.core.errors import DacpError, ResourceNotFound
+from repro.core.planner import assign_domains, partition_plan, plan as plan_dag
+from repro.server import FairdServer
+from repro.server.datasource import write_sdf_dataset
+from repro.server.mesh import PEER_DEGRADED, PEER_DOWN, PEER_UP
+
+AUTHS = ["h1:3101", "h2:3101", "h3:3101"]
+
+EVENTS_ROWS = 4000  # 8 columnar parts at 500 rows/part
+OBS_ROWS = 1200  # 4 parts at 300 rows/part
+
+
+def _events_sdf():
+    rng = np.random.default_rng(7)
+    return StreamingDataFrame.from_pydict(
+        {
+            "id": np.arange(EVENTS_ROWS, dtype=np.int64),
+            "v": rng.standard_normal(EVENTS_ROWS),
+            "tag": [f"t{i % 7}" for i in range(EVENTS_ROWS)],
+        },
+        batch_rows=500,  # one part file per batch -> 8 parts
+    )
+
+
+def _obs_sdf():
+    return StreamingDataFrame.from_pydict(
+        {
+            "id": np.arange(OBS_ROWS, dtype=np.int64),
+            "w": np.linspace(0.0, 1.0, OBS_ROWS),
+        },
+        batch_rows=300,  # 4 parts
+    )
+
+
+@pytest.fixture()
+def mesh_cluster(tmp_path):
+    """Three mutually-peered domains: columnar `events` at h1 (8 parts),
+    columnar `obs` at h2 (4 parts), a small csv `cal` at h3."""
+    net = LocalNetwork()
+    servers = {}
+    for auth in AUTHS:
+        s = FairdServer(auth, peers=[p for p in AUTHS if p != auth])
+        s.mesh.down_after = 2
+        s.mesh.cache_ttl_s = 30.0
+        s.mesh.timeout_s = 5.0
+        servers[auth] = s
+        net.register(s)
+    events = tmp_path / "events"
+    write_sdf_dataset(str(events), _events_sdf())
+    servers["h1:3101"].catalog.register_path("events", str(events))
+    obs = tmp_path / "obs"
+    write_sdf_dataset(str(obs), _obs_sdf())
+    servers["h2:3101"].catalog.register_path("obs", str(obs))
+    cal = tmp_path / "cal"
+    cal.mkdir()
+    (cal / "c.csv").write_text("k,x\n1,0.5\n2,0.25\n")
+    servers["h3:3101"].catalog.register_path("cal", str(cal))
+    yield net, servers
+    for s in servers.values():
+        s.shutdown()
+    net.close_all()
+
+
+def _col_bytes(batch, name):
+    c = batch.column(name)
+    if c.dtype.is_varwidth:
+        return c.offsets.tobytes() + c.data.tobytes()
+    return c.values.tobytes()
+
+
+def _assert_batches_byte_equal(a, b):
+    assert a.schema.names == b.schema.names
+    assert a.num_rows == b.num_rows
+    for name in a.schema.names:
+        assert _col_bytes(a, name) == _col_bytes(b, name), f"column {name} differs"
+
+
+# --------------------------------------------------------------------- federation
+
+
+def test_federated_list_unions_all_domains(mesh_cluster):
+    net, _servers = mesh_cluster
+    page = net.client_for("h1:3101").list()
+    assert page["federated"] is True
+    assert page["degraded"] == []
+    named = {(e["authority"], e["name"]) for e in page["entries"]}
+    assert named == {("h1:3101", "events"), ("h2:3101", "obs"), ("h3:3101", "cal")}
+    # entries sorted by (authority, name) and total covers the union
+    assert page["total"] == 3
+    assert [e["authority"] for e in page["entries"]] == sorted(e["authority"] for e in page["entries"])
+
+
+def test_list_scope_local_pins_to_own_catalog(mesh_cluster):
+    net, _servers = mesh_cluster
+    page = net.client_for("h1:3101").list(scope="local")
+    assert "federated" not in page
+    assert [e["name"] for e in page["entries"]] == ["events"]
+
+
+def test_federated_list_peer_down_degrades_not_fails(mesh_cluster):
+    net, servers = mesh_cluster
+    net.set_down("h3:3101")
+    page = net.client_for("h1:3101").list()  # must not raise
+    assert page["degraded"] == ["h3:3101"]
+    assert {e["authority"] for e in page["entries"]} == {"h1:3101", "h2:3101"}
+    st = servers["h1:3101"].mesh.peer_states()["h3:3101"]
+    assert st["state"] in (PEER_DEGRADED, PEER_DOWN)
+    assert st["error"]
+
+
+def test_heartbeat_transitions_and_cache_expiry(mesh_cluster):
+    net, servers = mesh_cluster
+    mesh = servers["h1:3101"].mesh
+
+    states = mesh.probe_once()
+    assert all(st["state"] == PEER_UP for st in states.values())
+    assert states["h3:3101"]["last_ok"] is not None
+    assert states["h3:3101"]["queue_depth"] == 0
+
+    net.set_down("h3:3101")
+    assert mesh.probe_once()["h3:3101"]["state"] == PEER_DEGRADED  # miss 1 of 2
+    assert mesh.probe_once()["h3:3101"]["state"] == PEER_DOWN  # miss 2 of 2
+
+    page = net.client_for("h1:3101").list()
+    assert "h3:3101" in page["degraded"]
+
+    # peer restored: the cached federated answer still reports it degraded...
+    net.set_down("h3:3101", down=False)
+    assert "h3:3101" in net.client_for("h1:3101").list()["degraded"]
+
+    # ...until the TTL passes (simulated clock: no sleeping in tests)
+    real_clock = mesh._clock
+    mesh._clock = lambda: real_clock() + mesh.cache_ttl_s + 1.0
+    page = net.client_for("h1:3101").list()
+    assert page["degraded"] == []
+    assert any(e["authority"] == "h3:3101" for e in page["entries"])
+    assert mesh.probe_once()["h3:3101"]["state"] == PEER_UP
+
+
+def test_describe_forwards_through_mesh(mesh_cluster):
+    net, _servers = mesh_cluster
+    c1 = net.client_for("h1:3101")
+    d = c1.describe("dacp://h2:3101/obs")
+    assert d["kind"] == "dataset"
+    assert d["stats"]["parts"] == 4
+    local = c1.describe("dacp://h1:3101/events")
+    assert local["stats"]["parts"] == 8
+    # scope="local" pins to h1's catalog, which does not know obs
+    with pytest.raises(ResourceNotFound):
+        c1.describe("dacp://h2:3101/obs", scope="local")
+
+
+def test_describe_peer_down_raises(mesh_cluster):
+    net, _servers = mesh_cluster
+    net.set_down("h2:3101")
+    with pytest.raises(DacpError):
+        net.client_for("h1:3101").describe("dacp://h2:3101/obs")
+
+
+def test_put_invalidates_federated_cache(mesh_cluster):
+    net, _servers = mesh_cluster
+    c1 = net.client_for("h1:3101")
+    before = c1.list()
+    e_before = next(e for e in before["entries"] if e["name"] == "events")
+    # a local write must not leave the mesh serving pre-write stats for
+    # the remainder of the TTL window
+    c1.put(
+        "dacp://h1:3101/events/extra/run1",
+        StreamingDataFrame.from_pydict({"z": np.arange(64, dtype=np.int64)}),
+    )
+    after = c1.list()
+    e_after = next(e for e in after["entries"] if e["name"] == "events")
+    assert e_after["bytes"] > e_before["bytes"]
+
+
+def test_ping_reports_mesh_peers(mesh_cluster):
+    net, _servers = mesh_cluster
+    pong = net.client_for("h1:3101").ping()
+    assert set(pong["mesh"]["peers"]) == {"h2:3101", "h3:3101"}
+
+
+def test_heartbeat_thread_start_stop(mesh_cluster):
+    _net, servers = mesh_cluster
+    mesh = servers["h1:3101"].mesh
+    mesh.heartbeat_s = 0.01
+    mesh.start()
+    mesh.start()  # idempotent
+    assert mesh._thread is not None
+    mesh.stop()
+    assert mesh._thread is None
+
+
+# --------------------------------------------------------------------- placement
+
+
+def test_placement_falls_back_to_client_domain_without_stats():
+    # a coordinator with an empty catalog and never-probed peers has no
+    # stats at all: choose_domain defers and the planner keeps the
+    # client-named domain for the merge
+    mesh = FairdServer("h9:3101", peers=["h2:3101", "h3:3101"]).mesh
+    assert mesh.choose_domain(["h2:3101", "h3:3101"]) is None
+
+    b = Dag.build()
+    s1 = b.add("source", {"uri": "dacp://h2:3101/obs"})
+    s2 = b.add("source", {"uri": "dacp://h3:3101/cal"})
+    u = b.add("union", {}, [s1, s2])
+    dag = b.finish(u)
+    doms = assign_domains(dag, client_domain="h9:3101", placement=mesh.choose_domain)
+    assert doms[u] == "h9:3101"
+
+
+def test_placement_prefers_byte_rich_idle_domain(mesh_cluster):
+    net, servers = mesh_cluster
+    mesh = servers["h1:3101"].mesh
+    mesh.probe_once()  # queue depths
+    net.client_for("h1:3101").list()  # peer byte totals ride the federated LIST
+    # h2 hosts the columnar obs dataset; h3 hosts a 2-row csv
+    assert mesh.choose_domain(["h2:3101", "h3:3101"]) == "h2:3101"
+    # a DOWN peer is never chosen, whatever its recorded bytes
+    net.set_down("h2:3101")
+    mesh.probe_once()
+    mesh.probe_once()
+    assert mesh.peer_states()["h2:3101"]["state"] == PEER_DOWN
+    assert mesh.choose_domain(["h2:3101", "h3:3101"]) == "h3:3101"
+
+
+def test_assign_domains_honors_placement_hook():
+    b = Dag.build()
+    s1 = b.add("source", {"uri": "dacp://h2:3101/obs"})
+    s2 = b.add("source", {"uri": "dacp://h3:3101/cal"})
+    u = b.add("union", {}, [s1, s2])
+    dag = b.finish(u)
+    doms = assign_domains(dag, client_domain="h1:3101", placement=lambda cands: "h3:3101")
+    assert doms[u] == "h3:3101"
+    # a hook answer outside the candidate set is ignored, not trusted
+    doms = assign_domains(dag, client_domain="h1:3101", placement=lambda cands: "h9:3101")
+    assert doms[u] == "h1:3101"
+
+
+# ------------------------------------------------------------ partition-parallel
+
+
+def test_partition_plan_unit():
+    b = Dag.build()
+    src = b.add("source", {"uri": "dacp://h1:3101/events", "columns": ["id", "v"]})
+    agg = b.add(
+        "aggregate",
+        {"keys": [], "aggs": {"n": {"fn": "count", "column": None}}, "mode": "full"},
+        [src],
+    )
+    dag = b.finish(agg)
+    p = plan_dag(dag, client_domain="h1:3101")
+    p2 = partition_plan(p, lambda uri: 10, 4)
+
+    kids = [st for st in p2.subtasks if st.id != p2.root_id]
+    root = p2.root
+    assert len(kids) == 4
+    assert root.depends_on == [k.id for k in kids]
+
+    # children replicate the source exactly (incl. pushed columns) over
+    # disjoint, contiguous, covering part ranges
+    ranges = []
+    for k in kids:
+        child_src = k.dag.nodes[k.dag.output]
+        assert child_src.op == "source"
+        assert child_src.params["uri"] == "dacp://h1:3101/events"
+        assert child_src.params["columns"] == ["id", "v"]
+        ranges.append(tuple(child_src.params["part_range"]))
+    assert sorted(ranges) == ranges
+    assert ranges[0][0] == 0 and ranges[-1][1] == 10
+    assert all(a[1] == b_[0] for a, b_ in zip(ranges, ranges[1:]))
+
+    # the parent merges through an ordered union marked partition: True so
+    # no aggregate rewrite (fold-order hazard) crosses it
+    union = next(n for n in root.dag.nodes.values() if n.op == "union")
+    assert union.params.get("partition") is True
+    assert len(union.inputs) == 4
+    assert all(root.dag.nodes[i].op == "exchange" for i in union.inputs)
+    root.dag.validate()
+    for k in kids:
+        k.dag.validate()
+
+
+def test_partition_plan_ineligible_sources_untouched():
+    b = Dag.build()
+    src = b.add("source", {"uri": "dacp://h1:3101/blobs"})
+    dag = b.finish(src)
+    p = plan_dag(dag, client_domain="h1:3101")
+    assert partition_plan(p, lambda uri: 8, 1) is p  # k < 2: untouched object
+    p2 = partition_plan(p, lambda uri: None, 4)  # not columnar
+    assert [st.id for st in p2.subtasks] == [st.id for st in p.subtasks]
+    p3 = partition_plan(p, lambda uri: 1, 4)  # single part: nothing to split
+    assert [st.id for st in p3.subtasks] == [st.id for st in p.subtasks]
+
+
+def test_partition_parallel_byte_identical_local(mesh_cluster, monkeypatch):
+    net, servers = mesh_cluster
+    s1 = servers["h1:3101"]
+    c1 = net.client_for("h1:3101")
+    # a float-sum aggregate: the strongest byte-identity probe, because any
+    # fold-order change across the partition boundary would perturb bits
+    frame = (
+        c1.open("dacp://h1:3101/events")
+        .filter(col("id") >= 40)
+        .group_by("tag")
+        .agg(total=("sum", "v"), n="count")
+    )
+    dag = frame.dag()
+
+    monkeypatch.delenv("DACP_PARTITION_PARALLEL", raising=False)
+    base_sdf, base_sched = s1.plan_and_schedule(dag.copy())
+    base = base_sdf.collect()
+    assert not any(re.search(r"_p\d+$", sid) for sid in base_sched.subtasks)
+
+    monkeypatch.setenv("DACP_PARTITION_PARALLEL", "4")
+    part_sdf, part_sched = s1.plan_and_schedule(dag.copy())
+    part = part_sdf.collect()
+    kids = [sid for sid in part_sched.subtasks if re.search(r"_p\d+$", sid)]
+    assert len(kids) == 4
+
+    assert base.num_rows == 7  # one group per tag
+    _assert_batches_byte_equal(base, part)
+
+
+def test_partition_parallel_byte_identical_remote_domain(mesh_cluster, monkeypatch):
+    net, servers = mesh_cluster
+    s1 = servers["h1:3101"]
+    c1 = net.client_for("h1:3101")
+    # the scan lives at h2; h1 plans it, learns the part count through a
+    # federated DESCRIBE, and the children SUBMIT to h2
+    dag = c1.open("dacp://h2:3101/obs").filter(col("id") < 900).dag()
+
+    monkeypatch.delenv("DACP_PARTITION_PARALLEL", raising=False)
+    base = s1.plan_and_schedule(dag.copy())[0].collect()
+
+    monkeypatch.setenv("DACP_PARTITION_PARALLEL", "3")
+    part_sdf, part_sched = s1.plan_and_schedule(dag.copy())
+    part = part_sdf.collect()
+    kids = [sid for sid in part_sched.subtasks if re.search(r"_p\d+$", sid)]
+    assert len(kids) == 3
+
+    assert base.num_rows == 900
+    _assert_batches_byte_equal(base, part)
+
+
+def test_partition_parallel_end_to_end_client_path(mesh_cluster, monkeypatch):
+    net, _servers = mesh_cluster
+    monkeypatch.setenv("DACP_PARTITION_PARALLEL", "4")
+    got = (
+        net.client_for("h1:3101")
+        .open("dacp://h1:3101/events")
+        .filter(col("id") < 1000)
+        .collect()
+    )
+    assert got.num_rows == 1000
+    assert got.column("id").values.tobytes() == np.arange(1000, dtype=np.int64).tobytes()
+
+
+# ------------------------------------------------------------------ example smoke
+
+
+def test_federated_mesh_example_smoke(tmp_path):
+    import os
+
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(repo, "examples", "federated_mesh.py")],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "byte-identical" in proc.stdout

@@ -101,3 +101,26 @@ def test_socket_channel_closed_send_raises_transport_error():
     finally:
         for s in (ss, srv):
             s.close()
+
+
+def test_shutdown_wakes_blocked_accept_and_refuses_new_connects():
+    """close() on the listener does not unblock a thread already parked in
+    accept() — the syscall pins the kernel socket, so a "shut down" server
+    would accept and serve one more connection.  shutdown() must abort the
+    blocked accept so new connects are refused immediately."""
+    import socket as socket_mod
+
+    from repro.server import FairdServer
+
+    s = FairdServer("tcp-down:0")
+    port = s.serve_tcp()
+    # touch the server once so the accept loop is provably alive
+    probe = socket_mod.create_connection(("127.0.0.1", port), timeout=2)
+    probe.close()
+    s.shutdown()
+    # shutdown(SHUT_RDWR) stops the kernel listener synchronously: the very
+    # first connect after shutdown() must be refused (with the close()-only
+    # bug, the pinned listener accepted one more connection here).
+    with pytest.raises(OSError):
+        c = socket_mod.create_connection(("127.0.0.1", port), timeout=2)
+        c.close()

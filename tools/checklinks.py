@@ -1,0 +1,90 @@
+"""Relative-link checker for the repo's markdown docs (stdlib only).
+
+Validates every markdown link whose target is a relative path:
+
+  * the target file exists (relative to the file containing the link);
+  * a ``#fragment`` on a markdown target names a real heading in that
+    file (GitHub slug rules: lowercase, punctuation stripped, spaces to
+    dashes).
+
+External links (http/https/mailto) are not fetched — CI must not depend
+on network weather.  Usage:
+
+    python tools/checklinks.py README.md docs
+
+Exit 1 with one line per broken link.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown emphasis/code, lowercase,
+    drop punctuation, spaces to dashes."""
+    text = re.sub(r"[`*_]", "", heading).strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def headings_of(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        body = CODE_FENCE_RE.sub("", f.read())
+    return {github_slug(m.group(1)) for m in HEADING_RE.finditer(body)}
+
+
+def collect_markdown(targets) -> list:
+    files = []
+    for t in targets:
+        if os.path.isdir(t):
+            for dirpath, _dirs, names in os.walk(t):
+                files.extend(os.path.join(dirpath, n) for n in names if n.endswith(".md"))
+        else:
+            files.append(t)
+    return sorted(set(files))
+
+
+def check_file(path: str) -> list:
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        body = CODE_FENCE_RE.sub("", f.read())
+    base = os.path.dirname(path) or "."
+    for m in LINK_RE.finditer(body):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        ref, _, fragment = target.partition("#")
+        dest = path if not ref else os.path.normpath(os.path.join(base, ref))
+        if ref and not os.path.exists(dest):
+            errors.append(f"{path}: broken link -> {target} (no such file {dest})")
+            continue
+        if fragment and dest.endswith(".md"):
+            if github_slug(fragment) not in headings_of(dest):
+                errors.append(f"{path}: broken anchor -> {target} (no heading #{fragment} in {dest})")
+    return errors
+
+
+def main(argv) -> int:
+    targets = argv or ["README.md", "docs"]
+    errors = []
+    files = collect_markdown(targets)
+    for path in files:
+        if not os.path.exists(path):
+            errors.append(f"no such file or directory: {path}")
+            continue
+        errors.extend(check_file(path))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checklinks: {len(files)} file(s), {len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
