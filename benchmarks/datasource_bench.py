@@ -1,0 +1,177 @@
+"""Adapter-native pushdown: work skipped *at the source* by the format
+adapters (docs/adapters.md), upstream of any wire transfer.
+
+Three mechanisms, one deterministic gated ratio each:
+
+    sqlite  — supported conjuncts compile to a SQL WHERE + projection, so
+              the database only materializes matching rows/columns.
+              ``byte_reduction_sqlite_sql`` = materialized bytes of a full
+              scan / bytes of the pushed scan.
+    parquet — row-group min/max statistics prune whole groups before any
+              column chunk is decoded.  ``rowgroups_pruned_ratio`` =
+              fraction of row groups never read.
+    jsonl   — the ``_<name>.zdx.json`` sidecar's per-block stats skip
+              whole line blocks without parsing them.
+              ``jsonl_blocks_skipped_ratio`` = fraction of blocks skipped.
+
+All three are byte/region counts from the adapters' ``report`` accounting
+— same-process, scale-invariant (selectivity and region count are pinned
+relative to ``rows``), so they gate strictly in compare.py.  The ``*_s``
+timings ride along report-only.  The parquet leg is skipped (keys absent)
+when pyarrow is not installed; compare.py lists the missing gated metric
+without failing.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sqlite3
+import tempfile
+from contextlib import closing
+
+import numpy as np
+
+from benchmarks.common import emit, timer
+from repro.core import col
+from repro.server import scan_path
+from repro.server.adapters.parquet import HAVE_PYARROW
+
+# Regions (row groups / jsonl blocks) per source and the fraction of rows
+# the predicate selects — pinned so the gated ratios don't drift when the
+# quick/full row counts differ from the committed baseline's.
+_REGIONS = 20
+_SELECT = 1.0 / 50.0
+
+
+def _materialized_bytes(sdf) -> tuple[int, int]:
+    """(bytes, rows) actually built into RecordBatches by the scan."""
+    nbytes = nrows = 0
+    for b in sdf.iter_batches():
+        nbytes += b.nbytes
+        nrows += b.num_rows
+    return nbytes, nrows
+
+
+def _bench_sqlite(root: str, rows: int, results: dict) -> None:
+    db = os.path.join(root, "measurements.sqlite")
+    rng = np.random.default_rng(0)
+    vals = rng.normal(size=rows)
+    with closing(sqlite3.connect(db)) as conn:
+        conn.execute("CREATE TABLE measurements (id INTEGER NOT NULL, value REAL NOT NULL, tag TEXT NOT NULL)")
+        conn.executemany(
+            "INSERT INTO measurements VALUES (?,?,?)",
+            ((i, float(vals[i]), f"s{i % 97:03d}") for i in range(rows)),
+        )
+        conn.commit()
+
+    with timer() as t:
+        full_bytes, _ = _materialized_bytes(scan_path(db))
+    results["sqlite_full_bytes"] = full_bytes
+    results["sqlite_full_s"] = t.s
+
+    pred = col("id") < max(1, int(rows * _SELECT))
+    rep: dict = {}
+    with timer() as t:
+        push_bytes, push_rows = _materialized_bytes(
+            scan_path(db, columns=["value"], predicate=pred, report=rep)
+        )
+    results["sqlite_pushdown_bytes"] = push_bytes
+    results["sqlite_pushdown_s"] = t.s
+    results["sqlite_rows_total"] = rep["rows_total"]
+    results["sqlite_rows_fetched"] = rep["rows_emitted"]
+    assert rep["rows_emitted"] == push_rows  # WHERE was exact: no residual re-filter
+    results["byte_reduction_sqlite_sql"] = full_bytes / max(push_bytes, 1)
+
+
+def _bench_parquet(root: str, rows: int, results: dict) -> None:
+    import pyarrow as pa
+    import pyarrow.parquet as pq
+
+    path = os.path.join(root, "measurements.parquet")
+    rng = np.random.default_rng(1)
+    table = pa.table({
+        "id": np.arange(rows, dtype=np.int64),  # sorted: tight per-group min/max
+        "value": rng.normal(size=rows),
+    })
+    pq.write_table(table, path, row_group_size=max(1, rows // _REGIONS))
+
+    with timer() as t:
+        _materialized_bytes(scan_path(path))
+    results["parquet_full_s"] = t.s
+
+    pred = col("id") < max(1, rows // _REGIONS)  # first row group only
+    rep: dict = {}
+    with timer() as t:
+        _materialized_bytes(scan_path(path, predicate=pred, report=rep))
+    results["parquet_pruned_s"] = t.s
+    results["parquet_row_groups_total"] = rep["row_groups_total"]
+    results["parquet_row_groups_read"] = rep["row_groups_read"]
+    results["rowgroups_pruned_ratio"] = 1.0 - rep["row_groups_read"] / max(rep["row_groups_total"], 1)
+
+
+def _bench_jsonl(root: str, rows: int, results: dict) -> None:
+    path = os.path.join(root, "events.jsonl")
+    rng = np.random.default_rng(2)
+    vals = rng.normal(size=rows)
+    with open(path, "w") as f:
+        for i in range(rows):
+            f.write(json.dumps({"id": i, "value": float(vals[i]), "tag": f"s{i % 97:03d}"}) + "\n")
+
+    # Pin block granularity relative to rows so the skip ratio is
+    # scale-invariant; the sidecar index is built by the first scan.
+    prev = os.environ.get("DACP_JSONL_BLOCK_ROWS")
+    os.environ["DACP_JSONL_BLOCK_ROWS"] = str(max(16, rows // _REGIONS))
+    try:
+        with timer() as t:
+            _materialized_bytes(scan_path(path))  # builds _events.zdx.json
+        results["jsonl_full_s"] = t.s
+
+        pred = col("id") < max(1, rows // _REGIONS)  # first block only
+        rep: dict = {}
+        with timer() as t:
+            _materialized_bytes(scan_path(path, predicate=pred, report=rep))
+        results["jsonl_pruned_s"] = t.s
+        results["jsonl_blocks_total"] = rep["blocks_total"]
+        results["jsonl_blocks_read"] = rep["blocks_read"]
+        results["jsonl_blocks_skipped_ratio"] = 1.0 - rep["blocks_read"] / max(rep["blocks_total"], 1)
+    finally:
+        if prev is None:
+            os.environ.pop("DACP_JSONL_BLOCK_ROWS", None)
+        else:
+            os.environ["DACP_JSONL_BLOCK_ROWS"] = prev
+
+
+def run(rows: int = 100_000, verbose: bool = True) -> dict:
+    root = tempfile.mkdtemp(prefix="dacp_dsrc_")
+    results: dict = {"rows": rows}
+
+    _bench_sqlite(root, rows, results)
+    if HAVE_PYARROW:
+        _bench_parquet(root, rows, results)
+    _bench_jsonl(root, rows, results)
+
+    if verbose:
+        emit(
+            "datasource.sqlite_pushdown",
+            results["sqlite_pushdown_s"] * 1e6,
+            f"{results['byte_reduction_sqlite_sql']:.1f}x fewer bytes",
+        )
+        if HAVE_PYARROW:
+            emit(
+                "datasource.parquet_pruning",
+                results["parquet_pruned_s"] * 1e6,
+                f"{results['parquet_row_groups_read']}/{results['parquet_row_groups_total']} row groups read",
+            )
+        else:
+            emit("datasource.parquet_pruning", 0.0, "skipped (no pyarrow)")
+        emit(
+            "datasource.jsonl_block_skip",
+            results["jsonl_pruned_s"] * 1e6,
+            f"{results['jsonl_blocks_read']}/{results['jsonl_blocks_total']} blocks read",
+        )
+    return results
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

@@ -117,6 +117,39 @@ _register(
     "Parallel file readers inside datasource scans.",
     minimum=1,
 )
+# --- format adapters -------------------------------------------------------
+_register(
+    "DACP_JSONL_SNIFF_LINES",
+    "int",
+    256,
+    "Lines sampled for JSONL schema inference when no sidecar index "
+    "exists (fields are unioned and numeric dtypes widened across the "
+    "sample).",
+    minimum=1,
+)
+_register(
+    "DACP_JSONL_BLOCK_ROWS",
+    "int",
+    4096,
+    "Rows per block in the JSONL sidecar index — the unit of stats-based "
+    "block skipping and of `part_range` splits.",
+    minimum=16,
+)
+_register(
+    "DACP_JSONL_INDEX",
+    "bool",
+    True,
+    "Build/use the `_<name>.zdx.json` sidecar line-offset + block-stats "
+    "index for JSONL scans (off = plain streaming scan).",
+)
+_register(
+    "DACP_SQLITE_PART_ROWS",
+    "int",
+    1 << 16,
+    "Rows per `part_range` split unit for partition-parallel scans of "
+    "SQLite/SDIF containers.",
+    minimum=1,
+)
 # --- memory budget / spill -------------------------------------------------
 _register(
     "DACP_MEMORY_BUDGET",

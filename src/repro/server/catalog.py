@@ -16,10 +16,11 @@ The catalog is also the backing store for the v2 discovery verbs:
     dataset names, policy visibility, file counts and byte totals from
     ``os.stat`` — data files are never opened.
   * ``describe``     — schema + stats + policy for one URI (DESCRIBE).
-    Schemas come from sidecar metadata (``_schema.json``), static framing
-    rules (file-list directories, blob chunk streams), or a *bounded* header
-    sniff (first ``SNIFF_BYTES`` of a CSV/JSONL, the npy/npz array headers)
-    cached by ``(path, mtime, size)`` — never from streaming the data path.
+    Schemas and per-format stats come from the format adapter registry's
+    *bounded* metadata reads — sidecars (``_schema.json``, JSONL block
+    indexes), file headers (npy/npz, Parquet footers), container catalogs
+    (SQLite ``PRAGMA table_info``), or a capped row/line sample — cached by
+    ``(path, mtime, size)`` and never from streaming the data path.
 """
 
 from __future__ import annotations
@@ -65,9 +66,6 @@ class Dataset:
         if not (p == rootp or p.startswith(rootp + os.sep)):
             raise PermissionDenied(f"path escape blocked: {subpath!r}")
         return p
-
-
-SNIFF_BYTES = 64 * 1024  # bounded header read for schema sniffing
 
 
 STATS_TTL_S = 5.0  # dataset_stats walk cache (LIST hits every entry)
@@ -231,9 +229,9 @@ class Catalog:
         """Schema + stats + policy for a URI, without streaming any data.
 
         Schemas are resolved from metadata only: sidecar ``_schema.json``
-        (columnar datasets), static framing rules (file-list directories and
-        blob chunk streams), or a bounded header sniff for CSV/JSONL/NPY/NPZ
-        files (at most ``SNIFF_BYTES``, cached by path + mtime + size).
+        (columnar datasets), static framing rules (file-list directories),
+        or the file's format adapter (bounded header/sidecar/sample reads,
+        cached by path + mtime + size) — the data path is never streamed.
         """
         if not uri.segments:
             return {
@@ -263,9 +261,9 @@ class Catalog:
         if os.path.isdir(path):
             stats = self.dataset_stats(Dataset(ds.name, path))
             schema, rows = self._dir_schema(path)
-            from repro.server.datasource import columnar_part_count
+            from repro.server.datasource import part_count
 
-            parts = columnar_part_count(path)
+            parts = part_count(path)
             if parts is not None:
                 # partition-parallel eligibility: a remote coordinator reads
                 # the part count from DESCRIBE instead of walking the tree
@@ -273,7 +271,15 @@ class Catalog:
         else:
             st = os.stat(path)
             stats = {"n_files": 1, "bytes": st.st_size, "mtime": st.st_mtime}
-            schema, rows = self._sniff_schema(path)
+            schema, fmt_stats = self._sniff_schema(path)
+            rows = None
+            if fmt_stats:
+                # per-format adapter stats (format name, row counts, part /
+                # row-group / block counts, cheap column min-max)
+                fmt = dict(fmt_stats)
+                rows = fmt.pop("rows", None)
+                fmt.pop("bytes", None)  # os.stat already reported it
+                stats.update(fmt)
         if rows is not None:
             stats["rows"] = rows
         out["stats"] = stats
@@ -291,8 +297,6 @@ class Catalog:
             Field("content", dtypes.BINARY),
         ]
     )
-    _CHUNK_SCHEMA = Schema([Field("chunk", dtypes.BINARY), Field("offset", dtypes.INT64)])
-
     def _dir_schema(self, path: str):
         sidecar = os.path.join(path, "_schema.json")
         if os.path.exists(sidecar):
@@ -304,7 +308,9 @@ class Catalog:
         return self._FILELIST_SCHEMA, None
 
     def _sniff_schema(self, path: str):
-        """(Schema | None, rows | None) from at most SNIFF_BYTES of header."""
+        """(Schema | None, adapter stats | None) from the format adapter's
+        *bounded* metadata reads (headers, sidecars, a capped sample — never
+        the data path), cached by (path, mtime, size)."""
         try:
             st = os.stat(path)
         except OSError:
@@ -313,107 +319,25 @@ class Catalog:
         cached = self._schema_cache.get(path)
         if cached is not None and cached[0] == key:
             return cached[1], cached[2]
-        schema, rows = self._sniff_schema_uncached(path)
+        schema, fmt_stats = self._sniff_schema_uncached(path)
         with self._lock:
-            self._schema_cache[path] = (key, schema, rows)
-        return schema, rows
+            self._schema_cache[path] = (key, schema, fmt_stats)
+        return schema, fmt_stats
 
-    def _sniff_schema_uncached(self, path: str):
-        ext = os.path.splitext(path)[1].lower()
+    @staticmethod
+    def _sniff_schema_uncached(path: str):
+        from repro.server import adapters
+
         try:
-            if ext == ".csv":
-                return self._sniff_csv(path), None
-            if ext == ".jsonl":
-                return self._sniff_jsonl(path), None
-            if ext == ".npy":
-                return self._sniff_npy(path)
-            if ext == ".npz":
-                return self._sniff_npz(path)
-        except (OSError, ValueError, KeyError):
+            adapter = adapters.resolve(path)
+        except Exception:  # noqa: BLE001 - describe must not fail on odd files
             return None, None
-        return self._CHUNK_SCHEMA, None
-
-    @staticmethod
-    def _sniff_csv(path: str) -> Schema:
-        import io as _io
-
-        from repro.server.datasource import _infer_csv_schema
-
-        with open(path, newline="") as f:
-            head = f.read(SNIFF_BYTES)
-        lines = head.splitlines()
-        if not lines:
-            return Schema([])
-        import csv as _csv
-
-        reader = _csv.reader(_io.StringIO("\n".join(lines)))
-        names = next(reader)
-        probe = [r for r in reader if len(r) == len(names)]
-        # the last row may be cut mid-value — but only if the read actually
-        # hit the SNIFF_BYTES window; a short file ends where it ends
-        if probe and len(head) == SNIFF_BYTES and not head.endswith("\n"):
-            probe = probe[:-1]
-        return _infer_csv_schema(probe[:256], names)
-
-    @staticmethod
-    def _sniff_jsonl(path: str) -> Schema:
-        import json as _json
-
-        from repro.server.datasource import _JSON_DT
-
-        with open(path, "rb") as f:
-            first = f.readline(SNIFF_BYTES)
-        rec = _json.loads(first)
-        return Schema([Field(k, _JSON_DT.get(type(v), dtypes.STRING)) for k, v in rec.items()])
-
-    @staticmethod
-    def _sniff_npy(path: str):
-        with open(path, "rb") as f:
-            shape, dt = _read_npy_header(f)
-        base = dtypes.from_numpy(np.dtype(dt))
-        ncol = 1
-        if len(shape) > 1:
-            ncol = int(np.prod(shape[1:]))
-        if ncol > 1:
-            return Schema([Field(f"v{i}", base) for i in range(ncol)]), int(shape[0])
-        return Schema([Field("values", base)]), int(shape[0]) if shape else None
-
-    @staticmethod
-    def _sniff_npz(path: str):
-        """Member array headers only — the zip data blocks are never read."""
-        import zipfile
-
-        headers = {}
-        with zipfile.ZipFile(path) as z:
-            for member in z.namelist():
-                if not member.endswith(".npy"):
-                    continue
-                with z.open(member) as f:
-                    shape, dt = _read_npy_header(f)
-                headers[member[: -len(".npy")]] = (shape, np.dtype(dt))
-        fields, rows = [], None
-        for k in sorted(headers):
-            if k.endswith("__offsets") or k == "__nrows__":
-                continue
-            if k.endswith("__data") and f"{k[: -len('__data')]}__offsets" in headers:
-                base = k[: -len("__data")]
-                fields.append(Field(base, dtypes.BINARY))
-                rows = _min_rows(rows, int(headers[f"{base}__offsets"][0][0]) - 1)
-            else:
-                fields.append(Field(k, dtypes.from_numpy(headers[k][1])))
-                rows = _min_rows(rows, int(headers[k][0][0]) if headers[k][0] else 0)
-        return Schema(sorted(fields, key=lambda f: f.name)), rows
-
-
-def _min_rows(cur, new):
-    return new if cur is None else min(cur, new)
-
-
-def _read_npy_header(f):
-    """(shape, dtype) from an npy stream using only public numpy API."""
-    version = np.lib.format.read_magic(f)
-    if version == (1, 0):
-        shape, _fortran, dt = np.lib.format.read_array_header_1_0(f)
-    else:
-        shape, _fortran, dt = np.lib.format.read_array_header_2_0(f)
-    return shape, dt
+        try:
+            schema = adapter.schema()
+        except Exception:  # noqa: BLE001 - malformed source: schema unknown
+            schema = None
+        try:
+            fmt_stats = adapter.stats()
+        except Exception:  # noqa: BLE001 - stats are best-effort
+            fmt_stats = {"format": adapter.format}
+        return schema, fmt_stats

@@ -1,77 +1,68 @@
-"""Multimodal Data Source (paper §IV-A).
+"""Multimodal Data Source (paper §IV-A), dispatching through the format
+adapter registry (``repro.server.adapters``).
 
-Maps heterogeneous physical storage into logical SDFs:
+Every physical source — CSV/JSONL/NPZ/NPY files, SQLite/SDIF and Parquet
+containers, columnar datasets, File-List-Framed directories, raw blobs —
+is an adapter behind one ``Scan`` interface.  This module is the policy
+layer on top:
 
-  * structured files  — CSV, JSONL, NPZ/NPY columnar parts → rows/columns
-    become one SDF directly (memory-mapped where possible: ``np.load``
-    with ``mmap_mode`` / ``np.memmap`` for raw buffers).
-  * unstructured files — a directory maps via **File-List Framing**: file
-    metadata becomes standard columns and file *content* becomes a
-    Binary blob column.  The blob column is *expandable*: any row's content
-    can be re-opened as a new SDF (client-side drill-down, Fig. 1).
-
-Scan-level pushdown is native here: ``scan`` takes (columns, predicate) and
-  - prunes columns before reading them (a metadata-only listing never touches
-    file bytes — read amplification goes to ~0 for discovery queries),
-  - evaluates predicates on metadata columns *before* loading blob content,
-    so filtered-out files are never read (in-situ filtering, §VI-B).
-
-Column selection has two strictness levels: explicit user GET columns are
-**strict** (a typo raises ``SchemaError``), while optimizer pruning hints
-(``strict_columns=False``) are **advisory** — the optimizer computes required
-column sets structurally (without schemas), so a pruned set may legitimately
-name columns that only exist on the *other* side of a join, and the scan
-keeps the intersection.
+  * resolve the adapter and validate the request against its schema
+    (strict user columns vs advisory optimizer hints);
+  * split the predicate into the part the adapter evaluates natively
+    (compiled SQL, metadata-before-content filtering) and the **residual**
+    the stream is re-filtered with (adapters only promise *superset
+    semantics*: stats-based pruning may keep non-matching rows);
+  * hand the adapter the column set it must materialize (projected output
+    columns plus whatever the residual needs) when it supports native
+    projection;
+  * apply residual predicate + final projection to the stream.
 
 ``scan_bytes`` is the in-memory twin of ``scan_path`` for expandable blob
-columns (client-side ``open_blob``): structured payloads parse straight from
-the byte buffer, batch-by-batch, with no temp file spooling.
+columns (client-side ``open_blob``): structured payloads parse straight
+from the byte buffer, batch-by-batch, with no temp file spooling.
 """
 
 from __future__ import annotations
 
-import csv as _csv
 import io
-import json
 import os
-from collections import deque
-from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
-from repro.core import dtypes
-from repro.core.batch import Column, RecordBatch
 from repro.core.env import env_int
 from repro.core.errors import ResourceNotFound, SchemaError
 from repro.core.expr import Expr
-from repro.core.schema import Field, Schema
 from repro.core.sdf import StreamingDataFrame
+from repro.server import adapters
+from repro.server.adapters import (
+    DEFAULT_BATCH_ROWS,
+    DEFAULT_CHUNK_BYTES,
+    bytes_chunks_sdf,
+    csv_stream_sdf,
+    jsonl_stream_sdf,
+    npy_array_sdf,
+    npz_arrays_sdf,
+)
+from repro.server.adapters.columnar import columnar_parts, is_columnar_dataset
+from repro.server.adapters.jsonl import _JSON_DT  # noqa: F401 - compat re-export
+from repro.server.adapters.structured import infer_csv_schema as _infer_csv_schema  # noqa: F401 - compat
 
 __all__ = [
     "scan_path",
     "scan_bytes",
     "write_sdf_dataset",
     "columnar_part_count",
+    "part_count",
+    "source_stats",
     "DEFAULT_BATCH_ROWS",
     "STRUCTURED_EXTS",
 ]
 
-DEFAULT_BATCH_ROWS = 65536
-DEFAULT_CHUNK_BYTES = 4 << 20
 # validated read: a garbage DACP_SCAN_WORKERS warns and falls back instead
 # of crashing this module's import (the raw int() here used to do exactly that)
 DEFAULT_SCAN_WORKERS = env_int("DACP_SCAN_WORKERS")
 
 STRUCTURED_EXTS = {".csv", ".jsonl", ".npz", ".npy"}
-
-_META_FIELDS = [
-    Field("name", dtypes.STRING),
-    Field("path", dtypes.STRING),
-    Field("format", dtypes.STRING),
-    Field("size", dtypes.INT64),
-    Field("mtime", dtypes.FLOAT64),
-]
-_CONTENT_FIELD = Field("content", dtypes.BINARY)
 
 
 # ---------------------------------------------------------------------------
@@ -86,6 +77,7 @@ def scan_path(
     strict_columns: bool = True,
     scan_workers: int = DEFAULT_SCAN_WORKERS,
     part_range=None,
+    report: dict | None = None,
 ) -> StreamingDataFrame:
     """Open any path (file or directory) as an SDF with pushdown applied.
 
@@ -98,33 +90,75 @@ def scan_path(
     file-list blob content) with a bounded reader pool, emitting batches in
     the same order as the sequential scan.
 
-    ``part_range=(lo, hi)`` restricts a columnar-dataset scan to the sorted
-    part files ``parts[lo:hi]`` — the partition-parallel planner's split
-    unit.  Batches never span part files, so disjoint contiguous ranges
-    concatenated in order reproduce the full scan byte-identically.  Other
-    source kinds ignore it (the planner only splits columnar scans).
+    ``part_range=(lo, hi)`` restricts the scan to the adapter's split units
+    ``[lo, hi)`` (columnar part files, Parquet row groups, JSONL index
+    blocks, SQLite rowid windows).  Disjoint contiguous ranges concatenated
+    in order reproduce the full scan byte-identically.  Sources without
+    ``part_ranges`` capability ignore it.
+
+    ``report``, when given, is filled with the adapter's scan accounting
+    (regions skipped, rows/files read) — the benchmark harness reads it.
     """
     if not os.path.exists(path):
         raise ResourceNotFound(f"no such path: {path}")
-    if os.path.isdir(path):
-        if _is_columnar_dataset(path):
-            sdf = _scan_columnar_dataset(path, batch_rows, scan_workers, part_range=part_range)
-        else:
-            sdf = _scan_filelist(path, columns, predicate, batch_rows, strict_columns, scan_workers)
-            return sdf  # filelist applies pushdown internally
-    else:
-        ext = os.path.splitext(path)[1].lower()
-        if ext == ".csv":
-            sdf = _scan_csv(path, batch_rows)
-        elif ext == ".jsonl":
-            sdf = _scan_jsonl(path, batch_rows)
-        elif ext == ".npz":
-            sdf = _scan_npz(path, batch_rows)
-        elif ext == ".npy":
-            sdf = _scan_npy(path, batch_rows)
-        else:
-            sdf = _scan_blob(path, chunk_bytes)
-    return _apply_pushdown(sdf, columns, predicate, strict_columns)
+    adapter = adapters.resolve(path)
+    caps = adapter.capabilities()
+    schema = adapter.schema()
+
+    if predicate is not None:
+        missing = predicate.referenced_columns() - set(schema.names)
+        if missing:
+            raise SchemaError(f"predicate references missing columns {sorted(missing)}")
+    out_cols = list(columns) if columns is not None else None
+    if out_cols is not None:
+        have = set(schema.names)
+        unknown = [c for c in out_cols if c not in have]
+        if unknown and strict_columns:
+            raise SchemaError(f"no such columns {unknown} (have {schema.names})")
+        # advisory pruning: ignore hinted columns this source doesn't have
+        out_cols = [c for c in out_cols if c in have]
+
+    residual = adapter.residual_predicate(predicate) if predicate is not None else None
+
+    native_cols = None
+    if caps.column_projection and out_cols is not None:
+        # the adapter materializes the projection plus whatever the residual
+        # re-filter needs; the extra columns are dropped again below
+        need = set(out_cols) | (residual.referenced_columns() if residual is not None else set())
+        native_cols = [c for c in schema.names if c in need]
+
+    sdf = adapter.scan(
+        columns=native_cols,
+        predicate=predicate,
+        batch_rows=batch_rows,
+        chunk_bytes=chunk_bytes,
+        scan_workers=scan_workers,
+        part_range=part_range if caps.part_ranges else None,
+        report=report,
+    )
+    return _finalize(sdf, out_cols, residual)
+
+
+def _finalize(sdf: StreamingDataFrame, out_cols, residual: Expr | None) -> StreamingDataFrame:
+    """Residual re-filter + final projection on an adapter's stream."""
+    schema = sdf.schema
+    out_schema = schema.select(out_cols) if out_cols is not None else schema
+    if residual is None and (out_cols is None or list(out_cols) == list(schema.names)):
+        return sdf
+
+    def gen():
+        for b in sdf.iter_batches():
+            if residual is not None:
+                mask = np.asarray(residual.evaluate(b), bool)
+                if not mask.any():
+                    continue
+                if not mask.all():
+                    b = b.filter(mask)
+            if out_cols is not None:
+                b = b.select(out_cols)
+            yield b
+
+    return StreamingDataFrame(out_schema, gen)
 
 
 def scan_bytes(
@@ -144,36 +178,22 @@ def scan_bytes(
     ext = "." + fmt.lower().lstrip(".") if fmt else ""
     if ext == ".csv":
         text = data.decode()
-        sdf = _scan_csv_stream(lambda: io.StringIO(text, newline=""), batch_rows, "<memory>")
+        sdf = csv_stream_sdf(lambda: io.StringIO(text, newline=""), batch_rows, "<memory>")
     elif ext == ".jsonl":
-        sdf = _scan_jsonl_stream(lambda: io.BytesIO(data), batch_rows, "<memory>")
+        sdf = jsonl_stream_sdf(lambda: io.BytesIO(data), batch_rows, "<memory>")
     elif ext == ".npz":
         with np.load(io.BytesIO(data)) as z:
             arrays = {k: z[k] for k in z.files}
-        sdf = _npz_arrays_sdf(arrays, batch_rows)
+        sdf = npz_arrays_sdf(arrays, batch_rows)
     elif ext == ".npy":
-        sdf = _npy_array_sdf(np.load(io.BytesIO(data)), batch_rows)
+        sdf = npy_array_sdf(np.load(io.BytesIO(data)), batch_rows)
     else:
-        sdf = _bytes_chunks(data, chunk_bytes)
+        sdf = bytes_chunks_sdf(data, chunk_bytes)
     return _apply_pushdown(sdf, columns, predicate)
 
 
-def _bytes_chunks(data: bytes, chunk_bytes: int) -> StreamingDataFrame:
-    schema = Schema([Field("chunk", dtypes.BINARY), Field("offset", dtypes.INT64)])
-    view = memoryview(data)
-
-    def gen():
-        size = len(view)
-        for s in range(0, max(size, 1), chunk_bytes):
-            e = min(s + chunk_bytes, size)
-            yield RecordBatch.from_pydict({"chunk": [bytes(view[s:e])], "offset": [s]}, schema)
-            if size == 0:
-                break
-
-    return StreamingDataFrame(schema, gen)
-
-
 def _apply_pushdown(sdf: StreamingDataFrame, columns, predicate, strict_columns: bool = True) -> StreamingDataFrame:
+    """In-stream pushdown for sources with no adapter (in-memory payloads)."""
     schema = sdf.schema
     if predicate is not None:
         pred_cols = predicate.referenced_columns()
@@ -186,386 +206,55 @@ def _apply_pushdown(sdf: StreamingDataFrame, columns, predicate, strict_columns:
         unknown = [c for c in out_cols if c not in have]
         if unknown and strict_columns:
             raise SchemaError(f"no such columns {unknown} (have {schema.names})")
-        # advisory pruning: ignore hinted columns this source doesn't have
         out_cols = [c for c in out_cols if c in have]
-        out_schema = schema.select(out_cols)
-    else:
-        out_schema = schema
-
-    def gen():
-        for b in sdf.iter_batches():
-            if predicate is not None:
-                mask = np.asarray(predicate.evaluate(b), bool)
-                if not mask.any():
-                    continue
-                if not mask.all():
-                    b = b.filter(mask)
-            if out_cols is not None:
-                b = b.select(out_cols)
-            yield b
-
-    return StreamingDataFrame(out_schema, gen)
+    return _finalize(sdf, out_cols, predicate)
 
 
 # ---------------------------------------------------------------------------
-# structured sources
+# metadata entry points (no data bytes read)
 # ---------------------------------------------------------------------------
-def _infer_csv_schema(rows: list, names: list) -> Schema:
-    fields = []
-    cols = list(zip(*rows)) if rows else [[] for _ in names]
-    for name, vals in zip(names, cols):
-        dt = dtypes.INT64
-        for v in vals:
-            try:
-                int(v)
-            except ValueError:
-                dt = dtypes.FLOAT64
-                try:
-                    float(v)
-                except ValueError:
-                    dt = dtypes.STRING
-                    break
-        fields.append(Field(name, dt))
-    return Schema(fields)
+def part_count(path: str) -> int | None:
+    """The adapter's partition-parallel split-unit count for ``path``, or
+    None when the source is not part-splittable.  Metadata only — the
+    planner uses this for eligibility, and DESCRIBE reports it so remote
+    coordinators can decide without walking the tree."""
+    if not os.path.exists(path):
+        return None
+    adapter = adapters.resolve(path)
+    if not adapter.capabilities().part_ranges:
+        return None
+    try:
+        return adapter.part_count()
+    except Exception:  # noqa: BLE001 - stats must not break discovery
+        return None
 
 
-def _scan_csv_stream(opener, batch_rows: int, what: str) -> StreamingDataFrame:
-    """``opener`` returns a fresh text stream per iteration (file or memory)."""
-    with opener() as f:
-        reader = _csv.reader(f)
-        try:
-            names = next(reader)
-        except StopIteration:
-            raise SchemaError(f"empty csv {what}") from None
-        probe = []
-        for row in reader:
-            probe.append(row)
-            if len(probe) >= 256:
-                break
-    schema = _infer_csv_schema(probe, names)
-
-    def gen():
-        with opener() as f:
-            reader = _csv.reader(f)
-            next(reader)  # header
-            buf: list = []
-            for row in reader:
-                buf.append(row)
-                if len(buf) >= batch_rows:
-                    yield _rows_to_batch(schema, buf)
-                    buf = []
-            if buf:
-                yield _rows_to_batch(schema, buf)
-
-    return StreamingDataFrame(schema, gen)
-
-
-def _scan_csv(path: str, batch_rows: int) -> StreamingDataFrame:
-    return _scan_csv_stream(lambda: open(path, newline=""), batch_rows, path)
-
-
-def _rows_to_batch(schema: Schema, rows: list) -> RecordBatch:
-    cols = []
-    for i, f in enumerate(schema):
-        raw = [r[i] for r in rows]
-        if f.dtype is dtypes.STRING:
-            cols.append(Column.from_values(f.dtype, raw))
-        elif f.dtype.is_integer:
-            cols.append(Column.from_values(f.dtype, np.asarray(raw, np.int64)))
-        else:
-            cols.append(Column.from_values(f.dtype, np.asarray(raw, np.float64)))
-    return RecordBatch(schema, cols)
-
-
-_JSON_DT = {bool: dtypes.BOOL, int: dtypes.INT64, float: dtypes.FLOAT64, str: dtypes.STRING}
-
-
-def _scan_jsonl_stream(opener, batch_rows: int, what: str) -> StreamingDataFrame:
-    """``opener`` returns a fresh binary line stream per iteration."""
-    with opener() as f:
-        first = f.readline()
-    if not first.strip():
-        raise SchemaError(f"empty jsonl {what}")
-    rec = json.loads(first)
-    fields = []
-    for k, v in rec.items():
-        dt = _JSON_DT.get(type(v))
-        if dt is None:
-            dt = dtypes.STRING  # nested values are kept as their json text
-        fields.append(Field(k, dt))
-    schema = Schema(fields)
-
-    def coerce(v, dt):
-        if dt is dtypes.STRING and not isinstance(v, str):
-            return json.dumps(v)
-        if dt is dtypes.FLOAT64:
-            return float(v)
-        return v
-
-    def gen():
-        with opener() as f:
-            buf: dict = {k: [] for k in schema.names}
-            n = 0
-            for line in f:
-                if not line.strip():
-                    continue
-                r = json.loads(line)
-                for fld in schema:
-                    buf[fld.name].append(coerce(r.get(fld.name), fld.dtype))
-                n += 1
-                if n >= batch_rows:
-                    yield RecordBatch.from_pydict(buf, schema)
-                    buf = {k: [] for k in schema.names}
-                    n = 0
-            if n:
-                yield RecordBatch.from_pydict(buf, schema)
-
-    return StreamingDataFrame(schema, gen)
-
-
-def _scan_jsonl(path: str, batch_rows: int) -> StreamingDataFrame:
-    return _scan_jsonl_stream(lambda: open(path, "rb"), batch_rows, path)
-
-
-def _npz_schema(arrays: dict) -> Schema:
-    fields = []
-    for k in sorted(arrays):
-        if k.endswith("__offsets") or k == "__nrows__":
-            continue
-        if k.endswith("__data") and f"{k[: -len('__data')]}__offsets" in arrays:
-            base = k[: -len("__data")]
-            fields.append(Field(base, dtypes.BINARY))
-        else:
-            fields.append(Field(k, dtypes.from_numpy(arrays[k].dtype)))
-    return Schema(sorted(fields, key=lambda f: f.name))
-
-
-def _scan_npz(path: str, batch_rows: int) -> StreamingDataFrame:
-    with np.load(path, mmap_mode="r") as z:
-        arrays = {k: z[k] for k in z.files}
-    return _npz_arrays_sdf(arrays, batch_rows)
-
-
-def _npz_arrays_sdf(arrays: dict, batch_rows: int) -> StreamingDataFrame:
-    schema = _npz_schema(arrays)
-    n = None
-    for f in schema:
-        if f.dtype.is_varwidth:
-            n2 = len(arrays[f"{f.name}__offsets"]) - 1
-        else:
-            n2 = len(arrays[f.name])
-        n = n2 if n is None else min(n, n2)
-    n = n or 0
-
-    def make_col(f: Field, s: int, e: int) -> Column:
-        if f.dtype.is_varwidth:
-            off = arrays[f"{f.name}__offsets"].astype(np.int64)
-            data = arrays[f"{f.name}__data"].astype(np.uint8)
-            seg = off[s : e + 1]
-            return Column(f.dtype, offsets=seg - seg[0], data=data[seg[0] : seg[-1]])
-        return Column(f.dtype, values=np.ascontiguousarray(arrays[f.name][s:e]))
-
-    def gen():
-        for s in range(0, max(n, 1), batch_rows):
-            e = min(s + batch_rows, n)
-            if e <= s and n > 0:
-                break
-            yield RecordBatch(schema, [make_col(f, s, e) for f in schema])
-            if n == 0:
-                break
-
-    return StreamingDataFrame(schema, gen)
-
-
-def _scan_npy(path: str, batch_rows: int) -> StreamingDataFrame:
-    return _npy_array_sdf(np.load(path, mmap_mode="r"), batch_rows)
-
-
-def _npy_array_sdf(arr: np.ndarray, batch_rows: int) -> StreamingDataFrame:
-    flat = arr.reshape(arr.shape[0], -1) if arr.ndim > 1 else arr.reshape(-1, 1)
-    # N-d arrays frame as one column per trailing index ("v0", "v1", ...)
-    ncol = flat.shape[1]
-    dt = dtypes.from_numpy(arr.dtype)
-    schema = Schema([Field(f"v{i}", dt) for i in range(ncol)]) if ncol > 1 else Schema([Field("values", dt)])
-
-    def gen():
-        for s in range(0, len(flat), batch_rows):
-            seg = np.ascontiguousarray(flat[s : s + batch_rows])
-            cols = [Column(dt, values=np.ascontiguousarray(seg[:, i])) for i in range(ncol)]
-            yield RecordBatch(schema, cols)
-
-    return StreamingDataFrame(schema, gen)
-
-
-def _scan_blob(path: str, chunk_bytes: int) -> StreamingDataFrame:
-    """An unstructured file = stream of binary chunks (one column)."""
-    schema = Schema([Field("chunk", dtypes.BINARY), Field("offset", dtypes.INT64)])
-    size = os.path.getsize(path)
-
-    def gen():
-        mm = np.memmap(path, dtype=np.uint8, mode="r") if size else np.zeros(0, np.uint8)
-        for s in range(0, max(size, 1), chunk_bytes):
-            e = min(s + chunk_bytes, size)
-            chunk = bytes(mm[s:e]) if size else b""
-            yield RecordBatch.from_pydict({"chunk": [chunk], "offset": [s]}, schema)
-            if size == 0:
-                break
-
-    return StreamingDataFrame(schema, gen)
-
-
-# ---------------------------------------------------------------------------
-# file-list framing (unstructured directories)
-# ---------------------------------------------------------------------------
-def _list_files(root: str) -> list:
-    out = []
-    for dirpath, _dirnames, filenames in os.walk(root):
-        for fn in sorted(filenames):
-            if fn.startswith("_") and fn.endswith(".json"):
-                continue
-            p = os.path.join(dirpath, fn)
-            out.append(p)
-    out.sort()
-    return out
-
-
-def _read_file(p: str) -> bytes:
-    with open(p, "rb") as f:
-        return f.read()
-
-
-def _scan_filelist(
-    root: str,
-    columns,
-    predicate,
-    batch_rows: int,
-    strict_columns: bool = True,
-    scan_workers: int = DEFAULT_SCAN_WORKERS,
-) -> StreamingDataFrame:
-    want_content = columns is None or "content" in columns
-    fields = list(_META_FIELDS) + ([_CONTENT_FIELD] if want_content else [])
-    schema = Schema(fields)
-    if columns is not None:
-        have = {f.name for f in fields}
-        unknown = [c for c in columns if c not in have]
-        if unknown and strict_columns:
-            raise SchemaError(f"no such columns {unknown} (have {sorted(have)})")
-        columns = [c for c in columns if c in have]  # advisory pruning
-    out_schema = schema.select(columns) if columns is not None else schema
-    files = _list_files(root)
-    meta_rows = min(batch_rows, 1024)
-
-    def meta_batch(paths: list) -> RecordBatch:
-        return RecordBatch.from_pydict(
-            {
-                "name": [os.path.basename(p) for p in paths],
-                "path": [os.path.relpath(p, root) for p in paths],
-                "format": [os.path.splitext(p)[1].lstrip(".").lower() for p in paths],
-                "size": np.asarray([os.path.getsize(p) for p in paths], np.int64),
-                "mtime": np.asarray([os.path.getmtime(p) for p in paths], np.float64),
-            },
-            Schema(_META_FIELDS),
-        )
-
-    def gen():
-        pool = None
-        try:
-            for s in range(0, len(files), meta_rows):
-                paths = files[s : s + meta_rows]
-                mb = meta_batch(paths)
-                keep = np.ones(mb.num_rows, bool)
-                if predicate is not None:
-                    # in-situ: metadata predicate runs BEFORE any content read
-                    keep = np.asarray(predicate.evaluate(mb), bool)
-                    if not keep.any():
-                        continue
-                    mb = mb.filter(keep)
-                    paths = [p for p, k in zip(paths, keep) if k]
-                if want_content:
-                    if scan_workers > 1 and len(paths) > 1:
-                        if pool is None:  # one reader pool per scan, not per batch
-                            pool = ThreadPoolExecutor(max_workers=scan_workers)
-                        # parallel content reads; map() preserves path order
-                        blobs = list(pool.map(_read_file, paths))
-                    else:
-                        blobs = [_read_file(p) for p in paths]
-                    mb = mb.with_column(_CONTENT_FIELD, Column.from_values(dtypes.BINARY, blobs))
-                yield mb.select(out_schema.names)
-        finally:
-            if pool is not None:
-                pool.shutdown(wait=False)
-
-    return StreamingDataFrame(out_schema, gen)
-
-
-def _is_columnar_dataset(path: str) -> bool:
-    return os.path.exists(os.path.join(path, "_schema.json"))
+def source_stats(path: str) -> dict | None:
+    """The adapter's DESCRIBE stats for ``path`` (format, bytes, rows/parts
+    where cheap), or None when unresolvable."""
+    if not os.path.exists(path):
+        return None
+    adapter = adapters.resolve(path)
+    try:
+        return adapter.stats()
+    except Exception:  # noqa: BLE001 - stats must not break discovery
+        return {"format": adapter.format}
 
 
 def columnar_part_count(path: str) -> int | None:
-    """Number of part files in a columnar dataset directory, or None when
-    the path is not one.  Metadata only (``os.listdir``) — the planner uses
-    this to decide partition-parallel eligibility, and DESCRIBE reports it
-    so remote coordinators can decide without walking the tree."""
-    if not os.path.isdir(path) or not _is_columnar_dataset(path):
+    """Back-compat shim: part count for *columnar dataset* directories only
+    (pre-adapter callers).  New code should use :func:`part_count`."""
+    if not os.path.isdir(path) or not is_columnar_dataset(path):
         return None
-    return sum(1 for p in os.listdir(path) if p.startswith("part-") and p.endswith(".npz"))
-
-
-def _scan_columnar_dataset(
-    root: str, batch_rows: int, scan_workers: int = DEFAULT_SCAN_WORKERS, part_range=None
-) -> StreamingDataFrame:
-    with open(os.path.join(root, "_schema.json")) as f:
-        schema = Schema.from_json(json.load(f))
-    parts = sorted(p for p in os.listdir(root) if p.startswith("part-") and p.endswith(".npz"))
-    if part_range is not None:
-        lo, hi = int(part_range[0]), int(part_range[1])
-        parts = parts[lo:hi]
-
-    def _cast(batch: RecordBatch) -> RecordBatch:
-        # npz inference loses STRING-vs-BINARY and column order; restore both
-        cols = []
-        for f in schema:
-            c = batch.column(f.name)
-            if f.dtype.is_varwidth and c.dtype is not f.dtype:
-                c = Column(f.dtype, offsets=c.offsets, data=c.data, validity=c.validity)
-            cols.append(c)
-        return RecordBatch(schema, cols)
-
-    def _load(p: str) -> dict:
-        with np.load(os.path.join(root, p), mmap_mode="r") as z:
-            return {k: z[k] for k in z.files}
-
-    def gen():
-        if scan_workers <= 1 or len(parts) <= 1:
-            for p in parts:
-                for b in _npz_arrays_sdf(_load(p), batch_rows).iter_batches():
-                    yield _cast(b)
-            return
-        # bounded read-ahead: up to scan_workers part files decode in
-        # background threads while earlier parts stream out, in part order
-        with ThreadPoolExecutor(max_workers=scan_workers) as pool:
-            pending: deque = deque()
-            it = iter(parts)
-            for p in it:
-                pending.append(pool.submit(_load, p))
-                if len(pending) >= scan_workers:
-                    break
-            while pending:
-                arrays = pending.popleft().result()
-                nxt = next(it, None)
-                if nxt is not None:
-                    pending.append(pool.submit(_load, nxt))
-                for b in _npz_arrays_sdf(arrays, batch_rows).iter_batches():
-                    yield _cast(b)
-
-    return StreamingDataFrame(schema, gen)
+    return len(columnar_parts(path))
 
 
 # ---------------------------------------------------------------------------
 # PUT persistence: SDF -> columnar part files (round-trips via scan_path)
 # ---------------------------------------------------------------------------
 def write_sdf_dataset(root: str, sdf: StreamingDataFrame, rows_per_part: int = 1 << 20) -> int:
+    import json
+
     os.makedirs(root, exist_ok=True)
     tmp_schema = os.path.join(root, "_schema.json.tmp")
     with open(tmp_schema, "w") as f:

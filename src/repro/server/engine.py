@@ -18,6 +18,7 @@ Responsibilities:
 
 from __future__ import annotations
 
+import os
 import time
 
 from repro.core.dag import Dag, Node
@@ -143,13 +144,23 @@ class SDFEngine:
         if uri.segments and uri.segments[0] == ".flow":
             return None
         try:
-            ds, _path = self.catalog.resolve_uri(uri)
+            ds, path = self.catalog.resolve_uri(uri)
         except ResourceNotFound:
             return None
         if ds is None:
             return None  # discovery root: contents change with the catalog
         stats = self.catalog.dataset_stats(ds)
-        return {"n_files": stats.get("n_files"), "bytes": stats.get("bytes"), "mtime": stats.get("mtime")}
+        out = {"n_files": stats.get("n_files"), "bytes": stats.get("bytes"), "mtime": stats.get("mtime")}
+        try:
+            if path and os.path.exists(path):
+                from repro.server import adapters
+
+                # per-source adapter stamp: st_mtime_ns catches same-size
+                # rewrites that the dataset-level float-seconds mtime misses
+                out["source"] = adapters.resolve(path).version()
+        except OSError:
+            pass
+        return out
 
     def _remote(self, node: Node) -> StreamingDataFrame:
         if self.remote_pull is None:

@@ -54,7 +54,8 @@ from repro.core.pushdown import optimize
 from repro.core.tokens import TokenAuthority
 from repro.core.uri import parse as parse_uri
 from repro.server.catalog import Catalog
-from repro.server.datasource import columnar_part_count, write_sdf_dataset
+from repro.server.datasource import part_count as source_part_count
+from repro.server.datasource import write_sdf_dataset
 from repro.server.engine import SDFEngine
 from repro.server.mesh import MeshRegistry
 from repro.server.plancache import fingerprint as plan_fingerprint
@@ -453,9 +454,11 @@ class FairdServer:
         return sched.run(the_plan, stats=stats), sched
 
     def _part_count(self, uri_str: str) -> int | None:
-        """Part count of a columnar dataset for partition-parallel
-        eligibility: local datasets via the catalog path, peer datasets via
-        the mesh's cached federated DESCRIBE; None = ineligible."""
+        """Split-unit count of a part-splittable source (columnar dataset
+        parts, Parquet row groups, JSONL index blocks, SQLite rowid windows)
+        for partition-parallel eligibility: local sources via the format
+        adapter, peer datasets via the mesh's cached federated DESCRIBE;
+        None = ineligible."""
         try:
             uri = parse_uri(uri_str)
         except Exception:  # noqa: BLE001 - the plan will surface the bad uri itself
@@ -467,7 +470,7 @@ class FairdServer:
                 _ds, path = self.catalog.resolve_uri(uri)
             except ResourceNotFound:
                 return None
-            return columnar_part_count(path) if path else None
+            return source_part_count(path) if path else None
         if self.mesh is not None and uri.authority in self.mesh.peers:
             try:
                 d = self.mesh.federated_describe(uri_str, uri.authority)

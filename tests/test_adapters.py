@@ -1,0 +1,443 @@
+"""Format-adapter conformance battery + JSONL schema-inference regressions.
+
+The battery runs every registered adapter through the same contract checks:
+
+  * scan-with-pushdown is byte-identical to scan-then-filter (superset
+    semantics + residual re-filter must lose/keep nothing);
+  * disjoint ``part_range`` unions concatenate byte-identically to the
+    full scan (the partition-parallel planner's merge contract);
+  * strict vs advisory column semantics;
+  * ``version()`` changes whenever the source bytes change (plan-cache
+    fingerprint invalidation).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sqlite3
+
+import numpy as np
+import pytest
+
+from repro.core import col
+from repro.core.batch import RecordBatch
+from repro.core.errors import SchemaError
+from repro.core.sdf import StreamingDataFrame
+from repro.server import adapters
+from repro.server.adapters import HAVE_PYARROW
+from repro.server.datasource import scan_path, write_sdf_dataset
+
+N = 500
+
+
+# ---------------------------------------------------------------------------
+# source builders (one per adapter)
+# ---------------------------------------------------------------------------
+def _append_bytes(path):
+    with open(path, "ab") as f:
+        f.write(b"x" * 64)
+
+
+def make_csv(root):
+    path = os.path.join(root, "t.csv")
+    with open(path, "w") as f:
+        f.write("id,score,tag\n")
+        for i in range(N):
+            f.write(f"{i},{i * 0.5},t{i % 5}\n")
+    return path
+
+
+def mutate_csv(path):
+    with open(path, "a") as f:
+        f.write(f"{N},{N * 0.5},t0\n")
+
+
+def make_jsonl(root):
+    path = os.path.join(root, "t.jsonl")
+    with open(path, "w") as f:
+        for i in range(N):
+            f.write(json.dumps({"id": i, "value": i * 0.5, "tag": f"t{i % 5}"}) + "\n")
+    return path
+
+
+def mutate_jsonl(path):
+    with open(path, "a") as f:
+        f.write(json.dumps({"id": N, "value": 0.0, "tag": "t0"}) + "\n")
+
+
+def make_npz(root):
+    path = os.path.join(root, "t.npz")
+    np.savez(path, a=np.arange(N, dtype=np.int64), b=np.arange(N, dtype=np.float64) * 0.5)
+    return path
+
+
+def make_npy(root):
+    path = os.path.join(root, "t.npy")
+    np.save(path, np.arange(N, dtype=np.float64) * 0.25)
+    return path
+
+
+def make_sqlite(root):
+    path = os.path.join(root, "t.sqlite")
+    with sqlite3.connect(path) as conn:
+        conn.execute("CREATE TABLE measurements (id INTEGER NOT NULL, value REAL, tag TEXT)")
+        conn.executemany(
+            "INSERT INTO measurements VALUES (?, ?, ?)",
+            [(i, i * 0.5, f"t{i % 5}") for i in range(N)],
+        )
+    conn.close()
+    return path
+
+
+def mutate_sqlite(path):
+    with sqlite3.connect(path) as conn:
+        conn.executemany("INSERT INTO measurements VALUES (?, ?, ?)", [(N + i, 0.0, "t0") for i in range(200)])
+    conn.close()
+
+
+def make_parquet(root):
+    import pyarrow as pa
+    import pyarrow.parquet as pq
+
+    path = os.path.join(root, "t.parquet")
+    table = pa.table(
+        {
+            "id": np.arange(N, dtype=np.int64),
+            "value": np.arange(N, dtype=np.float64) * 0.5,
+            "tag": [f"t{i % 5}" for i in range(N)],
+        }
+    )
+    pq.write_table(table, path, row_group_size=100)
+    return path
+
+
+def mutate_parquet(path):
+    import pyarrow as pa
+    import pyarrow.parquet as pq
+
+    pq.write_table(pa.table({"id": np.arange(N + 1, dtype=np.int64)}), path, row_group_size=100)
+
+
+def make_columnar(root):
+    path = os.path.join(root, "cds")
+    batches = [
+        RecordBatch.from_pydict(
+            {
+                "id": np.arange(s, s + 100, dtype=np.int64),
+                "tag": [f"t{i % 5}" for i in range(s, s + 100)],
+            }
+        )
+        for s in range(0, N, 100)
+    ]
+    write_sdf_dataset(path, StreamingDataFrame.from_batches(batches))
+    return path
+
+
+def mutate_columnar(path):
+    extra = RecordBatch.from_pydict({"id": np.arange(100, dtype=np.int64), "tag": ["t0"] * 100})
+    arrays = {
+        "id": extra.column("id").values,
+        "tag__offsets": extra.column("tag").offsets,
+        "tag__data": extra.column("tag").data,
+    }
+    np.savez(os.path.join(path, "part-00099.npz"), **arrays)
+
+
+def make_filelist(root):
+    path = os.path.join(root, "files")
+    os.makedirs(path)
+    rng = np.random.default_rng(7)
+    for i in range(20):
+        with open(os.path.join(path, f"f{i:02d}.bin"), "wb") as f:
+            f.write(rng.integers(0, 256, 100 + i * 10, dtype=np.uint8).tobytes())
+    return path
+
+
+def mutate_filelist(path):
+    with open(os.path.join(path, "f99.bin"), "wb") as f:
+        f.write(b"new")
+
+
+def make_blob(root):
+    path = os.path.join(root, "t.bin")
+    with open(path, "wb") as f:
+        f.write(np.random.default_rng(3).integers(0, 256, 10_000, dtype=np.uint8).tobytes())
+    return path
+
+
+_pyarrow = pytest.mark.skipif(not HAVE_PYARROW, reason="pyarrow not installed")
+
+# (name, build, mutate, predicate, columns)
+CASES = [
+    pytest.param("csv", make_csv, mutate_csv, col("id") >= 250, ["id", "tag"], id="csv"),
+    pytest.param("jsonl", make_jsonl, mutate_jsonl, col("id") >= 250, ["id", "tag"], id="jsonl"),
+    pytest.param("npz", make_npz, _append_bytes, col("a") < 50, ["a"], id="npz"),
+    pytest.param("npy", make_npy, _append_bytes, col("values") > 0.5, ["values"], id="npy"),
+    pytest.param(
+        "sqlite",
+        make_sqlite,
+        mutate_sqlite,
+        (col("id") >= 250) & (col("tag") == "t1"),
+        ["id", "value"],
+        id="sqlite",
+    ),
+    pytest.param(
+        "parquet", make_parquet, mutate_parquet, col("id") < 100, ["id", "tag"], marks=_pyarrow, id="parquet"
+    ),
+    pytest.param("columnar", make_columnar, mutate_columnar, col("id") >= 100, ["id"], id="columnar"),
+    pytest.param("filelist", make_filelist, mutate_filelist, col("size") > 150, ["name", "size"], id="filelist"),
+    pytest.param("blob", make_blob, _append_bytes, col("offset") >= 0, ["chunk"], id="blob"),
+]
+
+# part-splittable cases: (name, build, predicate, env knob overrides)
+PART_CASES = [
+    pytest.param("columnar", make_columnar, None, {}, id="columnar"),
+    pytest.param("sqlite", make_sqlite, col("id") >= 123, {"DACP_SQLITE_PART_ROWS": "100"}, id="sqlite"),
+    pytest.param(
+        "parquet", make_parquet, col("id") < 321, {}, marks=_pyarrow, id="parquet"
+    ),
+    pytest.param("jsonl", make_jsonl, col("id") >= 123, {"DACP_JSONL_BLOCK_ROWS": "100"}, id="jsonl"),
+]
+
+
+def rows_of(sdf) -> list:
+    out = []
+    for b in sdf.iter_batches():
+        out.extend(b.iter_rows())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# conformance battery
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name,build,mutate,pred,cols", CASES)
+def test_registry_resolves_expected_format(tmp_path, name, build, mutate, pred, cols):
+    path = build(str(tmp_path))
+    assert adapters.resolve(path).format == name
+
+
+@pytest.mark.parametrize("name,build,mutate,pred,cols", CASES)
+def test_pushdown_byte_identical_to_scan_then_filter(tmp_path, name, build, mutate, pred, cols):
+    path = build(str(tmp_path))
+    # reference: full scan, then filter + project on the collected batch
+    full = scan_path(path).collect()
+    mask = np.asarray(pred.evaluate(full), bool)
+    expected = [{k: r[k] for k in cols} for r in full.filter(mask).iter_rows()]
+    # pushdown-on: the adapter may evaluate/prune natively
+    got = rows_of(scan_path(path, columns=cols, predicate=pred))
+    assert got == expected
+
+
+@pytest.mark.parametrize("name,build,pred,env", PART_CASES)
+def test_part_range_disjoint_union_byte_identity(tmp_path, monkeypatch, name, build, pred, env):
+    for k, v in env.items():
+        monkeypatch.setenv(k, v)
+    path = build(str(tmp_path))
+    full = rows_of(scan_path(path, predicate=pred))
+    if name == "jsonl":
+        scan_path(path).collect()  # first scan materializes the sidecar index
+    adapter = adapters.resolve(path)
+    assert adapter.capabilities().part_ranges
+    n = adapter.part_count()
+    assert n is not None and n > 1
+    pieces = []
+    for i in range(n):
+        pieces.extend(rows_of(scan_path(path, predicate=pred, part_range=(i, i + 1))))
+    assert pieces == full
+
+
+@pytest.mark.parametrize("name,build,mutate,pred,cols", CASES)
+def test_strict_vs_advisory_columns(tmp_path, name, build, mutate, pred, cols):
+    path = build(str(tmp_path))
+    with pytest.raises(SchemaError):
+        scan_path(path, columns=cols + ["no_such_column__"], strict_columns=True)
+    sdf = scan_path(path, columns=cols + ["no_such_column__"], strict_columns=False)
+    assert sdf.schema.names == cols
+
+
+@pytest.mark.parametrize("name,build,mutate,pred,cols", CASES)
+def test_version_changes_on_mutation(tmp_path, name, build, mutate, pred, cols):
+    path = build(str(tmp_path))
+    before = adapters.resolve(path).version()
+    mutate(path)
+    after = adapters.resolve(path).version()
+    assert before != after
+
+
+# ---------------------------------------------------------------------------
+# JSONL inference regressions (the two seed failure shapes)
+# ---------------------------------------------------------------------------
+def _write_jsonl(path, records):
+    with open(path, "w") as f:
+        for r in records:
+            f.write(json.dumps(r) + "\n")
+
+
+def test_jsonl_fields_in_later_lines_are_kept(tmp_path):
+    # seed scanner let the FIRST record define the schema: `b` was dropped
+    path = str(tmp_path / "late.jsonl")
+    _write_jsonl(path, [{"a": 1}] + [{"a": i, "b": f"s{i}"} for i in range(2, 6)])
+    batch = scan_path(path).collect()
+    assert batch.schema.names == ["a", "b"]
+    vals = batch.column("b").to_pylist()
+    assert vals[0] is None and vals[1:] == ["s2", "s3", "s4", "s5"]
+
+
+def test_jsonl_missing_int_becomes_masked_not_crash(tmp_path):
+    # seed scanner coerced None into the int column builder and crashed
+    path = str(tmp_path / "holes.jsonl")
+    _write_jsonl(path, [{"n": 1, "s": "x"}, {"s": "y"}, {"n": 3, "s": "z"}, {"n": None, "s": "w"}])
+    batch = scan_path(path).collect()
+    assert batch.column("n").to_pylist() == [1, None, 3, None]
+    # masked rows carry the fill value under the hood but compare as absent
+    assert batch.column("n").values.tolist() == [1, 0, 3, 0]
+
+
+def test_jsonl_conflicting_numeric_dtypes_widen(tmp_path):
+    from repro.core import dtypes
+
+    path = str(tmp_path / "widen.jsonl")
+    _write_jsonl(path, [{"a": 1, "b": True, "c": 1}, {"a": 2.5, "b": 3, "c": "x"}])
+    schema = scan_path(path).schema
+    assert schema.dtype("a") is dtypes.FLOAT64  # int + float
+    assert schema.dtype("b") is dtypes.INT64  # bool + int
+    assert schema.dtype("c") is dtypes.STRING  # mixed with string
+    batch = scan_path(path).collect()
+    assert batch.column("a").to_pylist() == [1.0, 2.5]
+    assert batch.column("b").to_pylist() == [1, 3]
+    assert batch.column("c").to_pylist() == ["1", "x"]
+
+
+def test_jsonl_sniff_window_is_env_tunable(tmp_path, monkeypatch):
+    # with the index off and a 1-line window, inference degrades to the seed
+    # behavior — documents what DACP_JSONL_SNIFF_LINES buys
+    monkeypatch.setenv("DACP_JSONL_INDEX", "0")
+    monkeypatch.setenv("DACP_JSONL_SNIFF_LINES", "1")
+    path = str(tmp_path / "window.jsonl")
+    _write_jsonl(path, [{"a": 1}, {"a": 2, "b": "late"}])
+    assert scan_path(path).schema.names == ["a"]
+    monkeypatch.setenv("DACP_JSONL_SNIFF_LINES", "2")
+    assert scan_path(path).schema.names == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# native pushdown mechanics
+# ---------------------------------------------------------------------------
+def test_sqlite_compiled_predicate_reduces_rows_fetched(tmp_path):
+    path = make_sqlite(str(tmp_path))
+    adapter = adapters.resolve(path)
+    pred = (col("id") >= 450) & (col("tag") == "t1")
+    # fully compilable: nothing residual, SQLite evaluates it exactly
+    assert adapter.residual_predicate(pred) is None
+    report = {}
+    got = rows_of(scan_path(path, columns=["id"], predicate=pred, report=report))
+    assert report["pushed_sql"] is not None
+    assert 0 < report["rows_emitted"] < report["rows_total"]
+    assert [r["id"] for r in got] == [i for i in range(450, N) if i % 5 == 1]
+
+
+def test_sqlite_null_columns_gate_compilation(tmp_path):
+    path = os.path.join(str(tmp_path), "nulls.sqlite")
+    with sqlite3.connect(path) as conn:
+        conn.execute("CREATE TABLE t (id INTEGER, maybe INTEGER)")
+        conn.executemany("INSERT INTO t VALUES (?, ?)", [(i, None if i % 3 else i) for i in range(30)])
+    conn.close()
+    adapter = adapters.resolve(path)
+    # `maybe` has NULLs: SQL three-valued logic could diverge from the SDF's
+    # fill-value semantics, so that conjunct must stay residual
+    pred = (col("id") >= 10) & (col("maybe") < 5)
+    residual = adapter.residual_predicate(pred)
+    assert residual is not None and residual.referenced_columns() == {"maybe"}
+    # end-to-end result still matches scan-then-filter exactly
+    full = scan_path(path).collect()
+    mask = np.asarray(pred.evaluate(full), bool)
+    assert rows_of(scan_path(path, predicate=pred)) == list(full.filter(mask).iter_rows())
+
+
+def test_jsonl_block_skipping_reads_fewer_blocks(tmp_path, monkeypatch):
+    monkeypatch.setenv("DACP_JSONL_BLOCK_ROWS", "50")
+    path = make_jsonl(str(tmp_path))
+    scan_path(path).collect()  # build the sidecar index
+    assert os.path.exists(os.path.join(str(tmp_path), "_t.jsonl.zdx.json"))
+    report = {}
+    got = rows_of(scan_path(path, predicate=col("id") >= 450, report=report))
+    assert report["blocks_read"] < report["blocks_total"]
+    assert [r["id"] for r in got] == list(range(450, N))
+
+
+def test_jsonl_index_is_invisible_to_filelist_framing(tmp_path, monkeypatch):
+    monkeypatch.setenv("DACP_JSONL_BLOCK_ROWS", "50")
+    root = str(tmp_path)
+    path = make_jsonl(root)
+    scan_path(path).collect()  # writes _t.jsonl.zdx.json next to the data
+    names = [r["name"] for r in rows_of(scan_path(root, columns=["name"]))]
+    assert names == ["t.jsonl"]
+
+
+@_pyarrow
+def test_parquet_rowgroup_pruning_reads_fewer_groups(tmp_path):
+    path = make_parquet(str(tmp_path))
+    report = {}
+    got = rows_of(scan_path(path, columns=["id"], predicate=col("id") < 100, report=report))
+    assert report["row_groups_total"] == 5
+    assert report["row_groups_read"] == 1
+    assert [r["id"] for r in got] == list(range(100))
+
+
+@_pyarrow
+def test_parquet_nulls_become_validity_masks(tmp_path):
+    import pyarrow as pa
+    import pyarrow.parquet as pq
+
+    path = os.path.join(str(tmp_path), "nulls.parquet")
+    pq.write_table(pa.table({"x": [1, None, 3], "s": ["a", None, "c"]}), path)
+    batch = scan_path(path).collect()
+    assert batch.column("x").to_pylist() == [1, None, 3]
+    assert batch.column("s").to_pylist() == ["a", None, "c"]
+
+
+@pytest.mark.skipif(HAVE_PYARROW, reason="exercises the degraded no-pyarrow path")
+def test_parquet_degrades_to_blob_without_pyarrow(tmp_path):
+    path = os.path.join(str(tmp_path), "t.parquet")
+    with open(path, "wb") as f:
+        f.write(b"PAR1notreallyparquet")
+    adapter = adapters.resolve(path)
+    assert adapter.format == "blob"
+    assert scan_path(path).schema.names == ["chunk", "offset"]
+
+
+def test_sqlite_detected_by_magic_without_extension(tmp_path):
+    src = make_sqlite(str(tmp_path))
+    path = os.path.join(str(tmp_path), "container.dat")
+    os.rename(src, path)
+    assert adapters.resolve(path).format == "sqlite"
+
+
+# ---------------------------------------------------------------------------
+# DESCRIBE integration
+# ---------------------------------------------------------------------------
+def test_describe_reports_adapter_stats(tmp_path):
+    from repro.core.uri import parse
+    from repro.server.catalog import Catalog
+
+    root = str(tmp_path / "d")
+    os.makedirs(root)
+    make_sqlite(root)
+    cat = Catalog()
+    cat.register_path("db", root)
+    d = cat.describe(parse("dacp://h:1/db/t.sqlite"))
+    assert d["stats"]["format"] == "sqlite"
+    assert d["stats"]["rows"] == N
+    assert d["stats"]["table"] == "measurements"
+    assert d["stats"]["columns"]["id"]["max"] == N - 1
+    names = [f["name"] for f in d["schema"]]
+    assert names == ["id", "value", "tag"]
+
+
+def test_source_version_feeds_plan_fingerprints(tmp_path):
+    path = make_csv(str(tmp_path))
+    v1 = adapters.resolve(path).version()
+    assert set(v1) == {"size", "mtime_ns"}
+    mutate_csv(path)
+    assert adapters.resolve(path).version() != v1

@@ -349,6 +349,53 @@ def test_resource_negatives(tmp_path):
     assert _live(project, "resource") == []
 
 
+def test_resource_sqlite_and_parquet_ctors(tmp_path):
+    # seeded violations: adapter-style db/reader handles with no release path
+    project, _ = _analyze(tmp_path, {"dbleak.py": """
+        import sqlite3
+        import pyarrow.parquet as pq
+
+        def leak_conn(path):
+            conn = sqlite3.connect(path)
+            cur = conn.execute("SELECT 1")
+            print(cur.fetchone())
+
+        def leak_reader(path):
+            pf = pq.ParquetFile(path)
+            n = pf.metadata.num_rows
+            print(n)
+    """})
+    msgs = [f.message for f in _live(project, "resource")]
+    assert any("sqlite3.connect" in m and "`conn`" in m for m in msgs), msgs
+    assert any("ParquetFile" in m and "`pf`" in m for m in msgs), msgs
+
+
+def test_resource_sqlite_negatives(tmp_path):
+    project, _ = _analyze(tmp_path, {"dbok.py": """
+        import sqlite3
+        from contextlib import closing
+
+        def closing_wrapper(path):
+            with closing(sqlite3.connect(path)) as conn:
+                return conn.execute("SELECT 1").fetchone()
+
+        def finally_close(path):
+            conn = sqlite3.connect(path)
+            try:
+                return conn.execute("SELECT 1").fetchone()
+            finally:
+                conn.close()
+
+        def factory(path):
+            return sqlite3.connect(path)
+
+        def not_a_db(sock, addr):
+            # a bare "connect" entry would flag this socket call
+            sock.connect(addr)
+    """})
+    assert _live(project, "resource") == []
+
+
 def test_resource_thread_daemon_rule(tmp_path):
     project, _ = _analyze(tmp_path, {"thr.py": """
         import threading

@@ -19,7 +19,9 @@ import ast
 from .core import FunctionInfo, Project, _expr_text
 from .lockorder import _walk_no_defs
 
-# constructor name -> release method
+# constructor name -> release method.  Dotted keys ("sqlite3.connect") match
+# only that attribute chain — a bare "connect" entry would false-positive on
+# every socket.connect() call site.
 RESOURCE_CTORS = {
     "open": "close",
     "SpillFile": "close",
@@ -28,6 +30,9 @@ RESOURCE_CTORS = {
     "NamedTemporaryFile": "close",
     "TemporaryFile": "close",
     "socket": "close",
+    "sqlite3.connect": "close",  # adapter db handles: closing()/finally-close
+    "ParquetFile": "close",  # pyarrow readers hold the file open
+    "ZipFile": "close",
 }
 
 
@@ -36,6 +41,9 @@ def _ctor_name(call: ast.Call) -> str | None:
     if isinstance(f, ast.Name):
         return f.id if f.id in RESOURCE_CTORS else None
     if isinstance(f, ast.Attribute):
+        dotted = _expr_text(f)
+        if dotted in RESOURCE_CTORS:
+            return dotted
         return f.attr if f.attr in RESOURCE_CTORS else None
     return None
 
